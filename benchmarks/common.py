@@ -1,0 +1,62 @@
+"""Shared bench plumbing: FSDP-workload capture + graph caching.
+
+Each bench module is run in its own process (benchmarks.run spawns them) so
+it can set XLA_FLAGS before importing jax.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+os.makedirs(ART, exist_ok=True)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def fsdp_layer_stack_capture(n_layers: int, d_model: int, d_ff: int,
+                             batch_tokens: int, ranks: int, cache_tag: str):
+    """Capture an FSDP transformer-MLP-stack train step on `ranks` fake
+    devices (weights sharded over data = the paper's SS6.1 workload) and
+    return the Chakra graph.  Cached on disk by tag."""
+    from repro.core import chakra
+    path = os.path.join(ART, f"graph_{cache_tag}.json")
+    if os.path.exists(path):
+        return chakra.Graph.load(path)
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import capture_step
+    from repro.parallel.mesh import make_mesh
+
+    mesh = make_mesh((ranks,), ("data",))
+
+    def step(stack, x):
+        def body(h, w):
+            w1, w2 = w
+            h = h + jax.nn.silu(h @ w1) @ w2
+            return h, None
+        h, _ = jax.lax.scan(body, x, stack)
+        return jnp.mean(h.astype(jnp.float32) ** 2)
+
+    g = jax.value_and_grad(step)
+    ss = (jax.ShapeDtypeStruct((n_layers, d_model, d_ff), jnp.bfloat16),
+          jax.ShapeDtypeStruct((n_layers, d_ff, d_model), jnp.bfloat16))
+    xs = jax.ShapeDtypeStruct((batch_tokens, d_model), jnp.bfloat16)
+    sh = ((NamedSharding(mesh, P(None, "data", None)),
+           NamedSharding(mesh, P(None, "data", None))),
+          NamedSharding(mesh, P("data", None)))
+    cap = capture_step(g, (ss, xs), sh, mesh,
+                       meta={"tag": cache_tag, "ranks": ranks})
+    cap.graph.save(path)
+    return cap.graph
+
+
+# model-size presets for the paper's case studies (Llama-8B / 70B analogues)
+PRESET_8B = dict(n_layers=32, d_model=4096, d_ff=14336)
+PRESET_70B = dict(n_layers=80, d_model=8192, d_ff=28672)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}")

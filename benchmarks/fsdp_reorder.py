@@ -1,0 +1,74 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=64")
+"""Paper Fig 9: FSDP AllGather reordering — duration/memory tradeoff across
+model size and parallelization degree.
+
+For each (model size, ranks) we capture ONE workload graph (true data deps),
+then apply the two schedules as graph passes:
+  sync    = original FSDP (AllGather serialized after previous compute)
+  reorder = SimpleFSDP prefetch (AllGathers hoisted k layers early)
+and report duration reduction % vs memory increase % from the simulator.
+Paper's claims to reproduce: large benefit at small-model/high-rank (50%
+at 8B x 64), small benefit at large-model (7% at 70B x 8), always at a
+modest memory cost.
+"""
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import (PRESET_70B, PRESET_8B, emit,
+                               fsdp_layer_stack_capture)  # noqa: E402
+
+
+def run_case(tag, preset, ranks, tokens_per_rank=4096):
+    from repro.configs.base import SystemConfig
+    from repro.core import passes
+    from repro.core.costmodel import build_topology, simulate
+
+    g = fsdp_layer_stack_capture(
+        n_layers=preset["n_layers"], d_model=preset["d_model"],
+        d_ff=preset["d_ff"], batch_tokens=tokens_per_rank * ranks,
+        ranks=ranks, cache_tag=f"{tag}_r{ranks}")
+    # the paper's cluster: H100 nodes over one 100 Gbps IB HCA per node
+    sysc = SystemConfig(chips=ranks, topology="switch", link_bw=12.5e9)
+    topo = build_topology(sysc, ranks)
+    g_sync = passes.inject_fsdp_sync(g)
+    r_sync = simulate(g_sync, sysc, topo)
+    out = {}
+    for pf, label in ((2, "reorder"), (10 ** 6, "full_prefetch")):
+        g_re = passes.reorder_prefetch(g_sync, prefetch=pf)
+        r_re = simulate(g_re, sysc, topo)
+        dur_red = (r_sync.total_time - r_re.total_time) \
+            / r_sync.total_time * 100
+        mem_inc = (r_re.peak_bytes - r_sync.peak_bytes) / max(
+            r_sync.peak_bytes, 1.0) * 100
+        emit(f"fsdp_reorder.{tag}_r{ranks}.{label}.duration_reduction_pct",
+             0.0, f"{dur_red:.1f}")
+        emit(f"fsdp_reorder.{tag}_r{ranks}.{label}.memory_increase_pct",
+             0.0, f"{mem_inc:.1f}")
+        out[label] = (dur_red, mem_inc)
+    emit(f"fsdp_reorder.{tag}_r{ranks}.sync_ms", r_sync.total_time * 1e6,
+         f"{r_sync.total_time * 1e3:.2f}")
+    return out
+
+
+def main():
+    res = {}
+    for tag, preset, ranks_list in (("8b", PRESET_8B, (8, 64)),
+                                    ("70b", PRESET_70B, (8, 64))):
+        for ranks in ranks_list:
+            res[(tag, ranks)] = run_case(tag, preset, ranks)
+    # paper-shape assertions (Fig 9): the reorder schedule buys a large
+    # duration cut for a small memory cost; prefetching *everything* buys
+    # much more memory for less benefit (why SimpleFSDP bounds prefetch)
+    d, m = res[("8b", 64)]["reorder"]
+    assert d > 10.0 and m < 10.0, (d, m)
+    d70, m70 = res[("70b", 8)]["reorder"]
+    assert d70 > 0.0, d70
+    for key, case in res.items():
+        assert case["full_prefetch"][1] > case["reorder"][1], key
+    emit("fsdp_reorder.tradeoff_reproduced", 0.0, "True")
+
+
+if __name__ == "__main__":
+    main()

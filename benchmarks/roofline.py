@@ -1,0 +1,96 @@
+import os
+"""Roofline table builder: aggregates the dry-run artifacts into the
+EXPERIMENTS.md SSRoofline tables (40 cells, single-pod; baseline and
+optimized variants)."""
+import glob
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def art_dir(variant="baseline"):
+    d = os.path.join(ROOT, f"dryrun_{variant}")
+    if os.path.isdir(d) and glob.glob(os.path.join(d, "*.json")):
+        return d
+    return os.path.join(ROOT, "dryrun")
+
+
+def load_cells(mesh_tag="singlepod", variant="baseline"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(art_dir(variant), "*.json"))):
+        if "_index" in f or "BASELINE" in f:
+            continue
+        r = json.load(open(f))
+        if r.get("mesh") == mesh_tag or (r.get("status") == "skipped"
+                                         and mesh_tag in r.get("cell", "")):
+            cells.append(r)
+    return cells
+
+
+def fraction(r):
+    rl = r["roofline"]
+    dom = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+    if dom <= 0:
+        return 0.0
+    useful_s = rl["model_flops"] / 197e12
+    return useful_s / dom
+
+
+def table(mesh_tag="singlepod", variant="baseline"):
+    rows = []
+    for r in load_cells(mesh_tag, variant):
+        if r.get("status") == "skipped":
+            rows.append({"cell": r["cell"], "status": "skipped",
+                         "reason": r["reason"]})
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "cell": r["cell"], "status": "ok",
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_ms": rl["compute_s"] * 1e3,
+            "memory_ms": rl["memory_s"] * 1e3,
+            "collective_ms": rl["collective_s"] * 1e3,
+            "bound": rl["bound"],
+            "useful_ratio": rl["useful_ratio"],
+            "roofline_fraction": fraction(r),
+            "hbm_temp_gb": r["memory_analysis"].get(
+                "temp_size_in_bytes", 0) / 1e9,
+        })
+    return rows
+
+
+def main():
+    for variant in ("baseline", "opt"):
+        rows = table(variant=variant)
+        ok = [r for r in rows if r["status"] == "ok"]
+        if not ok:
+            continue
+        print(f"# === {variant} ===")
+        print("cell,compute_ms,memory_ms,collective_ms,bound,useful_ratio,"
+              "roofline_fraction")
+        for r in sorted(ok, key=lambda x: x["roofline_fraction"]):
+            print(f"{r['cell']},{r['compute_ms']:.2f},{r['memory_ms']:.2f},"
+                  f"{r['collective_ms']:.2f},{r['bound']},"
+                  f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f}")
+        for r in rows:
+            if r["status"] == "skipped":
+                print(f"{r['cell']},skipped,,,,{r['reason']},")
+        bounds = {}
+        for r in ok:
+            bounds[r["bound"]] = bounds.get(r["bound"], 0) + 1
+        print(f"# bounds: {bounds}")
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        print(f"# worst fraction: {worst['cell']} "
+              f"{worst['roofline_fraction']:.3f}")
+        tr = [r for r in ok if r["shape"] == "train_4k"]
+        if tr:
+            import statistics
+            print(f"# train_4k median fraction: "
+                  f"{statistics.median(r['roofline_fraction'] for r in tr):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — each module reproduces one paper figure:
+
+  opcounts         Fig 7   operator-count validation of captured graphs
+  e2e_validation   Fig 8   ground-truth vs Flint+simulator duration
+  fsdp_reorder     Fig 9   AllGather reordering: duration/memory tradeoff
+  bandwidth_sweep  Fig 10  reordering benefit vs interconnect bandwidth
+  wafer_tacos      Fig 11  synthesized collectives on wafer-scale 2-D mesh
+  nic_degradation  Fig 12  degraded-NIC detection from the workload graph
+  roofline         (ours)  40-cell roofline table from the dry-run
+
+Each bench runs in its own subprocess so it controls its fake-device count
+before importing jax."""
+import os
+import subprocess
+import sys
+import time
+
+BENCHES = ["opcounts", "e2e_validation", "fsdp_reorder", "bandwidth_sweep",
+           "wafer_tacos", "nic_degradation", "roofline"]
+
+
+def main() -> None:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [root, os.path.join(root, "src"), env.get("PYTHONPATH", "")])
+    failures = []
+    for name in BENCHES:
+        t0 = time.time()
+        r = subprocess.run([sys.executable, "-m", f"benchmarks.{name}"],
+                           capture_output=True, text=True, env=env,
+                           cwd=root, timeout=3600)
+        dt = time.time() - t0
+        for line in r.stdout.splitlines():
+            if line.strip():
+                print(line)
+        if r.returncode != 0:
+            failures.append(name)
+            print(f"{name}.FAILED,0,see_stderr")
+            sys.stderr.write(r.stderr[-3000:] + "\n")
+        print(f"{name}.wall_s,{dt * 1e6:.0f},{dt:.1f}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

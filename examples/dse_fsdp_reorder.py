@@ -1,0 +1,86 @@
+"""Design-space exploration with Flint (the paper's Fig 5 feedback loop).
+
+Capture ONE workload graph cluster-free, then explore software knobs
+(FSDP AllGather prefetch depth, gradient bucketing) x hardware knobs
+(interconnect bandwidth) through the cost model, and report the best
+configuration per hardware point — paper SS6.1 end to end.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=32 \
+      python examples/dse_fsdp_reorder.py
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import SystemConfig  # noqa: E402
+from repro.core import capture_step, passes  # noqa: E402
+from repro.core.dse import Knob, explore  # noqa: E402
+from repro.parallel.mesh import make_mesh  # noqa: E402
+
+
+def capture_fsdp_workload(ranks=32, n_layers=16, d=2048, f=8192,
+                          tokens_per_rank=2048):
+    mesh = make_mesh((ranks,), ("data",))
+
+    def step(stack, x):
+        def body(h, w):
+            w1, w2 = w
+            h = h + jax.nn.silu(h @ w1) @ w2
+            return h, None
+        h, _ = jax.lax.scan(body, x, stack)
+        return jnp.mean(h.astype(jnp.float32) ** 2)
+
+    g = jax.value_and_grad(step)
+    ss = (jax.ShapeDtypeStruct((n_layers, d, f), jnp.bfloat16),
+          jax.ShapeDtypeStruct((n_layers, f, d), jnp.bfloat16))
+    xs = jax.ShapeDtypeStruct((tokens_per_rank * ranks, d), jnp.bfloat16)
+    sh = ((NamedSharding(mesh, P(None, "data", None)),
+           NamedSharding(mesh, P(None, "data", None))),
+          NamedSharding(mesh, P("data", None)))
+    cap = capture_step(g, (ss, xs), sh, mesh, meta={"case": "dse-fsdp"})
+    print(f"[dse] captured: {len(cap.graph)} nodes, "
+          f"{cap.summary['comm_bytes'] / 1e9:.1f} GB collectives/device, "
+          f"{cap.summary['parsed_flops'] / 1e12:.2f} TFLOP/device")
+    return cap.graph
+
+
+def main():
+    graph = capture_fsdp_workload()
+
+    def graph_for(cfg):          # workload fixed -> captured exactly once
+        return graph
+
+    knobs = [
+        Knob("fsdp_sync", [True], layer="software"),
+        Knob("prefetch", [0, 1, 2, 4, 16], layer="software"),
+        Knob("bucket_bytes", [None, 64e6], layer="software"),
+        Knob("link_bw", [12.5e9, 50e9, 200e9], layer="hardware"),
+    ]
+    trials = explore(graph_for, SystemConfig(chips=32, topology="switch"),
+                     knobs, objective="total_time")
+
+    print(f"[dse] explored {len(trials)} configurations")
+    for bw in (12.5e9, 50e9, 200e9):
+        best = next(t for t in trials if t.config["link_bw"] == bw)
+        base = next(t for t in trials
+                    if t.config["link_bw"] == bw
+                    and t.config["prefetch"] == 0
+                    and t.config["bucket_bytes"] is None)
+        gain = (base.objective - best.objective) / base.objective * 100
+        print(f"  link_bw {bw / 1e9:5.1f} GB/s: best prefetch="
+              f"{best.config['prefetch']} bucket={best.config['bucket_bytes']}"
+              f" -> {best.objective * 1e3:.1f} ms ({gain:+.1f}% vs no-reorder,"
+              f" peak {best.result.peak_bytes / 1e9:.2f} GB)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Batched serving example: prefill a batch of prompts, decode with a
+ring-buffer KV cache, sample continuations.
+
+  python examples/serve_batched.py --arch gemma3-4b
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import ParallelConfig  # noqa: E402
+from repro.configs.registry import ARCH_NAMES, get_config  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.train.serve_step import (make_decode_step,  # noqa: E402
+                                    make_prefill_step, sample_token)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b", choices=ARCH_NAMES)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)     # reduced config: CPU-friendly
+    model = build_model(cfg)
+    par = ParallelConfig()
+    cache_len = args.prompt_len + args.gen
+
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    memory = None
+    if model.memory_len():
+        memory = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, model.memory_len(), cfg.d_model), jnp.bfloat16)
+
+    prefill = jax.jit(make_prefill_step(model, par, cache_len=cache_len))
+    decode = jax.jit(make_decode_step(model, par), donate_argnums=(2,))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, prompts, memory)
+    jax.block_until_ready(logits)
+    print(f"[serve] prefill {args.batch}x{args.prompt_len}: "
+          f"{(time.perf_counter() - t0) * 1e3:.0f} ms")
+
+    tok = sample_token(logits, rng, args.temperature)
+    generated = [tok]
+    t0 = time.perf_counter()
+    for _ in range(args.gen - 1):
+        rng, k = jax.random.split(rng)
+        logits, cache = decode(params, tok, cache)
+        tok = sample_token(logits, k, args.temperature)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    out = jnp.concatenate(generated, axis=1)
+    print(f"[serve] decoded {args.gen - 1} steps x {args.batch} seqs: "
+          f"{dt * 1e3:.0f} ms ({args.batch * (args.gen - 1) / dt:.1f} tok/s)")
+    for b in range(min(2, args.batch)):
+        print(f"  seq{b}: {out[b, :16].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.configs.base import (ModelConfig, ShapeConfig, ParallelConfig,
+                                SystemConfig, SHAPES, ALL_SHAPES, TRAIN_4K,
+                                PREFILL_32K, DECODE_32K, LONG_500K)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "ParallelConfig", "SystemConfig",
+    "SHAPES", "ALL_SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+    "LONG_500K",
+]

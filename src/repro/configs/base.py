@@ -1,0 +1,235 @@
+"""Config schema for Flint-JAX.
+
+Three layers of configuration, mirroring the paper's Fig. 2 split:
+  * ModelConfig     -- the workload (green box): architecture dims + layer pattern.
+  * ShapeConfig     -- the input shape cell (train_4k / prefill_32k / ...).
+  * ParallelConfig  -- the software-system knobs (red box): sharding, remat, ...
+  * SystemConfig    -- the hardware-system knobs (yellow box): used by cost models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+# Layer kinds used in ``layer_pattern``. A model is a stack of "superblocks";
+# each superblock is a tuple of layer kinds that repeats ``repeat`` times,
+# optionally followed by a remainder pattern. scan-over-superblocks keeps the
+# lowered HLO small and compile times flat regardless of depth.
+GLOBAL_ATTN = "global"      # full causal attention
+LOCAL_ATTN = "local"        # sliding-window causal attention
+CROSS_ATTN = "cross"        # cross-attention to encoder/vision memory
+RGLRU = "rglru"             # RG-LRU recurrent block (recurrentgemma)
+SSD = "ssd"                 # Mamba2 state-space duality block
+ENC_ATTN = "enc"            # bidirectional encoder self-attention
+
+ATTENTION_KINDS = (GLOBAL_ATTN, LOCAL_ATTN, CROSS_ATTN, ENC_ATTN)
+RECURRENT_KINDS = (RGLRU, SSD)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int                  # decoder/backbone layers
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # Layer pattern: ``superblock`` repeated ``sb_repeat`` times then
+    # ``remainder``. len(superblock)*sb_repeat + len(remainder) == num_layers.
+    superblock: tuple = (GLOBAL_ATTN,)
+    sb_repeat: int = 0
+    remainder: tuple = ()
+
+    # attention details
+    local_window: int = 0            # sliding window size for LOCAL_ATTN
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    rope_theta_global: float = 0.0   # gemma3 uses a different theta for global layers
+    logits_soft_cap: float = 0.0
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_width: int = 4
+    ssm_chunk: int = 256
+
+    # RG-LRU (recurrentgemma)
+    rnn_width: int = 0               # recurrence width (d_rnn); 0 -> d_model
+    rglru_conv_width: int = 4
+
+    # encoder-decoder (seamless) -- encoder is its own uniform stack
+    encoder_layers: int = 0
+    encoder_len: int = 0             # stubbed audio-frame count
+
+    # vlm -- cross-attention context from the (stubbed) vision frontend
+    context_tokens: int = 0          # image tokens per sample
+
+    act: str = "silu"                # mlp activation: silu (SwiGLU) | gelu (GeGLU)
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        got = len(self.superblock) * self.sb_repeat + len(self.remainder)
+        if got != self.num_layers:
+            raise ValueError(
+                f"{self.name}: layer pattern covers {got} layers, "
+                f"config says num_layers={self.num_layers}")
+
+    @property
+    def layer_kinds(self) -> tuple:
+        return tuple(self.superblock) * self.sb_repeat + tuple(self.remainder)
+
+    @property
+    def d_inner(self) -> int:        # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_state else 0
+
+    @property
+    def d_rnn(self) -> int:
+        return self.rnn_width or self.d_model
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch is not *pure* full attention (long_500k applicable).
+
+        Local/sliding-window or recurrent (SSM / RG-LRU) layers bound the
+        per-layer cache; the few interleaved global layers (gemma3) are linear
+        in cache length at decode time and get a sequence-sharded cache.
+        """
+        kinds = set(self.layer_kinds)
+        return bool(kinds & {LOCAL_ATTN, RGLRU, SSD})
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model flops + sanity checks)."""
+        d, h, kv, hd, ff, v = (self.d_model, self.num_heads, self.num_kv_heads,
+                               self.head_dim, self.d_ff, self.vocab_size)
+        n = v * d                                     # embeddings
+        if not self.tie_embeddings:
+            n += v * d
+        glu = 3 if self.act in ("silu", "gelu") else 2
+
+        def attn_params():
+            return d * h * hd + 2 * d * kv * hd + h * hd * d
+
+        def mlp_params(e=1):
+            return e * glu * d * ff
+
+        for kind in self.layer_kinds:
+            n += 2 * d                                # pre-norms (attn + mlp)
+            if kind in (GLOBAL_ATTN, LOCAL_ATTN, ENC_ATTN):
+                n += attn_params()
+                n += mlp_params(self.num_experts or 1)
+                if self.num_experts:
+                    n += d * self.num_experts         # router
+            elif kind == CROSS_ATTN:
+                n += attn_params() + mlp_params()
+            elif kind == RGLRU:
+                dr = self.d_rnn
+                n += 2 * d * dr + dr * d              # in(x2)/out proj
+                n += self.rglru_conv_width * dr       # temporal conv
+                n += 2 * dr                           # gates (a, input)
+                n += mlp_params()
+            elif kind == SSD:
+                di, ns, nh = self.d_inner, self.ssm_state, self.ssm_heads
+                n += d * (2 * di + 2 * ns + nh)       # in_proj (x,z,B,C,dt)
+                n += self.conv_width * (di + 2 * ns)  # conv
+                n += 2 * nh                           # A_log, D
+                n += di * d                           # out_proj
+        # encoder stack (uniform enc layers: self-attn + mlp)
+        n += self.encoder_layers * (attn_params() + mlp_params() + 2 * self.d_model)
+        n += self.d_model                              # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (for 6·N_active·D)."""
+        if not self.num_experts:
+            return self.param_count()
+        full = self.param_count()
+        glu = 3
+        per_layer_moe = self.num_experts * glu * self.d_model * self.d_ff
+        active_moe = self.experts_per_token * glu * self.d_model * self.d_ff
+        n_moe_layers = sum(1 for k in self.layer_kinds if k in (GLOBAL_ATTN, LOCAL_ATTN))
+        return full - n_moe_layers * (per_layer_moe - active_moe)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_serve(self) -> bool:
+        return self.kind in ("prefill", "decode")
+
+
+TRAIN_4K = ShapeConfig("train_4k", "train", 4_096, 256)
+PREFILL_32K = ShapeConfig("prefill_32k", "prefill", 32_768, 32)
+DECODE_32K = ShapeConfig("decode_32k", "decode", 32_768, 128)
+LONG_500K = ShapeConfig("long_500k", "decode", 524_288, 1)
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """Software-system knobs (sharding strategy etc.)."""
+    fsdp: bool = True                # shard big params over the data axis too
+    model_axis: str = "tp"           # tp | zero3 (what the model axis does)
+    seq_shard: bool = True           # sequence-parallel activation constraints
+    remat: str = "dots"              # none | dots | full
+    microbatches: int = 1            # gradient-accumulation microbatches
+    grad_compression: bool = False   # int8 all-reduce with error feedback
+    attn_impl: str = "xla"           # xla | pallas | interpret
+    moe_strategy: str = "auto"       # auto | ep | tp
+    pipeline_stages: int = 1         # >1: GPipe over the "pod" axis
+    scan_layers: bool = True
+    # decode-time
+    seq_shard_cache: bool = False    # shard KV cache over data axis (long ctx)
+
+    def replace(self, **kw) -> "ParallelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class SystemConfig:
+    """Hardware-system knobs consumed by the cost models (paper Fig 2 bottom).
+
+    Defaults = TPU v5e.
+    """
+    peak_flops: float = 197e12       # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    link_bw: float = 50e9            # bytes/s per ICI link (per direction)
+    link_latency: float = 1e-6       # seconds per hop
+    dcn_bw: float = 12.5e9           # bytes/s per host cross-pod (DCN)
+    dcn_latency: float = 10e-6
+    topology: str = "torus2d"        # switch | ring | torus2d | torus3d | wafer2d
+    collective_algo: str = "auto"    # auto | ring | hd | 2d_synth
+    chips: int = 256
+
+    def replace(self, **kw) -> "SystemConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,56 @@
+"""Architecture registry: --arch <id> -> ModelConfig."""
+from __future__ import annotations
+
+from repro.configs import (recurrentgemma_9b, seamless_m4t_medium,
+                           llama32_vision_90b, mamba2_780m, gemma3_4b,
+                           qwen3_8b, granite_3_8b, gemma3_12b, mixtral_8x7b,
+                           dbrx_132b)
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES, ALL_SHAPES,
+                                GLOBAL_ATTN)
+
+_MODULES = {
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+    "llama-3.2-vision-90b": llama32_vision_90b,
+    "mamba2-780m": mamba2_780m,
+    "gemma3-4b": gemma3_4b,
+    "qwen3-8b": qwen3_8b,
+    "granite-3-8b": granite_3_8b,
+    "gemma3-12b": gemma3_12b,
+    "mixtral-8x7b": mixtral_8x7b,
+    "dbrx-132b": dbrx_132b,
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_NAMES}")
+    mod = _MODULES[name]
+    return mod.smoke() if smoke else mod.full()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch x shape) cell runs, and why not if it doesn't.
+
+    long_500k needs sub-quadratic attention: a pure full-attention arch would
+    need a dense 524k-token KV cache per global layer with batch=1 -- skipped
+    per the assignment and DESIGN.md SSArch-applicability.
+    """
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k skipped (see DESIGN.md)"
+    return True, ""
+
+
+def all_cells(smoke: bool = False):
+    """Yield (arch_name, ModelConfig, ShapeConfig, applicable, reason)."""
+    for name in ARCH_NAMES:
+        cfg = get_config(name, smoke=smoke)
+        for shape in ALL_SHAPES:
+            ok, why = cell_applicable(get_config(name), shape)
+            yield name, cfg, shape, ok, why

@@ -1,0 +1,12 @@
+# Flint core: compiler-IR workload capture -> Chakra graphs -> cost models -> DSE.
+from repro.core import chakra, passes
+from repro.core.capture import (capture_step, CaptureResult, summarize_module,
+                                stablehlo_op_counts)
+from repro.core.convert import hlo_to_chakra, expand_collective_p2p
+from repro.core.export import expand_ranks, write_et
+from repro.core.hlo_parse import parse_hlo, HloModule
+
+__all__ = ["chakra", "passes", "capture_step", "CaptureResult",
+           "summarize_module", "stablehlo_op_counts", "hlo_to_chakra",
+           "expand_collective_p2p", "expand_ranks", "write_et",
+           "parse_hlo", "HloModule"]

@@ -1,0 +1,147 @@
+"""Chakra-style workload graph (the paper's interchange format).
+
+Node types follow the Chakra ET schema semantics (MLCommons): COMP nodes for
+compute kernels, COMM_COLL for collectives, COMM_SEND/COMM_RECV for expanded
+point-to-point messages, MEM for host/staging ops.  Two edge kinds:
+
+  * deps      -- *true data dependencies* (SSA operands from the compiler IR;
+                 the property that sets Flint apart from CUDA-API capture, SS2.2)
+  * ctrl_deps -- scheduling/synchronization edges.  Passes may add/remove
+                 these (e.g. FSDP sync injection / AllGather reordering,
+                 Fig 3b) but never touch data deps.
+
+Serialized as JSON ET (one file per rank) so external Chakra consumers
+(ASTRA-sim, Genie, ...) stay pluggable (P1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Iterable, List, Optional
+
+COMP = "COMP"
+COMM_COLL = "COMM_COLL"
+COMM_SEND = "COMM_SEND"
+COMM_RECV = "COMM_RECV"
+MEM = "MEM"
+
+
+@dataclasses.dataclass
+class Node:
+    id: int
+    name: str
+    type: str
+    deps: List[int] = dataclasses.field(default_factory=list)
+    ctrl_deps: List[int] = dataclasses.field(default_factory=list)
+    attrs: Dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def all_deps(self) -> List[int]:
+        return self.deps + self.ctrl_deps
+
+
+class Graph:
+    def __init__(self, meta: Optional[Dict] = None):
+        self.nodes: List[Node] = []
+        self.meta: Dict = meta or {}
+
+    # -- construction -------------------------------------------------------
+    def add(self, name: str, type: str, deps: Iterable[int] = (),
+            ctrl_deps: Iterable[int] = (), **attrs) -> int:
+        nid = len(self.nodes)
+        self.nodes.append(Node(nid, name, type, list(deps), list(ctrl_deps),
+                               attrs))
+        return nid
+
+    def node(self, nid: int) -> Node:
+        return self.nodes[nid]
+
+    def __len__(self):
+        return len(self.nodes)
+
+    # -- queries ------------------------------------------------------------
+    def by_type(self, t: str) -> List[Node]:
+        return [n for n in self.nodes if n.type == t]
+
+    def consumers(self) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {n.id: [] for n in self.nodes}
+        for n in self.nodes:
+            for d in n.all_deps:
+                out[d].append(n.id)
+        return out
+
+    def topo_order(self) -> List[int]:
+        indeg = {n.id: len(set(n.all_deps)) for n in self.nodes}
+        cons = self.consumers()
+        ready = [nid for nid, d in indeg.items() if d == 0]
+        order: List[int] = []
+        seen_edges: Dict[int, set] = {n.id: set(n.all_deps) for n in self.nodes}
+        while ready:
+            nid = ready.pop()
+            order.append(nid)
+            for c in cons[nid]:
+                if nid in seen_edges[c]:
+                    seen_edges[c].discard(nid)
+                    if not seen_edges[c]:
+                        ready.append(c)
+        if len(order) != len(self.nodes):
+            raise ValueError("graph has a cycle")
+        return order
+
+    def validate(self) -> bool:
+        ids = {n.id for n in self.nodes}
+        for n in self.nodes:
+            for d in n.all_deps:
+                if d not in ids or d == n.id:
+                    raise ValueError(f"bad dep {d} of node {n.id}")
+        self.topo_order()
+        return True
+
+    # -- stats ---------------------------------------------------------------
+    def totals(self) -> Dict:
+        flops = sum(n.attrs.get("flops", 0.0) for n in self.nodes)
+        bytes_ = sum(n.attrs.get("bytes", 0.0) for n in self.nodes
+                     if n.type == COMP)
+        comm = {}
+        for n in self.by_type(COMM_COLL):
+            k = n.attrs.get("comm_kind", "?")
+            comm.setdefault(k, [0, 0.0])
+            comm[k][0] += 1
+            comm[k][1] += n.attrs.get("comm_bytes", 0.0)
+        return {"flops": flops, "comp_bytes": bytes_,
+                "comm": {k: {"count": c, "bytes": b}
+                         for k, (c, b) in comm.items()},
+                "comm_bytes": sum(b for _, b in comm.values()),
+                "n_nodes": len(self.nodes)}
+
+    # -- serialization -------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "schema": "flint-chakra-et-v1",
+            "meta": self.meta,
+            "nodes": [dataclasses.asdict(n) for n in self.nodes],
+        })
+
+    @classmethod
+    def from_json(cls, s: str) -> "Graph":
+        d = json.loads(s)
+        g = cls(d.get("meta", {}))
+        for nd in d["nodes"]:
+            g.nodes.append(Node(**nd))
+        return g
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "Graph":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def copy(self) -> "Graph":
+        g = Graph(dict(self.meta))
+        for n in self.nodes:
+            g.nodes.append(Node(n.id, n.name, n.type, list(n.deps),
+                                list(n.ctrl_deps), dict(n.attrs)))
+        return g

@@ -1,0 +1,257 @@
+"""HLO -> Chakra conversion (Flint's Graph Converter, paper SS4.3).
+
+Walks the scheduled post-SPMD HLO module and emits a Chakra graph whose
+edges are the SSA operands — the true data dependencies.  Bookkeeping ops
+(tuple/GTE/parameter/bitcast/constant) are aliased through to their
+producers, matching how the paper drops FX input nodes from Chakra.
+
+While loops (jax.lax.scan):
+  * bodies containing collectives are *expanded* trip_count times, chaining
+    loop-carried deps — the per-iteration collectives then appear explicitly
+    (a post-execution trace would show exactly these);
+  * collective-free bodies (e.g. flash-attention kv scans) are *collapsed*
+    into one COMP node with flops/bytes scaled by trip count, keeping graphs
+    compact without losing cost.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core import chakra
+from repro.core.hlo_parse import (COLLECTIVE_OPS, HloModule, Instruction,
+                                  instruction_flops, parse_permute_pairs,
+                                  parse_replica_groups, while_trip_count)
+
+# ops that never become nodes: forward deps through them
+_ALIAS_OPS = {"tuple", "get-tuple-element", "parameter", "bitcast",
+              "constant", "iota", "partition-id", "replica-id",
+              "after-all", "opt-barrier"}
+
+_MAX_EXPAND = 128
+
+
+def _computation_has_collective(mod: HloModule, comp_name: str,
+                                _seen=None) -> bool:
+    _seen = _seen if _seen is not None else set()
+    if comp_name in _seen:
+        return False
+    _seen.add(comp_name)
+    comp = mod.computations.get(comp_name)
+    if comp is None:
+        return False
+    for ins in comp.instructions:
+        if ins.is_collective:
+            return True
+        for key in ("body", "condition", "calls"):
+            sub = ins.attrs.get(key, "").lstrip("%")
+            if sub and _computation_has_collective(mod, sub, _seen):
+                return True
+    return False
+
+
+def _comp_cost(mod: HloModule, comp_name: str, mult: int = 1):
+    """(flops, bytes) of a computation incl. nested whiles (for collapse)."""
+    comp = mod.computations.get(comp_name)
+    flops = 0.0
+    bytes_ = 0.0
+    if comp is None:
+        return flops, bytes_
+    for ins in comp.instructions:
+        if ins.opcode in _ALIAS_OPS:
+            continue
+        if ins.opcode == "while":
+            body = ins.attrs.get("body", "").lstrip("%")
+            cond = ins.attrs.get("condition", "").lstrip("%")
+            trips = while_trip_count(mod, cond)
+            f, b = _comp_cost(mod, body, 1)
+            flops += f * trips
+            bytes_ += b * trips
+            continue
+        flops += instruction_flops(mod, ins, comp_name)
+        bytes_ += ins.out_bytes
+        for op in ins.operands:
+            src = comp.find(op)
+            if src is not None:
+                bytes_ += src.out_bytes
+    return flops * mult, bytes_ * mult
+
+
+class _Tuple:
+    """Per-element dependency sets for HLO tuple values.
+
+    Tracking tuple elements separately through while loops is what keeps
+    loop-*invariant* inputs (e.g. the stacked weight tensors feeding FSDP
+    all-gathers) free of false cross-iteration dependencies — the exact
+    failure mode of CUDA-API-level capture the paper calls out (SS2.2)."""
+
+    def __init__(self, elements: List[List[int]]):
+        self.elements = [list(e) for e in elements]
+
+    def flat(self) -> List[int]:
+        out: List[int] = []
+        for e in self.elements:
+            out.extend(e)
+        return list(dict.fromkeys(out))
+
+
+def _flat(v) -> List[int]:
+    if isinstance(v, _Tuple):
+        return v.flat()
+    return list(v)
+
+
+class _Builder:
+    def __init__(self, mod: HloModule, graph: chakra.Graph):
+        self.mod = mod
+        self.g = graph
+
+    def build_computation(self, comp_name: str, param_vals=None,
+                          prefix: str = ""):
+        """Emit nodes for one computation instance.
+
+        param_vals[i]: value (_Tuple or id list) backing parameter i.
+        Returns the value backing the ROOT instruction."""
+        comp = self.mod.computations[comp_name]
+        env: Dict[str, object] = {}
+        param_idx = 0
+        root_val = []
+        for ins in comp.instructions:
+            operand_vals = [env.get(op, []) for op in ins.operands]
+            dep_ids: List[int] = []
+            for v in operand_vals:
+                dep_ids.extend(_flat(v))
+            dep_ids = list(dict.fromkeys(dep_ids))
+
+            if ins.opcode == "parameter":
+                env[ins.name] = (param_vals[param_idx]
+                                 if param_vals and param_idx < len(param_vals)
+                                 else [])
+                param_idx += 1
+            elif ins.opcode == "tuple":
+                env[ins.name] = _Tuple([_flat(v) for v in operand_vals])
+            elif ins.opcode == "get-tuple-element":
+                idx = int(ins.attrs.get("index", "0"))
+                src = operand_vals[0] if operand_vals else []
+                if isinstance(src, _Tuple) and idx < len(src.elements):
+                    env[ins.name] = src.elements[idx]
+                else:
+                    env[ins.name] = _flat(src)
+            elif ins.opcode == "while":
+                env[ins.name] = self._emit_while(ins, operand_vals, dep_ids,
+                                                 prefix)
+            elif ins.opcode in _ALIAS_OPS:
+                env[ins.name] = dep_ids
+            elif ins.is_collective:
+                env[ins.name] = [self._emit_collective(ins, dep_ids, prefix)]
+            else:
+                env[ins.name] = [self._emit_comp(ins, dep_ids, prefix,
+                                                 comp_name)]
+            if ins.raw.strip().startswith("ROOT") or ins is comp.instructions[-1]:
+                root_val = env[ins.name]
+        return root_val
+
+    def _emit_comp(self, ins: Instruction, deps, prefix, comp_name) -> int:
+        flops = instruction_flops(self.mod, ins, comp_name)
+        in_bytes = 0
+        comp = self.mod.computations[comp_name]
+        for op in ins.operands:
+            src = comp.find(op)
+            if src is not None:
+                in_bytes += src.out_bytes
+        return self.g.add(prefix + ins.name, chakra.COMP, deps=deps,
+                          flops=flops, bytes=float(in_bytes + ins.out_bytes),
+                          out_bytes=float(ins.out_bytes), op=ins.opcode,
+                          src_op=ins.metadata_op)
+
+    def _emit_collective(self, ins: Instruction, deps, prefix) -> int:
+        kind = ins.collective_kind
+        groups = parse_replica_groups(ins.attrs.get("replica_groups", ""),
+                                      self.mod.num_partitions)
+        comp = None
+        in_bytes = 0
+        for cn, c in self.mod.computations.items():
+            if c.find(ins.name) is ins:
+                comp = c
+                break
+        if comp:
+            for op in ins.operands:
+                src = comp.find(op)
+                if src is not None:
+                    in_bytes += src.out_bytes
+        # comm_bytes: per-device payload (operand size; the roofline spec's
+        # "sum operand sizes").  all-gather's operand is the pre-gather shard.
+        payload = float(in_bytes if kind != "all-gather" else ins.out_bytes)
+        attrs = dict(comm_kind=kind, comm_bytes=payload,
+                     in_bytes=float(in_bytes), out_bytes=float(ins.out_bytes),
+                     group_size=len(groups[0]) if groups else 1,
+                     n_groups=len(groups), group=list(groups[0]) if groups else [],
+                     src_op=ins.metadata_op)
+        if kind == "collective-permute":
+            attrs["pairs"] = parse_permute_pairs(
+                ins.attrs.get("source_target_pairs", ""))
+            attrs["comm_bytes"] = float(ins.out_bytes)
+        return self.g.add(prefix + ins.name, chakra.COMM_COLL, deps=deps,
+                          **attrs)
+
+    def _emit_while(self, ins: Instruction, operand_vals, deps, prefix):
+        body = ins.attrs.get("body", "").lstrip("%")
+        cond = ins.attrs.get("condition", "").lstrip("%")
+        trips = while_trip_count(self.mod, cond)
+        if not _computation_has_collective(self.mod, body) or trips > _MAX_EXPAND:
+            f, b = _comp_cost(self.mod, body, trips)
+            nid = self.g.add(prefix + ins.name, chakra.COMP, deps=deps,
+                             flops=f, bytes=b, op="while.collapsed",
+                             trips=trips, src_op=ins.metadata_op)
+            return [nid]
+        # the loop state is a single tuple parameter; thread per-element deps
+        # so loop-invariant elements don't serialize across iterations
+        state = operand_vals[0] if operand_vals else []
+        for t in range(trips):
+            state = self.build_computation(body, [state],
+                                           prefix=f"{prefix}{ins.name}.it{t}/")
+        return state
+
+
+def hlo_to_chakra(mod: HloModule, meta: Optional[dict] = None) -> chakra.Graph:
+    g = chakra.Graph(meta={"source": "flint-jax", "entry": mod.entry,
+                           "num_partitions": mod.num_partitions,
+                           **(meta or {})})
+    b = _Builder(mod, g)
+    b.build_computation(mod.entry)
+    return g
+
+
+def expand_collective_p2p(kind: str, payload: int, group: List[int],
+                          algo: str = "ring"):
+    """Expand one collective into point-to-point (src, dst, bytes, round)
+    messages — the Chakra representation used for custom-collective studies
+    (paper SS6.2) and network emulation (SS6.3)."""
+    n = len(group)
+    msgs = []
+    if n <= 1:
+        return msgs
+    if algo == "ring":
+        rounds = {"all-gather": n - 1, "reduce-scatter": n - 1,
+                  "all-reduce": 2 * (n - 1)}.get(kind, n - 1)
+        chunk = payload / n
+        for r in range(rounds):
+            for i in range(n):
+                msgs.append((group[i], group[(i + 1) % n], chunk, r))
+    elif algo == "hd":  # recursive halving/doubling
+        import math
+        steps = int(math.log2(n)) if n & (n - 1) == 0 else None
+        if steps is None:
+            return expand_collective_p2p(kind, payload, group, "ring")
+        size = payload / 2
+        for s in range(steps):
+            stride = 2 ** s
+            for i in range(n):
+                msgs.append((group[i], group[i ^ stride], size, s))
+            size /= 2
+    elif algo == "a2a_direct":
+        chunk = payload / n
+        for i in range(n):
+            for j in range(n):
+                if i != j:
+                    msgs.append((group[i], group[j], chunk, 0))
+    return msgs

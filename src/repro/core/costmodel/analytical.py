@@ -1,0 +1,88 @@
+"""Closed-form roofline model (the deliverable of EXPERIMENTS.md SSRoofline).
+
+Per (arch x shape x mesh) cell, from the compiled dry-run artifacts:
+  compute term    = HLO_FLOPs / peak_FLOP/s            (per chip)
+  memory term     = HLO_bytes / HBM_bw                 (per chip)
+  collective term = collective_bytes / link_bw         (per chip)
+
+HLO_FLOPs come from Flint's trip-count-aware parser (parsed_flops), with
+XLA's cost_analysis as a cross-check.  collective_bytes = sum of operand
+sizes of every collective op (the assignment's definition), also reported
+as an algorithm-aware wire estimate used by the simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    model_flops: float            # 6*N*D (or 6*N_active*D) per device
+    bound: str
+    useful_ratio: float           # MODEL_FLOPS / HLO_FLOPs
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Lower-bound step time if the dominant term perfectly hides the rest."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / achievable step time (the perf score)."""
+        t_useful = self.model_flops and self.model_flops or 0.0
+        return 0.0 if self.step_time_lb == 0 else \
+            min(1.0, (self.model_flops / max(self.flops, 1e-9))
+                * self.compute_s / self.step_time_lb)
+
+
+def roofline(summary: Dict, cost_analysis: Dict, system,
+             model_flops_per_device: float,
+             fused_kernels: bool = False) -> RooflineTerms:
+    """summary: capture.summarize_module output; cost_analysis: XLA dict.
+
+    Uses Flint's trip-count-aware, bf16-normalized byte accounting (XLA's
+    cost_analysis neither multiplies while bodies nor targets TPU dtypes).
+    fused_kernels=True uses the Pallas-kernel HBM view (attention/SSD/RG-LRU
+    inner loops VMEM-resident; see kernels/)."""
+    flops = max(summary.get("parsed_flops", 0.0),
+                cost_analysis.get("flops", 0.0) or 0.0)
+    key = ("parsed_hbm_bytes_tpu_fused" if fused_kernels
+           else "parsed_hbm_bytes_tpu")
+    hbm = summary.get(key, 0.0) or \
+        cost_analysis.get("bytes accessed", 0.0) or 0.0
+    coll = summary.get("comm_bytes_tpu", summary.get("comm_bytes", 0.0))
+    c_s = flops / system.peak_flops
+    m_s = hbm / system.hbm_bw
+    l_s = coll / system.link_bw
+    terms = {"compute": c_s, "memory": m_s, "collective": l_s}
+    bound = max(terms, key=terms.get)
+    return RooflineTerms(
+        compute_s=c_s, memory_s=m_s, collective_s=l_s, flops=flops,
+        hbm_bytes=hbm, coll_bytes=coll,
+        model_flops=model_flops_per_device, bound=bound,
+        useful_ratio=(model_flops_per_device / flops) if flops else 0.0)
+
+
+def model_flops_per_step(cfg, shape, n_devices: int) -> float:
+    """6*N*D per device (N_active for MoE); decode counts one token/seq."""
+    n_params = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:  # decode: one new token per sequence
+        tokens = shape.global_batch
+        mult = 2.0
+    return mult * n_params * tokens / n_devices

@@ -1,0 +1,131 @@
+"""Collective-algorithm time models + synthesis (paper SS6.2).
+
+Times follow the standard alpha-beta model on top of the Topology's
+effective ring bandwidth:
+  ring all-reduce      2(n-1)/n * S / bw + 2(n-1) * alpha
+  ring all-gather/RS    (n-1)/n * S / bw +  (n-1) * alpha
+  halving-doubling     log2(n) rounds (latency-optimal, needs pow2)
+  2-D synthesized      dimension-ordered rings (TACOS-like): RS along x,
+                       RS along y, AG along y, AG along x — each leg rides a
+                       native torus axis at full link bw, avoiding the
+                       congestion a single long ring suffers on a mesh.
+
+`synthesize_2d` also emits the per-round p2p message list (the separate
+Chakra graph representation the paper feeds to the simulator).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+from repro.core.costmodel.topology import MultiPod, Topology, Torus2D
+
+
+def _ring_time(payload: float, n: int, bw: float, alpha: float,
+               rounds_factor: float) -> float:
+    if n <= 1 or payload <= 0:
+        return 0.0
+    steps = rounds_factor * (n - 1)
+    return steps / n * payload / bw + steps * alpha
+
+
+def collective_time(kind: str, payload: float, group: List[int],
+                    topo: Topology, algo: str = "auto") -> float:
+    """Seconds for one collective of `payload` bytes per rank over `group`.
+
+    payload semantics: all-gather/reduce-scatter -> full (gathered) size;
+    all-reduce -> full tensor size; all-to-all -> per-rank send total;
+    collective-permute -> message size."""
+    n = len(group)
+    if n <= 1 or payload <= 0:
+        return 0.0
+    alpha = topo.link_latency
+    bw = topo.ring_bw(group)
+
+    if algo == "auto":
+        if isinstance(topo, Torus2D) and not topo.group_is_axis(group) \
+                and kind in ("all-reduce", "all-gather", "reduce-scatter"):
+            algo = "2d_synth"
+        else:
+            algo = "ring"
+
+    if kind == "collective-permute":
+        hops = max((topo.hop_distance(a, b) for a, b in
+                    zip(group, group[1:] + group[:1])), default=1)
+        return payload / topo.link_bw + hops * alpha
+
+    if kind == "all-to-all":
+        # bisection-limited
+        bis = topo.bisection_bw()
+        t_bis = payload * n / 2 / max(bis, 1e-9) / n
+        return max(payload / bw, t_bis) + (n - 1) * alpha
+
+    if algo == "2d_synth" and isinstance(topo, Torus2D):
+        return synthesize_2d_time(kind, payload, group, topo)
+
+    if algo == "hd" and n & (n - 1) == 0:
+        steps = int(math.log2(n))
+        if kind == "all-reduce":
+            return 2 * (payload * (n - 1) / n / bw) + 2 * steps * alpha
+        return payload * (n - 1) / n / bw + steps * alpha
+
+    rounds = 2.0 if kind == "all-reduce" else 1.0
+    return _ring_time(payload, n, bw, alpha, rounds)
+
+
+# ---------------------------------------------------------------------------
+# 2-D synthesized collectives (TACOS-like, for torus/wafer)
+# ---------------------------------------------------------------------------
+
+def _axis_groups(group: List[int], topo: Torus2D):
+    """Split a 2-D-embedded group into its x-rings and y-rings."""
+    coords = {r: topo._coord(r) for r in group}
+    rows = {}
+    cols = {}
+    for r, (x, y) in coords.items():
+        rows.setdefault(x, []).append(r)
+        cols.setdefault(y, []).append(r)
+    return list(rows.values()), list(cols.values())
+
+
+def synthesize_2d_time(kind: str, payload: float, group: List[int],
+                       topo: Torus2D) -> float:
+    """Dimension-ordered collective on a 2-D torus/mesh."""
+    rows, cols = _axis_groups(group, topo)
+    nr = max(len(r) for r in rows)
+    ncl = max(len(c) for c in cols)
+    alpha = topo.link_latency
+    bw = topo.link_bw * (2.0 if topo.wrap else 1.0)
+
+    if kind == "all-reduce":
+        # RS along rows, AR along cols on 1/nr of data, AG along rows
+        t = _ring_time(payload, nr, bw, alpha, 1.0)            # RS rows
+        t += _ring_time(payload / nr, ncl, bw, alpha, 2.0)     # AR cols
+        t += _ring_time(payload, nr, bw, alpha, 1.0)           # AG rows
+        return t
+    if kind in ("all-gather", "reduce-scatter"):
+        t = _ring_time(payload / ncl, nr, bw, alpha, 1.0)
+        t += _ring_time(payload, ncl, bw, alpha, 1.0)
+        return t
+    return _ring_time(payload, len(group), topo.ring_bw(group), alpha, 1.0)
+
+
+def synthesize_2d_p2p(kind: str, payload: float, group: List[int],
+                      topo: Torus2D) -> List[Tuple[int, int, float, int]]:
+    """Per-round (src, dst, bytes, round) messages of the 2-D synthesized
+    algorithm — a Chakra-graph-of-p2p representation (paper SS6.2)."""
+    rows, cols = _axis_groups(group, topo)
+    msgs = []
+    rnd = 0
+    for ring_set, frac in ((rows, 1.0), (cols, 1.0 / max(len(r) for r in rows))):
+        max_len = max(len(r) for r in ring_set)
+        for step in range(max_len - 1):
+            for ring in ring_set:
+                n = len(ring)
+                if n <= 1:
+                    continue
+                chunk = payload * frac / n
+                for i in range(n):
+                    msgs.append((ring[i], ring[(i + 1) % n], chunk, rnd + step))
+        rnd += max_len - 1
+    return msgs

@@ -1,0 +1,173 @@
+"""Topology models for the cost models (paper Fig 2 bottom box).
+
+Each topology answers: per-link bandwidth/latency, hop distance between
+ranks, and the effective ring bandwidth available to a group (used by the
+collective-time models).  TPU-native topologies (torus) and the paper's
+SS6.2 wafer-scale 2-D mesh are the same object modulo wraparound links.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+
+@dataclasses.dataclass
+class Topology:
+    n_ranks: int
+    link_bw: float            # bytes/s per link per direction
+    link_latency: float       # seconds per hop
+
+    name = "abstract"
+
+    def hop_distance(self, a: int, b: int) -> int:
+        raise NotImplementedError
+
+    def ring_bw(self, group: List[int]) -> float:
+        """Effective per-rank ring bandwidth for a collective over `group`."""
+        raise NotImplementedError
+
+    def bisection_bw(self) -> float:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class Switch(Topology):
+    """Non-blocking switch / fat tree: every rank has one NIC of link_bw."""
+    name = "switch"
+
+    def hop_distance(self, a, b):
+        return 2 if a != b else 0
+
+    def ring_bw(self, group):
+        return self.link_bw
+
+    def bisection_bw(self):
+        return self.link_bw * self.n_ranks / 2
+
+
+@dataclasses.dataclass
+class Ring(Topology):
+    name = "ring"
+
+    def hop_distance(self, a, b):
+        d = abs(a - b)
+        return min(d, self.n_ranks - d)
+
+    def ring_bw(self, group):
+        # contiguous group -> full link bw; strided group shares links
+        if len(group) < 2:
+            return self.link_bw
+        stride = abs(group[1] - group[0])
+        return self.link_bw / max(1, stride) if stride else self.link_bw
+
+    def bisection_bw(self):
+        return 2 * self.link_bw
+
+
+@dataclasses.dataclass
+class Torus2D(Topology):
+    """TPU-pod-style 2-D torus (wrap links); dims x*y == n_ranks.
+
+    Each rank has 4 links (2 per dimension).  A group that maps onto one
+    torus dimension gets a native ring; otherwise bw is derated by the
+    stride congestion."""
+    dims: Tuple[int, int] = (0, 0)
+    wrap: bool = True
+    name = "torus2d"
+
+    def __post_init__(self):
+        if self.dims == (0, 0):
+            side = int(math.sqrt(self.n_ranks))
+            self.dims = (side, self.n_ranks // side)
+
+    def _coord(self, r):
+        return divmod(r, self.dims[1])
+
+    def hop_distance(self, a, b):
+        (ax, ay), (bx, by) = self._coord(a), self._coord(b)
+        dx, dy = abs(ax - bx), abs(ay - by)
+        if self.wrap:
+            dx = min(dx, self.dims[0] - dx)
+            dy = min(dy, self.dims[1] - dy)
+        return dx + dy
+
+    def group_is_axis(self, group) -> bool:
+        xs = {self._coord(r)[0] for r in group}
+        ys = {self._coord(r)[1] for r in group}
+        return len(xs) == 1 or len(ys) == 1
+
+    def ring_bw(self, group):
+        # a group aligned with a torus axis rides the native ring links
+        # (both directions, wrap); unaligned groups get derated bw.
+        base = self.link_bw * (2.0 if self.wrap else 1.0)
+        if len(group) < 2 or self.group_is_axis(group):
+            return base
+        return base / 2.0
+
+    def bisection_bw(self):
+        mult = 2 if self.wrap else 1
+        return mult * min(self.dims) * self.link_bw
+
+
+@dataclasses.dataclass
+class Wafer2D(Torus2D):
+    """Wafer-scale 2-D mesh: same fabric, no wraparound (paper SS6.2)."""
+    wrap: bool = False
+    name = "wafer2d"
+
+
+@dataclasses.dataclass
+class MultiPod(Topology):
+    """Pods with an inner topology, connected by DCN (per-pod aggregate bw)."""
+    inner: Topology = None
+    n_pods: int = 2
+    dcn_bw: float = 12.5e9
+    dcn_latency: float = 10e-6
+    name = "multipod"
+
+    @property
+    def pod_size(self):
+        return self.n_ranks // self.n_pods
+
+    def pod_of(self, r):
+        return r // self.pod_size
+
+    def hop_distance(self, a, b):
+        if self.pod_of(a) == self.pod_of(b):
+            return self.inner.hop_distance(a % self.pod_size, b % self.pod_size)
+        return 4  # host -> DCN -> host
+
+    def ring_bw(self, group):
+        pods = {self.pod_of(r) for r in group}
+        if len(pods) == 1:
+            return self.inner.ring_bw([r % self.pod_size for r in group])
+        # cross-pod ring is limited by DCN
+        return self.dcn_bw
+
+    def bisection_bw(self):
+        return self.dcn_bw * self.n_pods / 2
+
+
+def build_topology(system, n_ranks: int = None) -> Topology:
+    """SystemConfig -> Topology."""
+    n = n_ranks or system.chips
+    kw = dict(n_ranks=n, link_bw=system.link_bw,
+              link_latency=system.link_latency)
+    t = system.topology
+    if t == "switch":
+        return Switch(**kw)
+    if t == "ring":
+        return Ring(**kw)
+    if t == "wafer2d":
+        return Wafer2D(**kw)
+    if t == "torus3d":
+        side = round(n ** (1 / 3))
+        return Torus2D(dims=(side, n // side), **kw)   # folded 3d approx
+    if t == "multipod":
+        side = int(math.sqrt(n // 2))
+        inner = Torus2D(n_ranks=n // 2, link_bw=system.link_bw,
+                        link_latency=system.link_latency)
+        return MultiPod(inner=inner, n_pods=2, dcn_bw=system.dcn_bw,
+                        dcn_latency=system.dcn_latency, **kw)
+    return Torus2D(**kw)

@@ -1,0 +1,120 @@
+"""Design-space exploration loop (paper Fig 5's purple feedback arrow).
+
+The knob space spans the paper's three layers:
+  workload  -- arch, shape, parallelization (needs *recapture*)
+  software  -- graph passes (reorder/bucketing), collective algorithm
+  hardware  -- topology, bandwidths, chip count
+
+explore() walks a knob grid; captures are cached by workload key (changing
+only system knobs reuses the captured graph — the paper's SS4.4 workflow
+distinction), cost-model evaluations are cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional
+
+from repro.core import chakra, passes
+from repro.core.costmodel.simulator import SimResult, simulate
+from repro.core.costmodel.topology import build_topology
+
+
+@dataclasses.dataclass
+class Knob:
+    name: str
+    values: list
+    layer: str = "software"       # workload | software | hardware
+
+
+@dataclasses.dataclass
+class Trial:
+    config: Dict
+    result: SimResult
+    objective: float
+
+    def as_dict(self):
+        return {"config": {k: str(v) for k, v in self.config.items()},
+                "objective": self.objective, **self.result.as_dict()}
+
+
+def apply_software_knobs(g: chakra.Graph, config: Dict) -> chakra.Graph:
+    """Standard software-layer knobs understood by the explorer."""
+    if config.get("fsdp_sync"):
+        g = passes.inject_fsdp_sync(g)
+    pf = config.get("prefetch")
+    if pf is not None:
+        g = passes.reorder_prefetch(g, prefetch=pf)
+    bb = config.get("bucket_bytes")
+    if bb:
+        g = passes.bucket_allreduce(g, bucket_bytes=bb)
+    return g
+
+
+def evaluate(g: chakra.Graph, system, config: Dict) -> SimResult:
+    sys2 = system
+    for k in ("topology", "collective_algo", "link_bw", "dcn_bw", "chips"):
+        if k in config:
+            sys2 = sys2.replace(**{k: config[k]})
+    g2 = apply_software_knobs(g, config)
+    topo = build_topology(sys2)
+    return simulate(g2, sys2, topo, algo=sys2.collective_algo)
+
+
+def explore(graph_for: Callable[[Dict], chakra.Graph], system,
+            knobs: List[Knob], objective: str = "total_time",
+            strategy: str = "grid", budget: int = 256) -> List[Trial]:
+    """graph_for(workload_config) -> Chakra graph (cached by key).
+
+    Returns trials sorted by objective (ascending)."""
+    wl_knobs = [k for k in knobs if k.layer == "workload"]
+    other = [k for k in knobs if k.layer != "workload"]
+    cache: Dict = {}
+    trials: List[Trial] = []
+
+    def wl_key(cfg):
+        return tuple(sorted((k.name, str(cfg.get(k.name))) for k in wl_knobs))
+
+    combos = itertools.product(*[[(k.name, v) for v in k.values]
+                                 for k in knobs]) if knobs else [()]
+    for combo in itertools.islice(combos, budget):
+        cfg = dict(combo)
+        key = wl_key(cfg)
+        if key not in cache:
+            cache[key] = graph_for(cfg)            # recapture only on workload change
+        res = evaluate(cache[key], system, cfg)
+        obj = getattr(res, objective)
+        trials.append(Trial(cfg, res, obj))
+    trials.sort(key=lambda t: t.objective)
+    return trials
+
+
+def greedy_descent(graph_for, system, knobs: List[Knob],
+                   objective: str = "total_time", rounds: int = 3) -> Trial:
+    """Coordinate-descent search: sweep one knob at a time, keep the best."""
+    current = {k.name: k.values[0] for k in knobs}
+    cache: Dict = {}
+
+    def eval_cfg(cfg):
+        key = tuple(sorted((k.name, str(cfg.get(k.name))) for k in knobs
+                           if k.layer == "workload"))
+        if key not in cache:
+            cache[key] = graph_for(cfg)
+        res = evaluate(cache[key], system, cfg)
+        return Trial(dict(cfg), res, getattr(res, objective))
+
+    best = eval_cfg(current)
+    for _ in range(rounds):
+        improved = False
+        for k in knobs:
+            for v in k.values:
+                if v == current[k.name]:
+                    continue
+                cand = dict(current)
+                cand[k.name] = v
+                t = eval_cfg(cand)
+                if t.objective < best.objective:
+                    best, current, improved = t, cand, True
+        if not improved:
+            break
+    return best

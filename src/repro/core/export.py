@@ -1,0 +1,103 @@
+"""Per-rank Chakra ET export (paper P1: feed *external* cost models).
+
+The SPMD capture yields one rank-symmetric graph; Chakra consumers
+(ASTRA-sim, Genie, KAIDCB) want one execution trace per rank with
+rank-specific collective peers.  expand_ranks() rewrites each COMM_COLL
+node's group to the group containing that rank (from the compiled replica
+groups) and stamps rank metadata; write_et() emits one JSON file per rank
+plus a workload manifest.
+
+Collectives can optionally be expanded to point-to-point COMM_SEND/RECV
+nodes (algo="ring"/"hd") — the representation the paper uses for custom
+collectives (SS6.2) and network emulation (SS6.3).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional
+
+from repro.core import chakra
+from repro.core.convert import expand_collective_p2p
+
+
+def _group_for_rank(node: chakra.Node, rank: int, num_ranks: int) -> List[int]:
+    """Shift the canonical replica group to the one containing `rank`.
+
+    Rank-symmetric SPMD replica groups partition the ranks with a uniform
+    (stride, size) shape, so the group of `rank` preserves the canonical
+    group's offsets modulo the group period."""
+    g = node.attrs.get("group") or list(range(num_ranks))
+    if rank in g or len(g) < 2:
+        return g if rank in g else [rank]
+    stride = g[1] - g[0]
+    if stride == 1:
+        # contiguous blocks: the group is rank's block of len(g)
+        anchor = (rank // len(g)) * len(g)
+        return [anchor + (m - g[0]) for m in g]
+    # strided groups: members congruent to rank modulo the stride
+    delta = (rank - g[0]) % stride
+    return [m + delta for m in g]
+
+
+def expand_ranks(g: chakra.Graph, ranks: Optional[List[int]] = None,
+                 p2p_algo: Optional[str] = None) -> List[chakra.Graph]:
+    """One Graph per rank with rank-local collective groups (optionally
+    expanded to send/recv chains)."""
+    num_ranks = int(g.meta.get("num_partitions", 1))
+    ranks = ranks if ranks is not None else list(range(num_ranks))
+    out = []
+    for rank in ranks:
+        gr = chakra.Graph(meta={**g.meta, "rank": rank})
+        remap = {}
+        for n in g.nodes:
+            deps = [remap[d] for d in n.deps if d in remap]
+            ctrl = [remap[d] for d in n.ctrl_deps if d in remap]
+            if n.type == chakra.COMM_COLL:
+                group = _group_for_rank(n, rank, num_ranks)
+                if p2p_algo:
+                    msgs = expand_collective_p2p(
+                        n.attrs.get("comm_kind", "all-reduce"),
+                        n.attrs.get("comm_bytes", 0.0), group, p2p_algo)
+                    last = None
+                    for (src, dst, size, rnd) in msgs:
+                        if src != rank and dst != rank:
+                            continue
+                        t = chakra.COMM_SEND if src == rank else chakra.COMM_RECV
+                        nid = gr.add(f"{n.name}.r{rnd}.{src}->{dst}", t,
+                                     deps=deps if last is None else [last],
+                                     comm_bytes=size, peer=(dst if src == rank
+                                                            else src),
+                                     round=rnd, parent=n.name)
+                        last = nid
+                    remap[n.id] = last if last is not None else gr.add(
+                        n.name, chakra.MEM, deps=deps)
+                    continue
+                nid = gr.add(n.name, n.type, deps=deps, ctrl_deps=ctrl,
+                             **{**n.attrs, "group": group})
+            else:
+                nid = gr.add(n.name, n.type, deps=deps, ctrl_deps=ctrl,
+                             **n.attrs)
+            remap[n.id] = nid
+        gr.validate()
+        out.append(gr)
+    return out
+
+
+def write_et(g: chakra.Graph, out_dir: str,
+             ranks: Optional[List[int]] = None,
+             p2p_algo: Optional[str] = None) -> List[str]:
+    """Write one <out_dir>/rank_<r>.et.json per rank + manifest.json."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    graphs = expand_ranks(g, ranks, p2p_algo)
+    for gr in graphs:
+        p = os.path.join(out_dir, f"rank_{gr.meta['rank']:05d}.et.json")
+        gr.save(p)
+        paths.append(p)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"schema": "flint-chakra-et-v1",
+                   "num_partitions": g.meta.get("num_partitions", 1),
+                   "ranks": [gr.meta["rank"] for gr in graphs],
+                   "totals": g.totals()}, f, indent=1)
+    return paths

@@ -1,0 +1,152 @@
+"""Chakra graph passes — the DSE transforms of paper SS2.2/SS6.1.
+
+All passes preserve data deps (`deps`); they only add/remove/retarget
+control deps (`ctrl_deps`) or merge COMM nodes whose data deps allow it.
+That invariant is what compiler-IR capture buys us: CUDA-API traces can't
+tell which edges are droppable (paper Fig 3b).
+
+  inject_fsdp_sync   -- model the *original* FSDP schedule: each weight
+                        all-gather waits for the previous layer's compute
+                        (bounds live memory, exposes communication).
+  reorder_prefetch   -- SimpleFSDP-style reordering: retarget each
+                        all-gather's ctrl dep k layers earlier so it overlaps
+                        with earlier compute (costs memory: weights live
+                        longer).
+  bucket_allreduce   -- DDP gradient bucketing: merge small all-reduces into
+                        fewer, larger ones (latency amortization).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core import chakra
+
+
+def _comm_nodes(g: chakra.Graph, kind: str) -> List[chakra.Node]:
+    return [n for n in g.by_type(chakra.COMM_COLL)
+            if n.attrs.get("comm_kind") == kind]
+
+
+def _comp_in_program_order(g: chakra.Graph) -> List[int]:
+    # node ids follow HLO instruction emission order = program order
+    return [n.id for n in g.nodes if n.type == chakra.COMP
+            and n.attrs.get("flops", 0) > 0]
+
+
+def inject_fsdp_sync(g: chakra.Graph, kind: str = "all-gather") -> chakra.Graph:
+    """Serialize each `kind` collective after the previous one's consumers'
+    compute — the sync edges the original FSDP runtime adds (Fig 3b top)."""
+    g = g.copy()
+    comms = sorted(_comm_nodes(g, kind), key=lambda n: n.id)
+    comps = _comp_in_program_order(g)
+    for i, c in enumerate(comms):
+        if i == 0:
+            continue
+        # the last compute node that appears before this collective
+        prior = [nid for nid in comps if nid < c.id]
+        if prior:
+            c.ctrl_deps.append(prior[-1])
+    g.meta["pass.fsdp_sync"] = True
+    g.validate()
+    return g
+
+
+def reorder_prefetch(g: chakra.Graph, prefetch: int = 2,
+                     kind: str = "all-gather") -> chakra.Graph:
+    """Retarget each `kind` collective's ctrl deps `prefetch` collectives
+    earlier (Fig 3b bottom).  prefetch >= len(comms) removes all sync edges."""
+    g = g.copy()
+    comms = sorted(_comm_nodes(g, kind), key=lambda n: n.id)
+    comps = _comp_in_program_order(g)
+    for i, c in enumerate(comms):
+        c.ctrl_deps = []
+        j = i - prefetch
+        if j >= 0:
+            prior = [nid for nid in comps if nid < comms[j].id]
+            if prior:
+                c.ctrl_deps.append(prior[-1])
+    g.meta["pass.reorder_prefetch"] = prefetch
+    g.validate()
+    return g
+
+
+def bucket_allreduce(g: chakra.Graph, bucket_bytes: float = 32e6,
+                     kind: str = "all-reduce") -> chakra.Graph:
+    """Merge consecutive small `kind` collectives into buckets.
+
+    The merged node depends on the union of member data deps; members'
+    consumers are redirected to the bucket (correct because all members'
+    payloads become available together)."""
+    g2 = g.copy()
+    order = g2.topo_order()
+    pos = {nid: i for i, nid in enumerate(order)}
+    comms = sorted((n for n in _comm_nodes(g2, kind)), key=lambda n: pos[n.id])
+    if not comms:
+        return g2
+
+    # ancestry among candidate collectives: merging A and B where A is an
+    # ancestor of B would create a cycle (A -> ... -> B's dep -> bucket -> A)
+    member_ids = {n.id for n in comms}
+    anc: dict = {}
+    for nid in order:
+        s = set()
+        for d in g2.node(nid).all_deps:
+            s |= anc.get(d, set())
+            if d in member_ids:
+                s.add(d)
+        anc[nid] = s
+
+    buckets: List[List[chakra.Node]] = [[]]
+    acc = 0.0
+    for c in comms:
+        b = c.attrs.get("comm_bytes", 0.0)
+        conflict = any(m.id in anc[c.id] for m in buckets[-1])
+        if buckets[-1] and (acc + b > bucket_bytes or conflict):
+            buckets.append([])
+            acc = 0.0
+        buckets[-1].append(c)
+        acc += b
+
+    replaced = {}
+    for bucket in buckets:
+        if len(bucket) <= 1:
+            continue
+        deps = sorted({d for n in bucket for d in n.deps})
+        ctrl = sorted({d for n in bucket for d in n.ctrl_deps})
+        payload = sum(n.attrs.get("comm_bytes", 0.0) for n in bucket)
+        nid = g2.add(f"bucket[{len(bucket)}]{kind}", chakra.COMM_COLL,
+                     deps=deps, ctrl_deps=ctrl, comm_kind=kind,
+                     comm_bytes=payload,
+                     group_size=bucket[0].attrs.get("group_size", 1),
+                     n_groups=bucket[0].attrs.get("n_groups", 1),
+                     bucketed=len(bucket))
+        for n in bucket:
+            replaced[n.id] = nid
+
+    if not replaced:
+        return g2
+    # redirect consumers, neutralize replaced nodes
+    for n in g2.nodes:
+        if n.id in replaced or n.id in set(replaced.values()):
+            continue
+        n.deps = sorted({replaced.get(d, d) for d in n.deps})
+        n.ctrl_deps = sorted({replaced.get(d, d) for d in n.ctrl_deps
+                              if replaced.get(d, d) != n.id})
+    for old in replaced:
+        n = g2.node(old)
+        n.type = chakra.MEM
+        n.attrs = {"merged_into": replaced[old], "comm_bytes": 0.0,
+                   "bytes": 0.0, "flops": 0.0}
+        n.deps, n.ctrl_deps = [], []
+    g2.meta["pass.bucket_allreduce"] = bucket_bytes
+    g2.validate()
+    return g2
+
+
+def strip_ctrl_deps(g: chakra.Graph) -> chakra.Graph:
+    """Pure data-dependency view (what compiler-IR capture uniquely gives)."""
+    g = g.copy()
+    for n in g.nodes:
+        n.ctrl_deps = []
+    g.meta["pass.strip_ctrl"] = True
+    return g

@@ -1,0 +1,44 @@
+"""jit'd wrappers around the Pallas kernels (the ops.py contract).
+
+These adapt model-layer layouts to kernel layouts and expose the
+interpret=True escape hatch used for CPU validation.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.rglru import rglru_scan_tpu
+from repro.kernels.ssd import ssd_tpu
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "scale", "interpret",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    interpret=False, block_q=512, block_k=512):
+    """Model layout q (B,S,KV,G,hd); k/v (B,S,KV,hd) -> (B,S,KV,G,hd)."""
+    B, S, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    qf = jnp.moveaxis(q, 1, 3).reshape(B * KV * G, S, hd)
+    kf = jnp.moveaxis(k, 1, 2).reshape(B * KV, Sk, hd)
+    vf = jnp.moveaxis(v, 1, 2).reshape(B * KV, Sk, hd)
+    o = flash_attention_tpu(qf, kf, vf, scale=scale, causal=causal,
+                            window=window, interpret=interpret,
+                            block_q=block_q, block_k=block_k)
+    return jnp.moveaxis(o.reshape(B, KV, G, S, hd), 3, 1)
+
+
+@partial(jax.jit, static_argnames=("interpret", "block_t", "block_c"))
+def rglru_scan(a, b, *, interpret=False, block_t=256, block_c=512):
+    """(B,S,C) f32 recurrence coefficients -> h (B,S,C)."""
+    return rglru_scan_tpu(a, b, block_t=block_t, block_c=block_c,
+                          interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, B, C, *, chunk=256, interpret=False):
+    """Mamba2 SSD; returns (y, S_final)."""
+    return ssd_tpu(x, dt, A, B, C, chunk=chunk, interpret=interpret)

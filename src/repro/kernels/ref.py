@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the ref.py contract).
+
+These are the definitions of correctness: kernels/tests assert_allclose
+against them across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_oracle(q, k, v, *, scale=None, causal=True, window=0):
+    """q (BH, Sq, hd); k/v (BKV, Sk, hd), BH = BKV*G.  Materialized softmax."""
+    BH, Sq, hd = q.shape
+    BKV, Sk, _ = k.shape
+    G = BH // BKV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kx = jnp.repeat(k, G, axis=0)
+    vx = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("bqh,bsh->bqs", q, kx).astype(jnp.float32) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None], s, -2.0e38)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqs,bsh->bqh", w.astype(vx.dtype), vx)
+
+
+def rglru_scan_oracle(a, b):
+    """Sequential linear recurrence h_t = a_t h_{t-1} + b_t.  (B,S,C) f32."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    _, h = jax.lax.scan(step, jnp.zeros_like(a32[:, 0]),
+                        (jnp.moveaxis(a32, 1, 0), jnp.moveaxis(b32, 1, 0)))
+    return jnp.moveaxis(h, 0, 1)
+
+
+def ssd_oracle(x, dt, A, B, C):
+    """Fully sequential SSD recurrence (the definition).
+
+    x (b,s,h,p); dt (b,s,h); A (h,); B,C (b,s,n).
+    Returns (y (b,s,h,p), S_final (b,h,n,p))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(S_prev, inp):
+        xt, dtt, Bt, Ct = inp                     # (b,h,p),(b,h),(b,n),(b,n)
+        decay = jnp.exp(dtt * A[None, :])         # (b,h)
+        dBx = jnp.einsum("bn,bhp->bhnp", Bt, xt) * dtt[:, :, None, None]
+        S = S_prev * decay[:, :, None, None] + dBx
+        y = jnp.einsum("bn,bhnp->bhp", Ct, S)
+        return S, y
+
+    S0 = jnp.zeros((b, h, n, p), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    S_fin, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), S_fin

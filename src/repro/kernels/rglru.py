@@ -1,0 +1,66 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + b_t  (elementwise over the channel dim).
+
+TPU adaptation: the GPU version of this scan is a warp-parallel chunked scan;
+on TPU the natural form is a *sequential* grid walk over time blocks with the
+carry state resident in VMEM scratch (the VPU processes the full channel
+block per step, so sequential-in-time costs S/bt grid steps of vectorized
+work).  Grid (batch, channel_blocks, time_blocks), time innermost; inside a
+block a fori_loop advances bt steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, o_ref, h_scr, *, block_t):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0]                       # (bt, bc) f32
+    b = b_ref[0]
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t] = h
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, step, h_scr[0], unroll=8)
+    h_scr[0] = h
+
+
+def rglru_scan_tpu(a, b, *, block_t=256, block_c=512, interpret=False):
+    """a, b (B, S, C) f32 -> h (B, S, C)."""
+    B, S, C = a.shape
+    block_t = min(block_t, S)
+    block_c = min(block_c, C)
+    pt, pc = (-S) % block_t, (-C) % block_c
+    if pt or pc:
+        a = jnp.pad(a, ((0, 0), (0, pt), (0, pc)))
+        b = jnp.pad(b, ((0, 0), (0, pt), (0, pc)))
+    nt, nc = (S + pt) // block_t, (C + pc) // block_c
+
+    kernel = functools.partial(_kernel, block_t=block_t)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nc, nt),
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_c), lambda bi, ci, ti: (bi, ti, ci)),
+            pl.BlockSpec((1, block_t, block_c), lambda bi, ci, ti: (bi, ti, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, block_c),
+                               lambda bi, ci, ti: (bi, ti, ci)),
+        out_shape=jax.ShapeDtypeStruct((B, S + pt, C + pc), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, block_c), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+    return out[:, :S, :C]

@@ -1,0 +1,85 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every dry-run
+cell — weak-type-correct, shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models.layers import abstract_from_specs, logical_axes_from_specs
+from repro.models.model import Model
+from repro.parallel.sharding import (activation_rules, batch_specs,
+                                     param_rules, resolve_spec, tree_shardings)
+from repro.train.optimizer import abstract_opt_state, opt_state_logical_axes
+from repro.train.train_step import TrainState
+
+
+def parallel_for_cell(cfg: ModelConfig, shape: ShapeConfig,
+                      base: ParallelConfig = None) -> ParallelConfig:
+    par = base or ParallelConfig()
+    if shape.kind == "train":
+        par = par.replace(remat="full")
+    if shape.name == "long_500k":
+        par = par.replace(seq_shard_cache=True)
+    return par
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                parallel: ParallelConfig = None) -> Tuple:
+    """Returns (abstract_args, in_shardings, model, parallel, donate) for the
+    step function of this cell's kind."""
+    parallel = parallel_for_cell(cfg, shape, parallel)
+    model = Model(cfg)
+    p_rules = param_rules(parallel)
+    a_rules = activation_rules(parallel)
+
+    pspecs = model.param_specs()
+    params_abs = abstract_from_specs(pspecs)
+    params_sh = tree_shardings(mesh, pspecs, p_rules)
+
+    bspecs = batch_specs(cfg, shape, model)
+    batch_abs = abstract_from_specs(bspecs)
+    batch_sh = tree_shardings(mesh, bspecs, a_rules)
+
+    if shape.kind == "train":
+        opt_abs = abstract_opt_state(params_abs)
+        opt_ax = opt_state_logical_axes(model.param_logical_axes())
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        opt_sh = type(opt_abs)(
+            step=NamedSharding(mesh, P()),
+            mu=jax.tree_util.tree_map(
+                lambda sh: sh, params_sh),
+            nu=jax.tree_util.tree_map(lambda sh: sh, params_sh))
+        state_abs = TrainState(params=params_abs, opt=opt_abs, err={})
+        state_sh = TrainState(params=params_sh, opt=opt_sh, err={})
+        return (state_abs, batch_abs), (state_sh, batch_sh), model, parallel, (0,)
+
+    if shape.kind == "prefill":
+        args = [params_abs, batch_abs["tokens"]]
+        shard = [params_sh, batch_sh["tokens"]]
+        if "memory" in batch_abs:
+            args.append(batch_abs["memory"])
+            shard.append(batch_sh["memory"])
+        return tuple(args), tuple(shard), model, parallel, ()
+
+    # decode: one token against a filled cache of shape.seq_len
+    cspecs = model.cache_specs(shape.global_batch, shape.seq_len)
+    cache_abs = abstract_from_specs(cspecs)
+    cache_sh = tree_shardings(mesh, cspecs, a_rules)
+    args = (params_abs, batch_abs["token"], cache_abs)
+    shard = (params_sh, batch_sh["token"], cache_sh)
+    return args, shard, model, parallel, (2,)
+
+
+def step_fn_for(model: Model, shape: ShapeConfig, parallel: ParallelConfig,
+                mesh, opt_cfg=None):
+    from repro.train.serve_step import make_decode_step, make_forward_step
+    from repro.train.train_step import make_train_step
+    from repro.train.optimizer import OptConfig
+    if shape.kind == "train":
+        return make_train_step(model, opt_cfg or OptConfig(), parallel, mesh)
+    if shape.kind == "prefill":
+        return make_forward_step(model, parallel, mesh)
+    return make_decode_step(model, parallel, mesh)

@@ -1,0 +1,3 @@
+from repro.models.model import Model, Ctx, build_model
+
+__all__ = ["Model", "Ctx", "build_model"]

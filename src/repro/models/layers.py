@@ -1,0 +1,141 @@
+"""Common layers + the ParamSpec system.
+
+Every parameter is declared once as a ParamSpec carrying (shape, dtype,
+logical_axes, init).  From the same spec tree we derive:
+  * materialized parameters      (init_params)
+  * NamedShardings for pjit      (parallel/sharding.py maps logical -> mesh)
+  * ShapeDtypeStructs            (abstract init for the cluster-free dry-run)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical_axes: tuple           # logical axis name (or None) per dim
+    dtype: jnp.dtype = jnp.bfloat16
+    init: str = "normal"          # normal | zeros | ones | rglru_a
+    scale: float = 1.0            # stddev multiplier for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (self.shape, self.logical_axes)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def materialize(self, key) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "rglru_a":
+            # Griffin: a = sigmoid(lambda) in [0.9, 0.999] -> init lambda accordingly
+            u = jax.random.uniform(key, self.shape, jnp.float32, 0.9, 0.999)
+            return jnp.log(u / (1 - u)).astype(self.dtype)
+        fan_in = self.shape[0] if self.shape else 1
+        std = self.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.truncated_normal(key, -2.0, 2.0, self.shape, jnp.float32)
+                * std).astype(self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_paths(tree):
+    return jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_spec)
+
+
+def init_from_specs(specs, rng):
+    """Materialize a ParamSpec tree into a parameter pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [s.materialize(k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_from_specs(specs):
+    return jax.tree_util.tree_map(lambda s: s.abstract(), specs, is_leaf=is_spec)
+
+
+def logical_axes_from_specs(specs):
+    return jax.tree_util.tree_map(lambda s: s.logical_axes, specs, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# functional layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    # variance reduction in f32, elementwise product in the input dtype:
+    # keeps the tensor crossing GSPMD sharding boundaries bf16 (f32 residual
+    # activations would double every SP all-gather/reduce-scatter payload).
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + scale).astype(x.dtype)
+
+
+def rms_norm_specs(dim, axes=(None,)):
+    return {"scale": ParamSpec((dim,), axes, init="zeros")}
+
+
+def soft_cap(x, cap):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def rope(x, positions, theta):
+    """Rotary embedding.  x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq      # (..., S, half)
+    ang = ang[..., :, None, :]                                    # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- gated MLP (SwiGLU / GeGLU) ---------------------------------------------
+
+def mlp_specs(d_model, d_ff):
+    return {
+        "wi": ParamSpec((d_model, d_ff), ("embed", "ff")),
+        "wg": ParamSpec((d_model, d_ff), ("embed", "ff")),
+        "wo": ParamSpec((d_ff, d_model), ("ff", "embed")),
+    }
+
+
+def mlp_apply(p, x, act, ctx):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    h = h * g
+    h = ctx.shard(h, "batch", "seq", "ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# -- embedding ---------------------------------------------------------------
+
+def embed_specs(vocab, d_model):
+    return {"table": ParamSpec((vocab, d_model), ("vocab", "embed"), scale=1.0)}
+
+
+def embed_apply(p, tokens, d_model):
+    h = jnp.take(p["table"], tokens, axis=0)
+    return (h.astype(jnp.float32) * math.sqrt(d_model)).astype(p["table"].dtype)
+
+
+def unembed_apply(table, h, cap=0.0):
+    logits = jnp.einsum("bsd,vd->bsv", h, table).astype(jnp.float32)
+    return soft_cap(logits, cap)

@@ -1,0 +1,428 @@
+"""Unified model assembly + API for all 10 assigned architectures.
+
+Structure: embed -> [encoder stack (enc-dec only)] -> scan over superblocks
+(+ unrolled remainder layers) -> final norm -> unembed.
+
+The layer pattern comes from ModelConfig.superblock/remainder; each slot is a
+residual block: ln -> mixer (attention | rglru | ssd) [+ cross-attn sub-layer
+for enc-dec] [+ ln -> mlp/moe].  Scanned layers hold parameters stacked along
+a leading "layers" axis so the lowered HLO stays small at any depth.
+
+API (all pure functions of pytrees — pjit-ready):
+  param_specs / init / abstract_params
+  apply(params, tokens, ...)            full-sequence forward -> logits
+  loss(params, batch)                   next-token CE (+ MoE aux)
+  init_cache / cache_specs              decode cache pytrees
+  prefill(params, tokens, ...)          forward + packed decode cache
+  decode_step(params, token, cache)     one-token serving step
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, ATTENTION_KINDS, GLOBAL_ATTN,
+                                LOCAL_ATTN, CROSS_ATTN, RGLRU, SSD, ENC_ATTN)
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (ParamSpec, abstract_from_specs, embed_apply,
+                                 embed_specs, init_from_specs, is_spec,
+                                 logical_axes_from_specs, mlp_apply, mlp_specs,
+                                 rms_norm, rms_norm_specs, soft_cap,
+                                 unembed_apply)
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-call context: sharding hook + implementation choices."""
+    attn_impl: str = "xla"             # xla | pallas | interpret | naive
+    q_block: int = 512
+    kv_block: int = 1024
+    remat: str = "none"                # none | dots | full
+    shard_fn: Optional[Callable] = None
+    moe_groups: int = 1                # MoE dispatch groups (= DP degree)
+
+    def shard(self, x, *axes):
+        if self.shard_fn is None:
+            return x
+        return self.shard_fn(x, axes)
+
+
+# ---------------------------------------------------------------------------
+# per-layer specs / apply
+# ---------------------------------------------------------------------------
+
+def layer_specs(cfg: ModelConfig, kind: str):
+    d = cfg.d_model
+    s: dict = {"ln1": rms_norm_specs(d, ("embed",))}
+    if kind in ATTENTION_KINDS:
+        s["attn"] = attn.attention_specs(cfg, cross=(kind == CROSS_ATTN))
+    elif kind == RGLRU:
+        s["mixer"] = rglru_mod.rglru_specs(cfg)
+    elif kind == SSD:
+        s["mixer"] = ssm_mod.ssd_specs(cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.is_encdec and kind == GLOBAL_ATTN:
+        s["ln_x"] = rms_norm_specs(d, ("embed",))
+        s["xattn"] = attn.attention_specs(cfg, cross=True)
+    if cfg.d_ff:
+        s["ln2"] = rms_norm_specs(d, ("embed",))
+        if cfg.num_experts and kind != CROSS_ATTN:
+            s["moe"] = moe_mod.moe_specs(cfg)
+        else:
+            s["mlp"] = mlp_specs(d, cfg.d_ff)
+    return s
+
+
+def apply_layer(p, h, kind, cfg, ctx, memory=None, positions=None,
+                collect_cache=False, cache_len=0):
+    """Residual block.  Returns (h, aux_loss, cache|None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = {}
+    a_in = rms_norm(h, p["ln1"]["scale"], cfg.norm_eps)
+    if kind in ATTENTION_KINDS:
+        mem = memory if kind == CROSS_ATTN else None
+        out, (k, v) = attn.attention_apply(p["attn"], a_in, cfg, ctx, kind,
+                                           memory=mem, positions=positions)
+        if collect_cache:
+            cache["attn"] = attn.pack_prefill_cache(k, v, kind, cfg, cache_len)
+    elif kind == RGLRU:
+        out, c = rglru_mod.rglru_block_apply(p["mixer"], a_in, cfg, ctx,
+                                             collect_cache)
+        if collect_cache:
+            cache["mixer"] = c
+    elif kind == SSD:
+        out, c = ssm_mod.ssd_block_apply(p["mixer"], a_in, cfg, ctx,
+                                         collect_cache)
+        if collect_cache:
+            cache["mixer"] = c
+    h = h + out
+
+    if cfg.is_encdec and kind == GLOBAL_ATTN and memory is not None:
+        x_in = rms_norm(h, p["ln_x"]["scale"], cfg.norm_eps)
+        out, (xk, xv) = attn.attention_apply(p["xattn"], x_in, cfg, ctx,
+                                             CROSS_ATTN, memory=memory)
+        if collect_cache:
+            cache["xattn"] = attn.pack_prefill_cache(xk, xv, CROSS_ATTN, cfg, 0)
+        h = h + out
+
+    if cfg.d_ff:
+        m_in = rms_norm(h, p["ln2"]["scale"], cfg.norm_eps)
+        if "moe" in p:
+            m, aux = moe_mod.moe_apply(p["moe"], m_in, cfg, ctx)
+        else:
+            m = mlp_apply(p["mlp"], m_in, cfg.act, ctx)
+        h = h + m
+    h = ctx.shard(h, "batch", "seq", "embed")
+    return h, aux, (cache if collect_cache else None)
+
+
+def apply_layer_decode(p, h, layer_cache, pos, kind, cfg, ctx, memory=None):
+    """One-token residual block.  h (B,1,D).  Returns (h, new_cache)."""
+    new_cache = dict(layer_cache)
+    a_in = rms_norm(h, p["ln1"]["scale"], cfg.norm_eps)
+    if kind in ATTENTION_KINDS:
+        out, new_cache["attn"] = attn.attention_decode(
+            p["attn"], a_in, layer_cache["attn"], pos, cfg, ctx,
+            "cross" if kind == CROSS_ATTN else kind)
+    elif kind == RGLRU:
+        out, new_cache["mixer"] = rglru_mod.rglru_block_decode(
+            p["mixer"], a_in, layer_cache["mixer"], cfg, ctx)
+    elif kind == SSD:
+        out, new_cache["mixer"] = ssm_mod.ssd_block_decode(
+            p["mixer"], a_in, layer_cache["mixer"], cfg, ctx)
+    h = h + out
+
+    if cfg.is_encdec and kind == GLOBAL_ATTN and "xattn" in p:
+        x_in = rms_norm(h, p["ln_x"]["scale"], cfg.norm_eps)
+        out, new_cache["xattn"] = attn.attention_decode(
+            p["xattn"], x_in, layer_cache["xattn"], pos, cfg, ctx, "cross")
+        h = h + out
+
+    if cfg.d_ff:
+        m_in = rms_norm(h, p["ln2"]["scale"], cfg.norm_eps)
+        if "moe" in p:
+            m, _ = moe_mod.moe_apply(p["moe"], m_in, cfg, ctx)
+        else:
+            m = mlp_apply(p["mlp"], m_in, cfg.act, ctx)
+        h = h + m
+    return h, new_cache
+
+
+def init_layer_cache_specs(cfg, kind, batch, cache_len):
+    """ParamSpec tree for one layer's decode cache."""
+    c: dict = {}
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    if kind in ATTENTION_KINDS:
+        if kind == LOCAL_ATTN:
+            L = min(cfg.local_window, cache_len)
+        elif kind == CROSS_ATTN:
+            L = cfg.context_tokens or cfg.encoder_len
+        else:
+            L = cache_len
+        kvspec = ParamSpec((batch, L, kv, hd), ("batch", "cache", "kv_heads", None),
+                           init="zeros")
+        c["attn"] = {"k": kvspec, "v": kvspec}
+    elif kind == RGLRU:
+        dr = cfg.d_rnn
+        c["mixer"] = {
+            "h": ParamSpec((batch, dr), ("batch", "inner"), init="zeros",
+                           dtype=jnp.float32),
+            "conv": ParamSpec((batch, cfg.rglru_conv_width - 1, dr),
+                              ("batch", None, "inner"), init="zeros"),
+        }
+    elif kind == SSD:
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        c["mixer"] = {
+            "state": ParamSpec((batch, cfg.ssm_heads, cfg.ssm_state,
+                                cfg.ssm_head_dim),
+                               ("batch", "heads", None, None), init="zeros",
+                               dtype=jnp.float32),
+            "conv": ParamSpec((batch, cfg.conv_width - 1, conv_dim),
+                              ("batch", None, "inner"), init="zeros"),
+        }
+    if cfg.is_encdec and kind == GLOBAL_ATTN:
+        M = cfg.encoder_len
+        kvspec = ParamSpec((batch, M, kv, hd), ("batch", "cache", "kv_heads", None),
+                           init="zeros")
+        c["xattn"] = {"k": kvspec, "v": kvspec}
+    return c
+
+
+# ---------------------------------------------------------------------------
+# spec stacking (scan-over-superblocks)
+# ---------------------------------------------------------------------------
+
+def stack_specs(specs, n):
+    def f(s: ParamSpec):
+        return ParamSpec((n,) + tuple(s.shape), ("layers",) + tuple(s.logical_axes),
+                         dtype=s.dtype, init=s.init, scale=s.scale)
+    return jax.tree_util.tree_map(f, specs, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- parameters ---------------------------------------------------------
+    def param_specs(self):
+        cfg = self.cfg
+        specs: dict = {"embed": embed_specs(cfg.vocab_size, cfg.d_model),
+                       "final_norm": rms_norm_specs(cfg.d_model, ("embed",))}
+        if not cfg.tie_embeddings:
+            specs["unembed"] = {
+                "table": ParamSpec((cfg.vocab_size, cfg.d_model),
+                                   ("vocab", "embed"))}
+        blocks: dict = {}
+        if cfg.sb_repeat:
+            sb = {f"slot{i}": layer_specs(cfg, k)
+                  for i, k in enumerate(cfg.superblock)}
+            blocks["sb"] = stack_specs(sb, cfg.sb_repeat)
+        for i, k in enumerate(cfg.remainder):
+            blocks[f"rem{i}"] = layer_specs(cfg, k)
+        specs["blocks"] = blocks
+        if cfg.is_encdec:
+            enc = {"slot0": layer_specs(cfg, ENC_ATTN)}
+            specs["encoder"] = {
+                "sb": stack_specs(enc, cfg.encoder_layers),
+                "final_norm": rms_norm_specs(cfg.d_model, ("embed",)),
+            }
+        return specs
+
+    def init(self, rng):
+        return init_from_specs(self.param_specs(), rng)
+
+    def abstract_params(self):
+        return abstract_from_specs(self.param_specs())
+
+    def param_logical_axes(self):
+        return logical_axes_from_specs(self.param_specs())
+
+    # -- encoder (enc-dec only) ---------------------------------------------
+    def encode(self, params, memory_embeds, ctx):
+        cfg = self.cfg
+        h = memory_embeds
+
+        def body(carry, p_sb):
+            x, _ = carry
+            x, _, _ = apply_layer(p_sb["slot0"], x, ENC_ATTN, cfg, ctx)
+            return (x, 0.0), None
+
+        body = _maybe_remat(body, ctx)
+        (h, _), _ = jax.lax.scan(body, (h, 0.0), params["encoder"]["sb"])
+        return rms_norm(h, params["encoder"]["final_norm"]["scale"], cfg.norm_eps)
+
+    # -- full-sequence forward ----------------------------------------------
+    def apply(self, params, tokens, ctx, memory=None, collect_cache=False,
+              cache_len=0):
+        """tokens (B,S) -> logits (B,S,V).  memory: stub frontend embeddings.
+
+        With collect_cache=True also returns the packed decode cache
+        (pos field excluded; see prefill())."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        h = embed_apply(params["embed"], tokens, cfg.d_model)
+        h = ctx.shard(h, "batch", "seq", "embed")
+        positions = jnp.arange(S)[None, :]
+        if cfg.is_encdec:
+            memory = self.encode(params, memory, ctx)
+
+        caches: dict = {}
+
+        def sb_body(carry, p_sb):
+            x, aux = carry
+            cs = {}
+            for i, kind in enumerate(cfg.superblock):
+                x, a, c = apply_layer(p_sb[f"slot{i}"], x, kind, cfg, ctx,
+                                      memory=memory, positions=positions,
+                                      collect_cache=collect_cache,
+                                      cache_len=cache_len)
+                aux = aux + a
+                if collect_cache:
+                    cs[f"slot{i}"] = c
+            return (x, aux), (cs if collect_cache else None)
+
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.sb_repeat:
+            body = _maybe_remat(sb_body, ctx)
+            (h, aux), sb_caches = jax.lax.scan(body, (h, aux),
+                                               params["blocks"]["sb"])
+            if collect_cache:
+                caches["sb"] = sb_caches
+        for i, kind in enumerate(cfg.remainder):
+            h, a, c = apply_layer(params["blocks"][f"rem{i}"], h, kind, cfg, ctx,
+                                  memory=memory, positions=positions,
+                                  collect_cache=collect_cache,
+                                  cache_len=cache_len)
+            aux = aux + a
+            if collect_cache:
+                caches[f"rem{i}"] = c
+
+        h = rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+        table = (params["embed"]["table"] if cfg.tie_embeddings
+                 else params["unembed"]["table"])
+        logits = unembed_apply(table, h, cfg.logits_soft_cap)
+        if collect_cache:
+            return logits, aux, caches
+        return logits, aux
+
+    # -- loss ----------------------------------------------------------------
+    def loss(self, params, batch, ctx):
+        """batch: {tokens (B,S), labels (B,S) (-1 = pad), [memory]}."""
+        logits, aux = self.apply(params, batch["tokens"], ctx,
+                                 memory=batch.get("memory"))
+        labels = batch["labels"]
+        # gather-free CE: with vocab sharded over the model axis, a
+        # take_along_axis gather lowers to collective-permute chains; the
+        # iota-select-reduce form fuses into the (sharded) softmax reduction.
+        logits = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)        # (B,S)
+        viota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        sel = jnp.where(viota == jnp.maximum(labels, 0)[..., None],
+                        logits, 0.0).sum(axis=-1)                 # label logit
+        nll = lse - sel
+        mask = (labels >= 0).astype(jnp.float32)
+        ntok = jnp.maximum(mask.sum(), 1.0)
+        ce = (nll * mask).sum() / ntok
+        # z-loss for stability (also keeps the softmax normalizer bounded)
+        zloss = 1e-4 * ((lse ** 2) * mask).sum() / ntok
+        total = ce + zloss + 0.01 * aux
+        return total, {"ce": ce, "aux": aux, "zloss": zloss, "ntok": ntok}
+
+    # -- decode cache ---------------------------------------------------------
+    def cache_specs(self, batch, cache_len):
+        cfg = self.cfg
+        c: dict = {"pos": ParamSpec((), (), init="zeros", dtype=jnp.int32)}
+        blocks: dict = {}
+        if cfg.sb_repeat:
+            sb = {f"slot{i}": init_layer_cache_specs(cfg, k, batch, cache_len)
+                  for i, k in enumerate(cfg.superblock)}
+            blocks["sb"] = stack_specs(sb, cfg.sb_repeat)
+        for i, k in enumerate(cfg.remainder):
+            blocks[f"rem{i}"] = init_layer_cache_specs(cfg, k, batch, cache_len)
+        c["blocks"] = blocks
+        return c
+
+    def init_cache(self, batch, cache_len, rng=None):
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        return init_from_specs(self.cache_specs(batch, cache_len), rng)
+
+    def abstract_cache(self, batch, cache_len):
+        return abstract_from_specs(self.cache_specs(batch, cache_len))
+
+    def cache_logical_axes(self, batch, cache_len):
+        return logical_axes_from_specs(self.cache_specs(batch, cache_len))
+
+    # -- prefill --------------------------------------------------------------
+    def prefill(self, params, tokens, ctx, cache_len, memory=None):
+        """Full forward + packed decode cache.  Returns (last_logits, cache)."""
+        logits, _, caches = self.apply(params, tokens, ctx, memory=memory,
+                                       collect_cache=True, cache_len=cache_len)
+        cache = {"pos": jnp.asarray(tokens.shape[1], jnp.int32),
+                 "blocks": caches}
+        return logits[:, -1], cache
+
+    # -- decode ---------------------------------------------------------------
+    def decode_step(self, params, token, cache, ctx, memory=None):
+        """token (B,1) int32; cache from init_cache/prefill.
+
+        Returns (logits (B,V), new_cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        h = embed_apply(params["embed"], token, cfg.d_model)
+        new_blocks: dict = {}
+
+        def sb_body(x, xs):
+            p_sb, c_sb = xs
+            cs = {}
+            for i, kind in enumerate(cfg.superblock):
+                x, cs[f"slot{i}"] = apply_layer_decode(
+                    p_sb[f"slot{i}"], x, c_sb[f"slot{i}"], pos, kind, cfg, ctx,
+                    memory=memory)
+            return x, cs
+
+        if cfg.sb_repeat:
+            h, new_blocks["sb"] = jax.lax.scan(
+                sb_body, h, (params["blocks"]["sb"], cache["blocks"]["sb"]))
+        for i, kind in enumerate(cfg.remainder):
+            h, new_blocks[f"rem{i}"] = apply_layer_decode(
+                params["blocks"][f"rem{i}"], h, cache["blocks"][f"rem{i}"],
+                pos, kind, cfg, ctx, memory=memory)
+
+        h = rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+        table = (params["embed"]["table"] if cfg.tie_embeddings
+                 else params["unembed"]["table"])
+        logits = unembed_apply(table, h, cfg.logits_soft_cap)[:, 0]
+        return logits, {"pos": pos + 1, "blocks": new_blocks}
+
+    # -- stub frontends --------------------------------------------------------
+    def memory_len(self):
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            return cfg.context_tokens
+        if cfg.is_encdec:
+            return cfg.encoder_len
+        return 0
+
+
+def _maybe_remat(body, ctx):
+    if ctx.remat == "none":
+        return body
+    if ctx.remat == "full":
+        return jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(
+        body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,105 @@
+"""Mixture-of-Experts with top-k routing (grouped, gather-based, capacity-bounded).
+
+Dispatch follows the Switch-Transformer *group* formulation: tokens are split
+into G groups (G = the data-parallel degree), each group routes its own
+tokens with per-group capacity C_g = ceil(T_g * k * cf / E).  Because the
+group dim is sharded over the data axis and the expert dim over the model
+axis, the (G, E, C, D) dispatch tensor's shard transition is exactly the EP
+all-to-all — no global token gather (which would all-gather the full
+activation per layer).
+
+Combine is gather-based (each token reads its k expert outputs), so no
+scatter-add appears on the backward-unfriendly path.
+
+Sharding: "experts"->model when E divides it (EP, dbrx 16e); otherwise
+experts replicate and "ff" is tensor-parallel (mixtral 8e on a 16-way axis).
+See DESIGN.md SS5/SS6.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+
+
+def moe_specs(cfg):
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": ParamSpec((d, e), ("embed", None), dtype=jnp.float32),
+        "wi": ParamSpec((e, d, f), ("experts", "embed", "ff")),
+        "wg": ParamSpec((e, d, f), ("experts", "embed", "ff")),
+        "wo": ParamSpec((e, f, d), ("experts", "ff", "embed")),
+    }
+
+
+def capacity(tokens: int, num_experts: int, k: int, cf: float) -> int:
+    c = int(tokens * k * cf / num_experts)
+    return max(8, -(-c // 8) * 8)           # round up to multiple of 8
+
+
+def moe_apply(p, x, cfg, ctx):
+    """x (B,S,D) -> (out (B,S,D), aux_loss)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    G = ctx.moe_groups if T % max(ctx.moe_groups, 1) == 0 else 1
+    G = max(G, 1)
+    Tg = T // G
+    C = capacity(Tg, E, K, cfg.capacity_factor)
+    xt = x.reshape(G, Tg, D)
+    xt = ctx.shard(xt, "groups", None, "embed_nos")
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)                 # (G,Tg,E)
+    top_w, top_i = jax.lax.top_k(gates, K)                  # (G,Tg,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(top_i[..., 0], E), axis=(0, 1))
+    density_proxy = jnp.mean(gates, axis=(0, 1))
+    aux_loss = E * jnp.sum(density * density_proxy)
+
+    # position of each assignment within its expert, per group
+    flat_e = top_i.reshape(G, Tg * K)                       # expert ids
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)     # (G,Tg*K,E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < C                                          # (G,Tg*K)
+
+    tok_of = jnp.broadcast_to(
+        (jnp.arange(Tg * K, dtype=jnp.int32) // K)[None], (G, Tg * K))
+    slot = flat_e * C + pos
+    slot_safe = jnp.where(keep, slot, E * C)
+
+    def build_tables(slots, toks, keeps):
+        idx = jnp.zeros((E * C + 1,), jnp.int32).at[slots].set(toks, mode="drop")
+        valid = jnp.zeros((E * C + 1,), bool).at[slots].set(keeps, mode="drop")
+        return idx[:-1], valid[:-1]
+
+    idx, valid = jax.vmap(build_tables)(slot_safe, tok_of, keep)  # (G,E*C)
+
+    def gather_tokens(xx, ii):
+        return jnp.take(xx, ii, axis=0)
+
+    xg = jax.vmap(gather_tokens)(xt, idx).reshape(G, E, C, D)
+    xg = xg * valid.reshape(G, E, C, 1).astype(xg.dtype)
+    # EP transition: (groups->data, experts->model) = the dispatch all-to-all
+    xg = ctx.shard(xg, "groups", "experts", None, "embed_nos")
+
+    h = jnp.einsum("gecd,edf->gecf", xg, p["wi"])
+    g = jnp.einsum("gecd,edf->gecf", xg, p["wg"])
+    g = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g, approximate=True)
+    h = ctx.shard(h * g, "groups", "experts", None, "ff")
+    y = jnp.einsum("gecf,efd->gecd", h, p["wo"])            # (G,E,C,D)
+    y = ctx.shard(y, "groups", "experts", None, "embed_nos")
+
+    # combine: each (token, k) reads its slot's output (gather, no scatter)
+    def read_slots(yy, slots, keeps):
+        return jnp.take(yy, jnp.where(keeps, slots, 0), axis=0) \
+            * keeps[:, None].astype(yy.dtype)
+
+    yt = jax.vmap(read_slots)(y.reshape(G, E * C, D), slot, keep)
+    out = (yt.reshape(G, Tg, K, D)
+           * top_w.reshape(G, Tg, K, 1).astype(yt.dtype)).sum(axis=2)
+    return out.reshape(B, S, D), aux_loss

@@ -1,0 +1,122 @@
+"""Griffin / RecurrentGemma recurrent block with RG-LRU.
+
+Block: x -> [gelu gate branch | conv1d -> RG-LRU branch] -> multiply -> out.
+RG-LRU (diagonal gated linear recurrence):
+    r_t = sigmoid(w_a * u_t + b_a)
+    i_t = sigmoid(w_i * u_t + b_i)
+    log a_t = -c * r_t * softplus(Lambda)        (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The full-sequence path uses an associative scan (log-time in jnp; the Pallas
+kernel kernels/rglru.py does a VMEM-blocked sequential scan, the TPU-native
+form).  Gates are elementwise (the paper's block-diagonal projections reduced
+to their diagonal; parameter count matches configs/base.py accounting).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+
+RGLRU_C = 8.0
+
+
+def rglru_specs(cfg):
+    d, dr = cfg.d_model, cfg.d_rnn
+    return {
+        "w_x": ParamSpec((d, dr), ("embed", "inner")),
+        "w_y": ParamSpec((d, dr), ("embed", "inner")),
+        "conv_w": ParamSpec((cfg.rglru_conv_width, dr), (None, "inner")),
+        "conv_b": ParamSpec((dr,), ("inner",), init="zeros"),
+        "w_a": ParamSpec((dr,), ("inner",), dtype=jnp.float32),
+        "b_a": ParamSpec((dr,), ("inner",), init="zeros", dtype=jnp.float32),
+        "w_i": ParamSpec((dr,), ("inner",), dtype=jnp.float32),
+        "b_i": ParamSpec((dr,), ("inner",), init="zeros", dtype=jnp.float32),
+        "lam": ParamSpec((dr,), ("inner",), init="rglru_a", dtype=jnp.float32),
+        "w_o": ParamSpec((dr, d), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + shifted * w[W - 1 - i]
+    return out + b
+
+
+def rglru_gates(u, p):
+    """u (..., dr) f32 -> (a, b) recurrence coefficients."""
+    u = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(u * p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(u * p["w_i"] + p["b_i"])
+    log_a = -RGLRU_C * r * jax.nn.softplus(p["lam"])
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u)
+    return a, b
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+
+    a, b: (B, S, dr) f32.  h0 (B, dr) optional initial state.
+    """
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+    # VMEM-resident in the Pallas kernel (kernels/rglru.py does a blocked
+    # sequential scan; the log-depth materializations here are XLA-only)
+    with jax.named_scope("rglru_vmem"):
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block_apply(p, x, cfg, ctx, collect_cache=False):
+    """x (B,S,D) -> (out (B,S,D), cache|None)."""
+    y = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_y"]), approximate=True)
+    u_raw = jnp.einsum("bsd,de->bse", x, p["w_x"])
+    u = _causal_conv(u_raw, p["conv_w"], p["conv_b"])
+    a, b = rglru_gates(u, p)
+    if ctx.attn_impl in ("pallas", "interpret"):
+        from repro.kernels import ops as kops
+        h = kops.rglru_scan(a, b, interpret=(ctx.attn_impl == "interpret"))
+    else:
+        h = rglru_scan_ref(a, b)
+    cache = None
+    if collect_cache:
+        cw = cfg.rglru_conv_width
+        conv_buf = u_raw[:, -(cw - 1):]
+        S = u_raw.shape[1]
+        if S < cw - 1:
+            conv_buf = jnp.pad(u_raw, ((0, 0), (cw - 1 - S, 0), (0, 0)))
+        cache = {"h": h[:, -1].astype(jnp.float32),
+                 "conv": conv_buf.astype(jnp.bfloat16)}
+    h = (h.astype(x.dtype) * y)
+    h = ctx.shard(h, "batch", "seq", "inner")
+    return jnp.einsum("bse,ed->bsd", h, p["w_o"]), cache
+
+
+def init_rglru_cache(cfg, batch):
+    dr = cfg.d_rnn
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, dr), jnp.bfloat16),
+    }
+
+
+def rglru_block_decode(p, x, cache, cfg, ctx):
+    """x (B,1,D) single-step."""
+    y = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_y"])[:, 0], approximate=True)
+    u = jnp.einsum("bsd,de->bse", x, p["w_x"])[:, 0]
+    hist = jnp.concatenate([cache["conv"].astype(u.dtype), u[:, None]], axis=1)
+    u = jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"]
+    new_conv = hist[:, 1:].astype(cache["conv"].dtype)
+    a, b = rglru_gates(u, p)
+    h = a * cache["h"] + b
+    out = jnp.einsum("be,ed->bd", (h.astype(x.dtype) * y), p["w_o"])[:, None]
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,10 @@
+from repro.parallel.mesh import make_mesh, DATA_AXIS, MODEL_AXIS, POD_AXIS
+from repro.parallel.sharding import (activation_rules, param_rules,
+                                     resolve_spec, named_sharding,
+                                     tree_shardings, make_shard_fn)
+from repro.parallel.pipeline import pipeline_apply
+
+__all__ = ["make_mesh", "DATA_AXIS", "MODEL_AXIS", "POD_AXIS",
+           "activation_rules", "param_rules", "resolve_spec",
+           "named_sharding", "tree_shardings", "make_shard_fn",
+           "pipeline_apply"]

@@ -1,0 +1,114 @@
+"""Hand-rolled collectives: int8-compressed data-parallel gradient reduction.
+
+GSPMD emits the standard bf16/f32 collectives automatically; this module
+implements *compressed* DP gradient all-reduce (a distributed-optimization
+trick + a DSE knob for the cost model: ~2x fewer DP collective bytes).
+
+Algorithm (inside shard_map, manual over the DP axes, GSPMD-auto over the
+model axis):
+  1. quantize the local gradient to int8 with a per-tensor scale
+  2. all_to_all the chunks (device i owns chunk i)      [S*(n-1)/n int8 wire]
+  3. dequantize + sum the owned chunk in f32, requantize
+  4. all_gather the reduced chunks                      [S*(n-1)/n int8 wire]
+Total wire ~ 2*S bytes vs ~4*S for a bf16 ring all-reduce.
+
+Error feedback: each device keeps (g_local - dequant(q)) and adds it to its
+next-step gradient, so the quantization bias vanishes over steps.  The error
+state is a per-device tensor, surfaced as a global array with a leading
+device axis (sharded over the DP axes).
+
+Constraint: params must be replicated over the DP axes (fsdp=False);
+model-axis tensor parallelism composes fine (auto).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def compressed_allreduce_mean(g, axis_name):
+    """Mean-all-reduce over `axis_name` (str or tuple) with int8 wire format.
+
+    Runs inside shard_map manual over `axis_name`.
+    Returns (mean_g, local_quantization_error).
+    """
+    n = jax.lax.axis_size(axis_name)
+    shape, dtype = g.shape, g.dtype
+    flat = g.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(n, -1)
+
+    q, scale = _quantize(chunks)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)
+    err = (flat - deq)[:flat.size - pad if pad else None]
+    err = err.reshape(shape).astype(dtype)
+
+    # exchange: device j receives chunk j from everyone
+    qx = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    qx = qx.reshape(n, -1)                               # (n, c)
+    scales = jax.lax.all_gather(scale, axis_name, tiled=False).reshape(n)
+    part = (qx.astype(jnp.float32) * scales[:, None]).sum(axis=0)   # (c,)
+
+    q2, scale2 = _quantize(part)
+    q2g = jax.lax.all_gather(q2, axis_name, tiled=False).reshape(n, -1)
+    s2g = jax.lax.all_gather(scale2, axis_name, tiled=False).reshape(n)
+    out = (q2g.astype(jnp.float32) * s2g[:, None]).reshape(-1)
+    if pad:
+        out = out[:-pad]
+    return (out / n).reshape(shape).astype(dtype), err
+
+
+def make_compressed_value_and_grad(loss_fn, mesh, dp_axes=("data",)):
+    """Build a (params, batch, err_state) -> (loss, metrics, grads, err_state)
+    function whose DP gradient reduction uses int8 compression.
+
+    loss_fn(params, batch) -> (loss, metrics).  Batch dim 0 must be sharded
+    over dp_axes; params replicated over dp_axes (model axis stays auto).
+    err_state: pytree like grads with a leading per-device axis
+    (init with zeros via `init_error_state`).
+    """
+    dp_axes = tuple(dp_axes)
+    axis = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def body(params, batch, err):
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        g = jax.tree_util.tree_map(lambda gi, ei: gi + ei[0].astype(gi.dtype),
+                                   g, err)
+        pairs = jax.tree_util.tree_map(
+            lambda gi: compressed_allreduce_mean(gi, axis), g)
+        gout = jax.tree_util.tree_map(lambda pr: pr[0], pairs,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        eout = jax.tree_util.tree_map(lambda pr: pr[1][None], pairs,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        n = jax.lax.axis_size(axis)
+        loss = jax.lax.psum(loss, axis) / n
+        metrics = jax.tree_util.tree_map(lambda m: jax.lax.psum(m, axis) / n,
+                                         metrics)
+        return loss, metrics, gout, eout
+
+    def run(params, batch, err_state):
+        in_specs = (P(), P(dp_axes), P(dp_axes))
+        out_specs = (P(), P(), P(), P(dp_axes))
+        f = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False,
+                          axis_names=frozenset(dp_axes))
+        return f(params, batch, err_state)
+
+    return run
+
+
+def init_error_state(grads_like, n_dp: int):
+    """Zero error-feedback state: grads shapes with a leading device axis."""
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros((n_dp,) + tuple(g.shape), g.dtype), grads_like)

@@ -1,0 +1,168 @@
+"""Logical-axis -> mesh-axis resolution (GSPMD sharding rules).
+
+Every tensor (param, activation, cache) carries *logical* axis names
+(ParamSpec.logical_axes or ctx.shard(...) call sites).  Rules map each
+logical name to an ordered list of candidate mesh-axis tuples; resolution
+picks the first candidate whose mesh axes (a) exist in the mesh, (b) are not
+already used by another dim of the same tensor, and (c) evenly divide the
+dim.  Divisibility fallback is what makes one rule set serve all 10 archs
+(e.g. "experts"->model gives EP for dbrx's 16 experts but falls through to
+ff-tensor-parallelism for mixtral's 8 — see DESIGN.md SS6).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ParallelConfig
+from repro.models.layers import is_spec
+
+
+# candidate lists: first match wins.  Dims are resolved in _PRIORITY order
+# (not positionally), so e.g. "vocab" claims the model axis before "batch"
+# considers a (data, model) combo, and "seq" (sequence parallelism) only
+# takes an axis nothing else in the tensor wanted.
+_PRIORITY = ("experts", "vocab", "ff", "inner", "heads", "kv_heads",
+             "groups", "cache", "batch", "embed", "layers", "seq")
+
+
+def activation_rules(parallel: ParallelConfig):
+    if parallel.model_axis == "zero3":
+        # pure DP over (data x model); params ZeRO-3-sharded (param_rules)
+        return {
+            "batch": [("pod", "data", "model"), ("data", "model"),
+                      ("pod", "data"), ("data",)],
+            "seq": [],
+            "heads": [], "kv_heads": [], "ff": [], "inner": [],
+            "vocab": [("model",)],
+            "experts": [("model",)],
+            "groups": [("pod", "data", "model"), ("data", "model"),
+                       ("pod", "data"), ("data",)],
+            "embed": [],
+            "cache": [("data",)] if parallel.seq_shard_cache else [],
+            "layers": [],
+        }
+    rules = {
+        "batch": [("pod", "data"), ("data",)],
+        "seq": [("model",)] if parallel.seq_shard else [],
+        "heads": [("model",)],
+        "kv_heads": [("model",)],
+        "ff": [("model",)],
+        "vocab": [("model",)],
+        "experts": [("model",)],
+        "groups": [("pod", "data"), ("data",)],
+        "inner": [("model",)],
+        "embed": [],
+        "cache": [("data",)] if parallel.seq_shard_cache else [],
+        "layers": [],
+    }
+    return rules
+
+
+def param_rules(parallel: ParallelConfig):
+    if parallel.model_axis == "zero3":
+        # every weight fully sharded over (data x model) on its first
+        # shardable dim: GSPMD inserts per-layer weight all-gathers (fwd,
+        # remat, bwd) and gradient reduce-scatters — FSDP/ZeRO-3 semantics
+        return {
+            "batch": [], "seq": [], "layers": [],
+            "vocab": [("model",)],
+            "embed": [("data", "model"), ("data",)],
+            "ff": [("data", "model"), ("data",)],
+            "inner": [("data", "model"), ("data",)],
+            "heads": [], "kv_heads": [],
+            "experts": [("model",)],
+            "groups": [],
+            "cache": [],
+        }
+    rules = activation_rules(parallel)
+    if parallel.fsdp:
+        # FSDP: additionally shard the (usually replicated) embed dim of
+        # weight matrices over the data axis; GSPMD inserts the all-gathers
+        # whose scheduling is exactly the paper's SS6.1 design space.
+        rules = dict(rules)
+        rules["embed"] = [("data",)]
+    return rules
+
+
+def resolve_spec(axes, shape, rules, mesh) -> P:
+    """axes: tuple of logical names (or None) per dim, resolved in _PRIORITY
+    order so high-value dims claim contested mesh axes first."""
+    used: set = set()
+    out: list = [None] * len(axes)
+
+    def try_assign(i, dim, name):
+        for cand in rules.get(name, []) if name else []:
+            if any(a not in mesh.shape for a in cand):
+                continue
+            if any(a in used for a in cand):
+                continue
+            prod = math.prod(mesh.shape[a] for a in cand)
+            if prod > 1 and dim % prod == 0:
+                used.update(cand)
+                out[i] = (tuple(cand) if len(cand) > 1 else cand[0])
+                return
+
+    rank = {n: r for r, n in enumerate(_PRIORITY)}
+    order = sorted(range(len(axes)),
+                   key=lambda i: rank.get(axes[i], len(_PRIORITY)))
+    for i in order:
+        if axes[i]:
+            try_assign(i, shape[i], axes[i])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(mesh, axes, shape, rules) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(axes, shape, rules, mesh))
+
+
+def tree_shardings(mesh, specs_tree, rules):
+    """ParamSpec tree -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda s: named_sharding(mesh, s.logical_axes, s.shape, rules),
+        specs_tree, is_leaf=is_spec)
+
+
+def make_shard_fn(mesh: Optional[Mesh], parallel: ParallelConfig):
+    """ctx.shard hook: annotate activations with sharding constraints."""
+    if mesh is None:
+        return None
+    rules = activation_rules(parallel)
+
+    def f(x, axes):
+        if len(axes) != x.ndim:
+            axes = tuple(axes) + (None,) * (x.ndim - len(axes))
+        spec = resolve_spec(axes, x.shape, rules, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return f
+
+
+def batch_specs(cfg, shape, model):
+    """ParamSpec tree for one step's data inputs (tokens/labels/memory)."""
+    from repro.models.layers import ParamSpec
+    import jax.numpy as jnp
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {
+            "tokens": ParamSpec((B, S), ("batch", "seq"), dtype=jnp.int32,
+                                init="zeros"),
+            "labels": ParamSpec((B, S), ("batch", "seq"), dtype=jnp.int32,
+                                init="zeros"),
+        }
+    elif shape.kind == "prefill":
+        out = {"tokens": ParamSpec((B, S), ("batch", "seq"), dtype=jnp.int32,
+                                   init="zeros")}
+    else:  # decode: one new token
+        out = {"token": ParamSpec((B, 1), ("batch", None), dtype=jnp.int32,
+                                  init="zeros")}
+    ml = model.memory_len()
+    if ml and shape.kind != "decode":
+        out["memory"] = ParamSpec((B, ml, cfg.d_model),
+                                  ("batch", None, "embed"), init="normal")
+    return out

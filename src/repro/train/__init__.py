@@ -1,0 +1,13 @@
+from repro.train.optimizer import OptConfig, OptState, init_opt_state, adamw_update
+from repro.train.train_step import TrainState, make_train_step, make_eval_step, init_train_state, make_ctx
+from repro.train.serve_step import make_prefill_step, make_decode_step, make_forward_step, generate
+from repro.train.data import DataConfig, DataIterator, make_batch
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+
+__all__ = [
+    "OptConfig", "OptState", "init_opt_state", "adamw_update",
+    "TrainState", "make_train_step", "make_eval_step", "init_train_state",
+    "make_ctx", "make_prefill_step", "make_decode_step", "make_forward_step",
+    "generate", "DataConfig", "DataIterator", "make_batch",
+    "save_checkpoint", "restore_checkpoint", "latest_step",
+]

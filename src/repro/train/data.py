@@ -1,0 +1,76 @@
+"""Deterministic synthetic data pipeline.
+
+Stateless-resumable: batch(step) is a pure function of (seed, step, shape),
+so restarting from a checkpoint at step k replays the exact token stream —
+a fault-tolerance requirement (DESIGN.md SS7).
+
+The stream is a mixture of structured sequences (so a ~100M model's loss
+visibly decreases within a few hundred steps) rather than uniform noise:
+  * Markov-chain tokens with a banded transition structure
+  * repeated motifs (copy task segments)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    memory_len: int = 0          # stub frontend tokens (vlm/audio)
+    d_model: int = 0
+
+
+def _markov_tokens(key, batch, seq, vocab):
+    """Banded-transition Markov chain: next ~ prev + small learned-able jump."""
+    k1, k2 = jax.random.split(key)
+    start = jax.random.randint(k1, (batch, 1), 0, vocab)
+    jumps = jax.random.categorical(
+        k2, jnp.log(jnp.array([0.55, 0.2, 0.15, 0.1])), shape=(batch, seq))
+    jump_vals = jnp.array([1, 2, 3, 5])[jumps]
+    toks = (start + jnp.cumsum(jump_vals, axis=1)) % vocab
+    return toks.astype(jnp.int32)
+
+
+def make_batch(cfg: DataConfig, step: int):
+    """Pure function of (cfg, step) -> batch dict (host or device arrays)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    k_tok, k_mem, k_motif = jax.random.split(key, 3)
+    toks = _markov_tokens(k_tok, cfg.global_batch, cfg.seq_len + 1,
+                          cfg.vocab_size)
+    # splice a repeated motif into the second half (copy structure)
+    motif_len = min(32, cfg.seq_len // 4)
+    if motif_len >= 4:
+        motif = toks[:, :motif_len]
+        mid = cfg.seq_len // 2
+        toks = jax.lax.dynamic_update_slice(toks, motif, (0, mid))
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.memory_len:
+        batch["memory"] = jax.random.normal(
+            k_mem, (cfg.global_batch, cfg.memory_len, cfg.d_model),
+            jnp.bfloat16) * 0.02
+    return batch
+
+
+class DataIterator:
+    """Step-indexed iterator with exact resume."""
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0):
+        self.cfg = cfg
+        self.step = start_step
+        self._fn = jax.jit(lambda s: make_batch(cfg, s))
+
+    def __next__(self):
+        b = self._fn(self.step)
+        self.step += 1
+        return b
+
+    def __iter__(self):
+        return self

@@ -1,0 +1,98 @@
+"""AdamW with ZeRO-sharded state, gradient clipping, and LR schedules.
+
+Optimizer state lives in f32 and is sharded with the *same* PartitionSpecs as
+the (FSDP-sharded) parameters, which is exactly ZeRO semantics under GSPMD:
+each device updates only its parameter shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # int32 scalar
+    mu: object               # first moment (pytree, f32)
+    nu: object               # second moment (pytree, f32)
+
+
+def init_opt_state(params) -> OptState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree_util.tree_map(f32, params),
+                    nu=jax.tree_util.tree_map(f32, params))
+
+
+def abstract_opt_state(abstract_params) -> OptState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                    mu=jax.tree_util.tree_map(f32, abstract_params),
+                    nu=jax.tree_util.tree_map(f32, abstract_params))
+
+
+def opt_state_logical_axes(param_axes) -> OptState:
+    return OptState(step=(), mu=param_axes, nu=param_axes)
+
+
+def lr_at(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(cfg: OptConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    newp = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    newmu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    newnu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return newp, OptState(step, newmu, newnu), {"gnorm": gnorm, "lr": lr}

@@ -1,0 +1,71 @@
+"""Serving step builders: prefill + batched single-token decode.
+
+decode shapes of the assignment lower `serve_step` = one decode_step call
+(one new token against a filled KV/state cache of cache_len tokens).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ParallelConfig
+from repro.models.model import Ctx, Model
+from repro.train.train_step import make_ctx
+
+
+def make_prefill_step(model: Model, parallel: ParallelConfig, mesh=None,
+                      cache_len: int = 0):
+    ctx = make_ctx(parallel, mesh)
+
+    def prefill_step(params, tokens, memory=None):
+        return model.prefill(params, tokens, ctx, cache_len, memory=memory)
+
+    return prefill_step
+
+
+def make_forward_step(model: Model, parallel: ParallelConfig, mesh=None):
+    """Full-sequence forward (the prefill_* dry-run shape)."""
+    ctx = make_ctx(parallel, mesh)
+
+    def forward(params, tokens, memory=None):
+        logits, _ = model.apply(params, tokens, ctx, memory=memory)
+        return logits[:, -1]
+
+    return forward
+
+
+def make_decode_step(model: Model, parallel: ParallelConfig, mesh=None):
+    ctx = make_ctx(parallel, mesh)
+
+    def decode_step(params, token, cache):
+        return model.decode_step(params, token, cache, ctx)
+
+    return decode_step
+
+
+def sample_token(logits, rng, temperature: float = 0.0):
+    """logits (B, V) -> (B, 1) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jax.random.categorical(
+        rng, logits / temperature, axis=-1)[:, None].astype(jnp.int32)
+
+
+def generate(model: Model, params, prompt, steps: int, parallel: ParallelConfig,
+             mesh=None, cache_len: int = 0, memory=None, temperature: float = 0.0,
+             rng=None):
+    """Greedy/temperature generation loop (example/serving driver)."""
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    cache_len = cache_len or (prompt.shape[1] + steps)
+    prefill = jax.jit(make_prefill_step(model, parallel, mesh, cache_len))
+    decode = jax.jit(make_decode_step(model, parallel, mesh))
+    logits, cache = prefill(params, prompt, memory)
+    toks = []
+    tok = sample_token(logits, rng, temperature)
+    toks.append(tok)
+    for i in range(steps - 1):
+        rng, k = jax.random.split(rng)
+        logits, cache = decode(params, tok, cache)
+        tok = sample_token(logits, k, temperature)
+        toks.append(tok)
+    return jnp.concatenate(toks, axis=1)

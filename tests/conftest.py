@@ -1,0 +1,27 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here; smoke tests
+# and benches must see 1 device (multi-device tests use subprocesses).
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, SRC)
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 600) -> str:
+    """Run python code in a fresh process with N fake devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, f"subprocess failed:\n{r.stdout}\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_subprocess

@@ -1,0 +1,113 @@
+"""Chakra graph schema: construction, validation, serialization, conversion."""
+import json
+
+import pytest
+
+from repro.core import chakra
+from repro.core.convert import expand_collective_p2p, hlo_to_chakra
+from repro.core.hlo_parse import parse_hlo
+
+
+def _diamond():
+    g = chakra.Graph()
+    a = g.add("a", chakra.COMP, flops=10, out_bytes=4)
+    b = g.add("b", chakra.COMP, deps=[a], flops=5, out_bytes=4)
+    c = g.add("c", chakra.COMM_COLL, deps=[a], comm_kind="all-reduce",
+              comm_bytes=100, group=[0, 1])
+    d = g.add("d", chakra.COMP, deps=[b, c], flops=1, out_bytes=4)
+    return g, (a, b, c, d)
+
+
+def test_topo_and_validate():
+    g, (a, b, c, d) = _diamond()
+    order = g.topo_order()
+    assert order.index(a) < order.index(b) < order.index(d)
+    assert g.validate()
+
+
+def test_cycle_detection():
+    g, (a, b, c, d) = _diamond()
+    g.node(a).deps.append(d)
+    with pytest.raises(ValueError):
+        g.topo_order()
+
+
+def test_json_roundtrip():
+    g, _ = _diamond()
+    g2 = chakra.Graph.from_json(g.to_json())
+    assert len(g2) == len(g)
+    assert g2.node(2).attrs["comm_kind"] == "all-reduce"
+    assert g2.node(3).deps == [1, 2]
+
+
+def test_totals():
+    g, _ = _diamond()
+    t = g.totals()
+    assert t["flops"] == 16
+    assert t["comm"]["all-reduce"]["bytes"] == 100
+
+
+WHILE_HLO = """
+HloModule m, num_partitions=4
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(3)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (p2: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p2 = (s32[], f32[4]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %x = f32[4]{0} get-tuple-element(%p2), index=1
+  %one = s32[] constant(1)
+  %nxt = s32[] add(%i2, %one)
+  %ar = f32[4]{0} all-reduce(%x), channel_id=1, replica_groups=[2,2]<=[4], to_apply=%add
+  ROOT %t = (s32[], f32[4]) tuple(%nxt, %ar)
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4]{0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4]) tuple(%z, %a)
+  %w = (s32[], f32[4]) while(%t0), condition=%cond, body=%body
+  ROOT %o = f32[4]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_expansion_chains_iterations():
+    mod = parse_hlo(WHILE_HLO)
+    g = hlo_to_chakra(mod)
+    ars = [n for n in g.by_type(chakra.COMM_COLL)]
+    assert len(ars) == 3                      # expanded 3 iterations
+    # carried dep: iteration t's AR depends on iteration t-1's AR
+    by_name = {n.name: n for n in ars}
+    it1 = by_name["w.it1/ar"]
+    it0 = by_name["w.it0/ar"]
+    assert it0.id in it1.deps
+    g.validate()
+
+
+def test_collapsed_while_without_collectives():
+    hlo = WHILE_HLO.replace(
+        "%ar = f32[4]{0} all-reduce(%x), channel_id=1, "
+        "replica_groups=[2,2]<=[4], to_apply=%add",
+        "%ar = f32[4]{0} multiply(%x, %x)")
+    mod = parse_hlo(hlo)
+    g = hlo_to_chakra(mod)
+    col = [n for n in g.nodes if n.attrs.get("op") == "while.collapsed"]
+    assert len(col) == 1 and col[0].attrs["trips"] == 3
+    assert not g.by_type(chakra.COMM_COLL)
+
+
+def test_p2p_expansion_ring():
+    msgs = expand_collective_p2p("all-reduce", 1000, [0, 1, 2, 3], "ring")
+    assert len(msgs) == 4 * 6                  # 2(n-1) rounds x n msgs
+    assert all(abs(m[2] - 250) < 1e-9 for m in msgs)
+
+
+def test_p2p_expansion_hd():
+    msgs = expand_collective_p2p("all-gather", 1024, list(range(8)), "hd")
+    assert len(msgs) == 8 * 3                  # log2(8) rounds x n

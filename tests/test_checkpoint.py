@@ -1,0 +1,146 @@
+"""Checkpointing + fault tolerance: round-trip, keep-k, resume replay,
+failure injection, straggler detection."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ParallelConfig
+from repro.configs.registry import get_config
+from repro.models import build_model
+from repro.train import (DataConfig, DataIterator, OptConfig,
+                         init_train_state, latest_step, make_train_step,
+                         restore_checkpoint, save_checkpoint)
+from repro.train.fault import (FaultInjector, SimulatedFault,
+                               StragglerMonitor, run_with_retry)
+
+
+def _setup():
+    cfg = get_config("granite-3-8b", smoke=True)
+    m = build_model(cfg)
+    par = ParallelConfig()
+    step = jax.jit(make_train_step(
+        m, OptConfig(lr=1e-3, warmup_steps=2, total_steps=50), par))
+    state = init_train_state(m, jax.random.PRNGKey(0), par)
+    it = DataIterator(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                 global_batch=4))
+    return m, step, state, it
+
+
+def test_roundtrip(tmp_path):
+    m, step, state, it = _setup()
+    state, _ = step(state, next(it))
+    save_checkpoint(str(tmp_path), 1, state)
+    restored, meta = restore_checkpoint(str(tmp_path), 1, state)
+    assert meta["step"] == 1
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_last_k(tmp_path):
+    m, step, state, it = _setup()
+    for s in range(1, 6):
+        save_checkpoint(str(tmp_path), s, state, keep=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_00000004", "step_00000005"]
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_async_save_joins(tmp_path):
+    m, step, state, it = _setup()
+    t = save_checkpoint(str(tmp_path), 3, state, async_save=True)
+    t.join(timeout=60)
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_crash_resume_replays_exact_stream(tmp_path):
+    """Train 6 steps straight vs train 3 + crash + resume 3: same params."""
+    m, step, s_a, it_a = _setup()
+    for _ in range(6):
+        s_a, _ = step(s_a, next(it_a))
+
+    _, step_b, s_b, it_b = _setup()
+    for _ in range(3):
+        s_b, _ = step_b(s_b, next(it_b))
+    save_checkpoint(str(tmp_path), 3, s_b)
+    # "crash"; restore into fresh state and a resumed iterator
+    _, step_c, s_c, _ = _setup()
+    s_c, meta = restore_checkpoint(str(tmp_path), 3, s_c)
+    it_c = DataIterator(DataConfig(vocab_size=get_config(
+        "granite-3-8b", smoke=True).vocab_size, seq_len=32, global_batch=4),
+        start_step=meta["step"])
+    for _ in range(3):
+        s_c, _ = step_c(s_c, next(it_c))
+    for a, b in zip(jax.tree_util.tree_leaves(s_a.params),
+                    jax.tree_util.tree_leaves(s_c.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
+def test_elastic_restore_across_device_counts(subproc):
+    """Checkpoint on 4 devices, restore+step on 8 (DESIGN.md SS7 elasticity)."""
+    code_save = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.parallel.mesh import make_mesh
+from repro.train import save_checkpoint
+mesh = make_mesh((4,), ("data",))
+x = jax.device_put(np.arange(64, dtype=np.float32).reshape(8, 8),
+                   NamedSharding(mesh, P("data")))
+save_checkpoint("{d}", 1, {{"x": x}})
+print("saved")
+"""
+    code_load = """
+import jax, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.parallel.mesh import make_mesh
+from repro.train import restore_checkpoint
+mesh = make_mesh((8,), ("data",))
+tpl = {{"x": jax.ShapeDtypeStruct((8, 8), "float32")}}
+sh = {{"x": NamedSharding(mesh, P("data"))}}
+st, meta = restore_checkpoint("{d}", 1, tpl, sh)
+assert st["x"].sharding.num_devices == 8
+np.testing.assert_array_equal(np.asarray(st["x"]),
+                              np.arange(64, dtype=np.float32).reshape(8, 8))
+print("elastic ok")
+"""
+    import tempfile
+    d = tempfile.mkdtemp()
+    out = subproc(code_save.format(d=d), devices=4)
+    assert "saved" in out
+    out = subproc(code_load.format(d=d), devices=8)
+    assert "elastic ok" in out
+
+
+def test_fault_injection_and_retry():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise SimulatedFault("boom")
+        return "ok"
+
+    assert run_with_retry(flaky, retries=3) == "ok"
+    assert len(calls) == 3
+    with pytest.raises(SimulatedFault):
+        run_with_retry(lambda: (_ for _ in ()).throw(SimulatedFault("x")),
+                       retries=1)
+
+
+def test_injector_transient_fires_once():
+    inj = FaultInjector(fail_steps=(5,))
+    with pytest.raises(SimulatedFault):
+        inj.check(5)
+    inj.check(5)  # second attempt passes
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(window=20, threshold=2.0)
+    for s in range(10):
+        assert not mon.record(s, 0.1)
+    assert mon.record(10, 0.5)
+    assert mon.straggler_steps[0][0] == 10

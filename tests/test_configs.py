@@ -1,0 +1,67 @@
+"""Config/registry invariants: the 10 assigned archs x 4 shapes grid."""
+import pytest
+
+from repro.configs.base import ALL_SHAPES, ModelConfig, GLOBAL_ATTN
+from repro.configs.registry import (ARCH_NAMES, all_cells, cell_applicable,
+                                    get_config, get_shape)
+
+EXPECTED_PARAMS_B = {
+    "recurrentgemma-9b": (7.5, 10.0),
+    "seamless-m4t-medium": (0.4, 1.0),
+    "llama-3.2-vision-90b": (80.0, 95.0),
+    "mamba2-780m": (0.7, 0.9),
+    "gemma3-4b": (3.3, 4.5),
+    "qwen3-8b": (7.0, 8.8),
+    "granite-3-8b": (7.3, 9.0),
+    "gemma3-12b": (10.5, 13.0),
+    "mixtral-8x7b": (44.0, 49.0),
+    "dbrx-132b": (125.0, 140.0),
+}
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_param_counts_match_advertised(name):
+    cfg = get_config(name)
+    lo, hi = EXPECTED_PARAMS_B[name]
+    n = cfg.param_count() / 1e9
+    assert lo <= n <= hi, f"{name}: {n:.2f}B params not in [{lo},{hi}]"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_layer_pattern_covers_depth(name):
+    cfg = get_config(name)
+    assert len(cfg.layer_kinds) == cfg.num_layers
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_config_is_small(name):
+    cfg = get_config(name, smoke=True)
+    assert cfg.param_count() < 5e6
+
+
+def test_grid_is_40_cells_35_applicable():
+    cells = list(all_cells())
+    assert len(cells) == 40
+    assert sum(1 for c in cells if c[3]) == 35
+
+
+def test_long_context_skips_are_pure_full_attention():
+    for name in ARCH_NAMES:
+        cfg = get_config(name)
+        ok, why = cell_applicable(cfg, get_shape("long_500k"))
+        if not ok:
+            assert not cfg.sub_quadratic
+            assert "full-attention" in why
+
+
+def test_moe_active_params_less_than_total():
+    for name in ("mixtral-8x7b", "dbrx-132b"):
+        cfg = get_config(name)
+        assert cfg.active_param_count() < 0.5 * cfg.param_count()
+
+
+def test_shapes_exact():
+    s = get_shape("train_4k")
+    assert (s.seq_len, s.global_batch, s.kind) == (4096, 256, "train")
+    s = get_shape("long_500k")
+    assert (s.seq_len, s.global_batch, s.kind) == (524288, 1, "decode")

@@ -1,0 +1,125 @@
+"""Cost models: collective time formulas, topologies, simulator, roofline."""
+import math
+
+import pytest
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.costmodel import (MultiPod, Ring, Switch, Torus2D, Wafer2D,
+                                  build_topology, collective_time,
+                                  model_flops_per_step, roofline, simulate,
+                                  synthesize_2d_p2p, synthesize_2d_time)
+
+
+SYS = SystemConfig(chips=16)
+
+
+def test_ring_allreduce_formula():
+    topo = Switch(n_ranks=8, link_bw=100e9, link_latency=1e-6)
+    n, size = 8, 1e9
+    t = collective_time("all-reduce", size, list(range(n)), topo, "ring")
+    expect = 2 * (n - 1) / n * size / 100e9 + 2 * (n - 1) * 1e-6
+    assert abs(t - expect) / expect < 1e-9
+
+
+def test_allgather_half_of_allreduce():
+    topo = Switch(n_ranks=8, link_bw=100e9, link_latency=0.0)
+    ar = collective_time("all-reduce", 1e9, list(range(8)), topo, "ring")
+    ag = collective_time("all-gather", 1e9, list(range(8)), topo, "ring")
+    assert abs(ar - 2 * ag) < 1e-12
+
+
+def test_hd_fewer_latency_terms():
+    topo = Switch(n_ranks=16, link_bw=100e9, link_latency=10e-6)
+    ring = collective_time("all-gather", 1e6, list(range(16)), topo, "ring")
+    hd = collective_time("all-gather", 1e6, list(range(16)), topo, "hd")
+    assert hd < ring                     # log(n) vs n-1 latency terms
+
+
+def test_torus_axis_groups():
+    t = Torus2D(n_ranks=16, link_bw=50e9, link_latency=1e-6, dims=(4, 4))
+    assert t.group_is_axis([0, 1, 2, 3])          # one row
+    assert t.group_is_axis([0, 4, 8, 12])         # one column
+    assert not t.group_is_axis([0, 1, 4, 5])
+    assert t.hop_distance(0, 3) == 1              # wrap
+    assert Wafer2D(n_ranks=16, link_bw=50e9, link_latency=1e-6,
+                   dims=(4, 4)).hop_distance(0, 3) == 3   # no wrap
+
+
+def test_2d_synth_beats_long_ring_on_wafer():
+    w = Wafer2D(n_ranks=64, link_bw=50e9, link_latency=1e-6, dims=(8, 8))
+    group = list(range(64))
+    ring = collective_time("all-reduce", 1e9, group, w, "ring")
+    synth = synthesize_2d_time("all-reduce", 1e9, group, w)
+    assert synth < ring
+
+
+def test_2d_synth_p2p_messages_ride_axes():
+    w = Wafer2D(n_ranks=16, link_bw=50e9, link_latency=1e-6, dims=(4, 4))
+    msgs = synthesize_2d_p2p("all-reduce", 1e6, list(range(16)), w)
+    assert msgs
+    for src, dst, size, rnd in msgs:
+        assert w.hop_distance(src, dst) <= w.dims[0] - 1
+
+
+def test_multipod_cross_pod_limited_by_dcn():
+    inner = Torus2D(n_ranks=8, link_bw=50e9, link_latency=1e-6, dims=(2, 4))
+    mp = MultiPod(n_ranks=16, link_bw=50e9, link_latency=1e-6, inner=inner,
+                  n_pods=2, dcn_bw=10e9)
+    assert mp.ring_bw(list(range(16))) == 10e9
+    assert mp.ring_bw([0, 1, 2, 3]) > 10e9       # intra-pod
+
+
+def test_simulator_chain_vs_parallel_overlap():
+    sysc = SystemConfig(chips=4, peak_flops=1e12, hbm_bw=1e12, link_bw=100e9)
+    topo = build_topology(sysc, 4)
+    # comp(1ms) -> comm(1ms) -> comp(1ms): serial = 3ms-ish
+    g = chakra.Graph()
+    a = g.add("a", chakra.COMP, flops=0.6e9)          # 1ms at derate 0.6
+    c = g.add("c", chakra.COMM_COLL, deps=[a], comm_kind="all-gather",
+              comm_bytes=2e8 / 1.5, group=[0, 1, 2, 3])
+    b = g.add("b", chakra.COMP, deps=[c], flops=0.6e9)
+    r = simulate(g, sysc, topo)
+    assert r.total_time == pytest.approx(r.compute_time + r.comm_time, rel=1e-6)
+    # same comm with no dependency on compute -> fully overlapped
+    g2 = chakra.Graph()
+    a2 = g2.add("a", chakra.COMP, flops=0.6e9)
+    g2.add("c", chakra.COMM_COLL, comm_kind="all-gather",
+           comm_bytes=2e8 / 1.5, group=[0, 1, 2, 3])
+    g2.add("b", chakra.COMP, deps=[a2], flops=0.6e9)
+    r2 = simulate(g2, sysc, topo)
+    assert r2.total_time < r.total_time
+    assert r2.exposed_comm < r.exposed_comm
+
+
+def test_simulator_memory_liveness():
+    sysc = SystemConfig(chips=2)
+    g = chakra.Graph()
+    a = g.add("a", chakra.COMP, flops=1e9, out_bytes=100.0)
+    b = g.add("b", chakra.COMP, deps=[a], flops=1e9, out_bytes=50.0)
+    c = g.add("c", chakra.COMP, deps=[b], flops=1e9, out_bytes=10.0)
+    r = simulate(g, sysc, build_topology(sysc, 2))
+    # a freed once b (its only consumer) finishes; peak = a+b live together
+    assert r.peak_bytes == pytest.approx(150.0)
+
+
+def test_roofline_terms_and_bound():
+    sysc = SystemConfig()
+    summary = {"parsed_flops": 1.97e14, "parsed_hbm_bytes_tpu": 8.19e10,
+               "comm_bytes_tpu": 5e10, "comm_bytes": 1e11}
+    rl = roofline(summary, {"flops": 1e13, "bytes accessed": 1e10}, sysc,
+                  model_flops_per_device=1e14)
+    assert rl.compute_s == pytest.approx(1.0)
+    assert rl.memory_s == pytest.approx(0.1)
+    assert rl.collective_s == pytest.approx(1.0)
+    assert rl.bound in ("compute", "collective")
+    assert rl.useful_ratio == pytest.approx(1e14 / 1.97e14)
+
+
+def test_model_flops_train_vs_decode():
+    from repro.configs.registry import get_config, get_shape
+    cfg = get_config("qwen3-8b")
+    tr = model_flops_per_step(cfg, get_shape("train_4k"), 256)
+    dec = model_flops_per_step(cfg, get_shape("decode_32k"), 256)
+    assert tr / dec == pytest.approx(
+        3 * 256 * 4096 / 128)        # 6ND*tokens vs 2ND*batch

@@ -1,0 +1,69 @@
+"""DSE loop: knob exploration, capture caching, greedy descent."""
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.dse import Knob, explore, greedy_descent
+
+
+def _graph(n_layers=8, comm_mb=8.0):
+    g = chakra.Graph()
+    prev = None
+    for i in range(n_layers):
+        ag = g.add(f"ag{i}", chakra.COMM_COLL, comm_kind="all-gather",
+                   comm_bytes=comm_mb * 1e6, out_bytes=comm_mb * 1e6,
+                   group=list(range(16)))
+        deps = [ag] + ([prev] if prev is not None else [])
+        prev = g.add(f"comp{i}", chakra.COMP, deps=deps, flops=5e10,
+                     out_bytes=1e6)
+    return g
+
+
+def test_explore_grid_and_caching():
+    captures = []
+
+    def graph_for(cfg):
+        captures.append(cfg.get("layers"))
+        return _graph(cfg.get("layers", 8))
+
+    knobs = [
+        Knob("layers", [4, 8], layer="workload"),
+        Knob("fsdp_sync", [True], layer="software"),
+        Knob("prefetch", [0, 2, 8], layer="software"),
+        Knob("link_bw", [25e9, 100e9], layer="hardware"),
+    ]
+    trials = explore(graph_for, SystemConfig(chips=16), knobs)
+    assert len(trials) == 2 * 3 * 2
+    # workload captured once per distinct workload config
+    assert len(captures) == 2
+    # best trial is sorted first
+    assert trials[0].objective == min(t.objective for t in trials)
+    # more prefetch never slower at same layers+bw
+    by = {(t.config["layers"], t.config["prefetch"], t.config["link_bw"]):
+          t.objective for t in trials}
+    for L in (4, 8):
+        for bw in (25e9, 100e9):
+            assert by[(L, 8, bw)] <= by[(L, 0, bw)] + 1e-12
+
+
+def test_greedy_descent_improves():
+    def graph_for(cfg):
+        return _graph(8)
+
+    knobs = [
+        Knob("fsdp_sync", [True], layer="software"),
+        Knob("prefetch", [0, 1, 4, 8], layer="software"),
+        Knob("collective_algo", ["ring", "2d_synth"], layer="hardware"),
+    ]
+    best = greedy_descent(graph_for, SystemConfig(chips=16), knobs)
+    base = explore(graph_for, SystemConfig(chips=16),
+                   [Knob("fsdp_sync", [True]), Knob("prefetch", [0])])[0]
+    assert best.objective <= base.objective + 1e-12
+
+
+def test_hardware_knob_changes_objective():
+    def graph_for(cfg):
+        return _graph(8, comm_mb=64.0)
+
+    trials = explore(graph_for, SystemConfig(chips=16),
+                     [Knob("link_bw", [10e9, 200e9], layer="hardware")])
+    objs = {t.config["link_bw"]: t.objective for t in trials}
+    assert objs[200e9] < objs[10e9]

@@ -1,0 +1,80 @@
+"""Per-rank Chakra ET export + straggler cost-model analysis."""
+import json
+import os
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.costmodel import build_topology, simulate
+from repro.core.costmodel.simulator import straggler_analysis
+from repro.core.export import expand_ranks, write_et
+
+
+def _spmd_graph(num_ranks=8, group_size=4):
+    g = chakra.Graph(meta={"num_partitions": num_ranks})
+    a = g.add("mm0", chakra.COMP, flops=1e9, out_bytes=1e6)
+    c = g.add("ar0", chakra.COMM_COLL, deps=[a], comm_kind="all-reduce",
+              comm_bytes=1e6, group=list(range(group_size)),
+              group_size=group_size, n_groups=num_ranks // group_size,
+              out_bytes=1e6)
+    g.add("mm1", chakra.COMP, deps=[c], flops=1e9, out_bytes=1e6)
+    return g
+
+
+def test_expand_ranks_rank_local_groups():
+    g = _spmd_graph()
+    per_rank = expand_ranks(g)
+    assert len(per_rank) == 8
+    for rank, gr in enumerate(per_rank):
+        assert gr.meta["rank"] == rank
+        coll = gr.by_type(chakra.COMM_COLL)[0]
+        assert rank in coll.attrs["group"]
+        assert len(coll.attrs["group"]) == 4
+    # ranks 0-3 share a group; 4-7 the other
+    g0 = per_rank[0].by_type(chakra.COMM_COLL)[0].attrs["group"]
+    g5 = per_rank[5].by_type(chakra.COMM_COLL)[0].attrs["group"]
+    assert g0 == [0, 1, 2, 3] and g5 == [4, 5, 6, 7]
+
+
+def test_expand_ranks_strided_groups():
+    g = chakra.Graph(meta={"num_partitions": 8})
+    a = g.add("x", chakra.COMP, flops=1, out_bytes=8)
+    g.add("ag", chakra.COMM_COLL, deps=[a], comm_kind="all-gather",
+          comm_bytes=64, group=[0, 2, 4, 6], group_size=4, n_groups=2,
+          out_bytes=64)
+    per_rank = expand_ranks(g)
+    assert per_rank[3].by_type(chakra.COMM_COLL)[0].attrs["group"] == \
+        [1, 3, 5, 7]
+
+
+def test_p2p_expansion_per_rank():
+    g = _spmd_graph()
+    per_rank = expand_ranks(g, ranks=[1], p2p_algo="ring")
+    gr = per_rank[0]
+    sends = gr.by_type(chakra.COMM_SEND)
+    recvs = gr.by_type(chakra.COMM_RECV)
+    # ring all-reduce over 4 ranks: 2(n-1) = 6 rounds, one send + one recv
+    # touching rank 1 per round
+    assert len(sends) + len(recvs) == 12
+    gr.validate()
+
+
+def test_write_et_files(tmp_path):
+    g = _spmd_graph()
+    paths = write_et(g, str(tmp_path), ranks=[0, 3, 7])
+    assert len(paths) == 3
+    man = json.load(open(os.path.join(tmp_path, "manifest.json")))
+    assert man["ranks"] == [0, 3, 7]
+    g0 = chakra.Graph.load(paths[0])
+    assert g0.meta["rank"] == 0
+    g0.validate()
+
+
+def test_straggler_analysis_monotone_and_backup():
+    g = _spmd_graph()
+    sysc = SystemConfig(chips=8)
+    rows = straggler_analysis(g, sysc, build_topology(sysc, 8),
+                              slowdowns=(1.0, 1.5, 2.0, 4.0))
+    times = [r["step_time"] for r in rows]
+    assert times == sorted(times)
+    assert not rows[0]["backup_wins"]          # no straggler: backup is waste
+    assert rows[-1]["backup_wins"]             # 4x straggler: spare pays off

@@ -1,0 +1,93 @@
+"""Graph passes: the data-dependency-preservation invariant (hypothesis),
+plus behavioural checks mirroring paper Fig 3b."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import chakra, passes
+
+
+def _fsdp_like_graph(n_layers=6):
+    """AG_i -> compute_i chain (weights AGs have no data deps, like FSDP)."""
+    g = chakra.Graph()
+    prev_comp = None
+    for i in range(n_layers):
+        ag = g.add(f"ag{i}", chakra.COMM_COLL, comm_kind="all-gather",
+                   comm_bytes=100.0, out_bytes=100.0, group=[0, 1, 2, 3])
+        deps = [ag] + ([prev_comp] if prev_comp is not None else [])
+        prev_comp = g.add(f"comp{i}", chakra.COMP, deps=deps, flops=1e9,
+                          bytes=1e6, out_bytes=10.0)
+    return g
+
+
+# -- hypothesis: random DAGs ------------------------------------------------
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(4, 30))
+    g = chakra.Graph()
+    for i in range(n):
+        maxdeps = min(i, 3)
+        deps = draw(st.lists(st.integers(0, i - 1), max_size=maxdeps,
+                             unique=True)) if i else []
+        if draw(st.booleans()) and i > 0:
+            g.add(f"c{i}", chakra.COMM_COLL, deps=deps,
+                  comm_kind=draw(st.sampled_from(
+                      ["all-gather", "all-reduce"])),
+                  comm_bytes=float(draw(st.integers(1, 10_000))),
+                  out_bytes=8.0, group=[0, 1])
+        else:
+            g.add(f"n{i}", chakra.COMP, deps=deps,
+                  flops=float(draw(st.integers(0, 10**9))), out_bytes=8.0)
+    return g
+
+
+@given(random_dag(), st.integers(0, 5))
+@settings(max_examples=40, deadline=None)
+def test_passes_preserve_data_deps(g, prefetch):
+    data_deps_before = [(n.id, tuple(n.deps)) for n in g.nodes]
+    for p in (passes.inject_fsdp_sync(g),
+              passes.reorder_prefetch(passes.inject_fsdp_sync(g), prefetch),
+              passes.strip_ctrl_deps(g)):
+        p.validate()
+        for (nid, deps), n in zip(data_deps_before, p.nodes):
+            if n.type != chakra.MEM:     # bucketing may neutralize nodes
+                assert tuple(n.deps) == deps
+
+
+@given(random_dag(), st.floats(8, 1e5))
+@settings(max_examples=40, deadline=None)
+def test_bucketing_conserves_comm_bytes(g, bucket):
+    before = g.totals()["comm"].get("all-reduce", {"bytes": 0})["bytes"]
+    g2 = passes.bucket_allreduce(g, bucket_bytes=bucket)
+    after = g2.totals()["comm"].get("all-reduce", {"bytes": 0})["bytes"]
+    assert abs(before - after) < 1e-6
+    g2.validate()
+
+
+# -- behavioural --------------------------------------------------------------
+
+def test_sync_injection_adds_only_ctrl_deps():
+    g = _fsdp_like_graph()
+    g2 = passes.inject_fsdp_sync(g)
+    extra = sum(len(n.ctrl_deps) for n in g2.nodes) \
+        - sum(len(n.ctrl_deps) for n in g.nodes)
+    assert extra == 5                       # all but the first AG get an edge
+
+
+def test_reorder_prefetch_all_removes_sync():
+    g = passes.inject_fsdp_sync(_fsdp_like_graph())
+    g2 = passes.reorder_prefetch(g, prefetch=100)
+    ags = [n for n in g2.by_type(chakra.COMM_COLL)]
+    assert all(not n.ctrl_deps for n in ags)
+
+
+def test_bucketing_merges_small_ars():
+    g = chakra.Graph()
+    c = g.add("c", chakra.COMP, flops=1)
+    for i in range(8):
+        g.add(f"ar{i}", chakra.COMM_COLL, deps=[c], comm_kind="all-reduce",
+              comm_bytes=10.0, group=[0, 1])
+    g2 = passes.bucket_allreduce(g, bucket_bytes=40.0)
+    live = [n for n in g2.by_type(chakra.COMM_COLL)]
+    assert len(live) == 2                   # 8 x 10B into 40B buckets
+    assert all(n.attrs["comm_bytes"] == 40.0 for n in live)

@@ -1,0 +1,86 @@
+"""Sharding rule resolution: divisibility fallbacks, two-pass seq, EP-vs-TP."""
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ParallelConfig
+from repro.parallel.sharding import (activation_rules, param_rules,
+                                     resolve_spec)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_batch_prefers_pod_data():
+    r = activation_rules(ParallelConfig())
+    assert resolve_spec(("batch", "seq"), (256, 4096), r, MESH3) == \
+        P(("pod", "data"), "model")
+    assert resolve_spec(("batch", "seq"), (256, 4096), r, MESH) == \
+        P("data", "model")
+
+
+def test_batch_divisibility_fallback():
+    r = activation_rules(ParallelConfig())
+    # batch=1 (long_500k): nothing divides -> replicated
+    spec = resolve_spec(("batch", None), (1, 1), r, MESH)
+    assert spec == P()
+
+
+def test_seq_is_low_priority():
+    r = activation_rules(ParallelConfig(seq_shard=True))
+    # residual (batch, seq, embed): seq gets model
+    assert resolve_spec(("batch", "seq", "embed"), (256, 4096, 4096), r,
+                        MESH) == P("data", "model")
+    # q (batch, seq, heads, hd): heads wins model, seq left unsharded
+    assert resolve_spec(("batch", "seq", "heads", None),
+                        (256, 4096, 32, 128), r, MESH) == \
+        P("data", None, "model")
+
+
+def test_heads_divisibility_fallback():
+    r = activation_rules(ParallelConfig(seq_shard=False))
+    # gemma3-4b: 8 q-heads on 16-way model axis -> replicated heads
+    assert resolve_spec(("batch", None, "heads", None), (256, 1, 8, 256), r,
+                        MESH) == P("data")
+
+
+def test_ep_vs_tp_falls_out_of_divisibility():
+    r = param_rules(ParallelConfig(fsdp=False))
+    # dbrx: 16 experts -> EP on model; ff blocked (axis used)
+    assert resolve_spec(("experts", "embed", "ff"), (16, 6144, 10752), r,
+                        MESH) == P("model")
+    # mixtral: 8 experts don't divide 16 -> ff gets model (TP)
+    assert resolve_spec(("experts", "embed", "ff"), (8, 4096, 14336), r,
+                        MESH) == P(None, None, "model")
+
+
+def test_fsdp_shards_embed_dim_of_params():
+    rp = param_rules(ParallelConfig(fsdp=True))
+    assert resolve_spec(("embed", "ff"), (4096, 12288), rp, MESH) == \
+        P("data", "model")
+    # activations never FSDP-shard embed (no "data" in the embed slot)
+    ra = activation_rules(ParallelConfig(seq_shard=False))
+    spec = resolve_spec(("batch", "seq", "embed"), (32, 128, 4096), ra, MESH)
+    assert spec == P("data")
+
+
+def test_no_duplicate_axis_in_one_tensor():
+    r = activation_rules(ParallelConfig(seq_shard=True))
+    spec = resolve_spec(("vocab", "embed", "ff"), (256 * 16, 4096, 12288), r,
+                        MESH)
+    flat = [a for a in spec if a]
+    assert len(flat) == len(set(flat))
+
+
+def test_cache_sharding_only_when_enabled():
+    r_on = activation_rules(ParallelConfig(seq_shard_cache=True))
+    r_off = activation_rules(ParallelConfig(seq_shard_cache=False))
+    axes = ("batch", "cache", "kv_heads", None)
+    shape = (1, 524288, 8, 256)
+    assert resolve_spec(axes, shape, r_on, MESH) == P(None, "data")
+    assert resolve_spec(axes, shape, r_off, MESH) == P()
