@@ -5,6 +5,7 @@ it can set XLA_FLAGS before importing jax.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 
@@ -60,3 +61,12 @@ PRESET_70B = dict(n_layers=80, d_model=8192, d_ff=28672)
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def write_json(name: str, payload) -> str:
+    """Write a benchmark result file under artifacts/bench; returns path."""
+    path = os.path.join(ART, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

@@ -8,6 +8,7 @@
   wafer_tacos      Fig 11  synthesized collectives on wafer-scale 2-D mesh
   nic_degradation  Fig 12  degraded-NIC detection from the workload graph
   roofline         (ours)  40-cell roofline table from the dry-run
+  sim_bench        (ours)  compiled simulator/DSE engine vs seed reference
 
 Each bench runs in its own subprocess so it controls its fake-device count
 before importing jax."""
@@ -17,7 +18,7 @@ import sys
 import time
 
 BENCHES = ["opcounts", "e2e_validation", "fsdp_reorder", "bandwidth_sweep",
-           "wafer_tacos", "nic_degradation", "roofline"]
+           "wafer_tacos", "nic_degradation", "roofline", "sim_bench"]
 
 
 def main() -> None:

@@ -1,0 +1,186 @@
+"""Simulator/DSE engine benchmark: compiled substrate vs seed reference path.
+
+Synthetic FSDP-layer-stack graphs (all-gather -> fwd -> bwd -> all-reduce per
+layer) at 1k/10k/50k nodes.  Three scenarios, each timed best-of-reps:
+
+  simulate.cached     repeated identical simulate() calls — the compiled
+                      engine memoizes structure, durations AND the SimResult
+                      (the DSE inner-loop pattern), vs the reference engine
+                      which rebuilds everything per call.
+  simulate.loop       duration-override calls that force a full event-loop
+                      replay per call (lower bound on engine speedup: no
+                      result/duration caching, only structural reuse).
+  straggler           straggler_analysis (5 slowdown factors) — batched
+                      duration-override replays on one compiled graph vs the
+                      per-factor reference re-simulation the seed did.
+  explore.64          64-trial software+hardware DSE grid via dse.explore()
+                      (memoized passes + compiled engine, serial) vs the
+                      seed explore loop (re-applies passes and re-simulates
+                      with the reference engine per trial).
+
+Writes BENCH_sim.json (scenario -> times and speedups) via common.write_json
+and prints the usual ``name,us_per_call,derived`` CSV lines.
+
+No jax required — graphs are built directly; runs in seconds.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, write_json
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core import dse
+from repro.core.costmodel import build_topology, simulate, straggler_analysis
+from repro.core.costmodel.compiled import compile_graph
+from repro.core.costmodel.simulator import _simulate_reference, node_duration
+from repro.core.costmodel.topology import Topology
+
+
+def layered_graph(n_nodes: int) -> chakra.Graph:
+    """FSDP-ish layer stack, 4 nodes per layer."""
+    g = chakra.Graph()
+    prev = None
+    for i in range(n_nodes // 4):
+        ag = g.add(f"ag{i}", chakra.COMM_COLL, comm_kind="all-gather",
+                   comm_bytes=8e6, out_bytes=8e6, group=list(range(16)),
+                   ctrl_deps=[prev] if prev is not None else [])
+        fwd = g.add(f"f{i}", chakra.COMP,
+                    deps=[ag] + ([prev] if prev is not None else []),
+                    flops=5e10, bytes=1e8, out_bytes=1e6)
+        bwd = g.add(f"b{i}", chakra.COMP, deps=[fwd], flops=1e11,
+                    bytes=2e8, out_bytes=1e6)
+        g.add(f"ar{i}", chakra.COMM_COLL, deps=[bwd],
+              comm_kind="all-reduce", comm_bytes=4e6, group=list(range(16)))
+        prev = bwd
+    return g
+
+
+def best_of(fn, reps: int = 5, inner: int = 1) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            fn()
+        ts.append((time.perf_counter() - t0) / inner)
+    return min(ts)
+
+
+def bench_simulate(sysc, topo: Topology, sizes=(1_000, 10_000, 50_000)):
+    out = {}
+    for n in sizes:
+        g = layered_graph(n)
+        r = simulate(g, sysc, topo)                  # warm all caches
+        assert r == _simulate_reference(g, sysc, topo), "engine mismatch"
+        cg = compile_graph(g)
+        base = cg.durations(sysc, topo)
+        ov = {0: base[0]}                            # forces event-loop run
+
+        inner = max(1, 200_000 // n)
+        t_cached = best_of(lambda: simulate(g, sysc, topo), inner=inner * 5)
+        t_loop = best_of(lambda: simulate(g, sysc, topo, durations=ov),
+                         inner=inner)
+        t_ref = best_of(lambda: _simulate_reference(g, sysc, topo),
+                        reps=3, inner=1)
+        out[f"{n}"] = {
+            "n_nodes": len(g),
+            "reference_ms": t_ref * 1e3,
+            "compiled_cached_ms": t_cached * 1e3,
+            "compiled_loop_ms": t_loop * 1e3,
+            "speedup_cached": t_ref / t_cached,
+            "speedup_loop": t_ref / t_loop,
+        }
+        emit(f"sim_bench.simulate_{n}.cached", t_cached * 1e6,
+             f"{t_ref / t_cached:.1f}x_vs_ref")
+        emit(f"sim_bench.simulate_{n}.loop", t_loop * 1e6,
+             f"{t_ref / t_loop:.1f}x_vs_ref")
+    return out
+
+
+def _straggler_reference(g, sysc, topo, slowdowns):
+    """The seed straggler path: full reference re-simulation per factor."""
+    nominal = _simulate_reference(g, sysc, topo).total_time
+    rows = []
+    for f in slowdowns:
+        dur = {n.id: node_duration(n, sysc, topo) * f
+               for n in g.nodes if n.type == chakra.COMP}
+        t = _simulate_reference(g, sysc, topo, durations=dur).total_time
+        rows.append(t / nominal)
+    return rows
+
+
+def bench_straggler(sysc, topo, n=10_000):
+    g = layered_graph(n)
+    slow = (1.0, 1.1, 1.25, 1.5, 2.0)
+    straggler_analysis(g, sysc, topo, slowdowns=slow)      # warm
+    t_new = best_of(lambda: straggler_analysis(g, sysc, topo,
+                                               slowdowns=slow), reps=3)
+    t_ref = best_of(lambda: _straggler_reference(g, sysc, topo, slow),
+                    reps=2)
+    emit("sim_bench.straggler_10k", t_new * 1e6, f"{t_ref / t_new:.1f}x_vs_ref")
+    return {"n_nodes": n, "n_factors": len(slow),
+            "reference_ms": t_ref * 1e3, "batched_ms": t_new * 1e3,
+            "speedup": t_ref / t_new}
+
+
+def _seed_explore(g, sysc, cfgs, objective="total_time"):
+    """The seed explore loop: per-trial pass application + reference sim."""
+    trials = []
+    for cfg in cfgs:
+        sys2 = dse._system_for(sysc, cfg)
+        g2 = dse.apply_software_knobs(g, cfg)
+        topo = build_topology(sys2)
+        res = _simulate_reference(g2, sys2, topo, algo=sys2.collective_algo)
+        trials.append(dse.Trial(cfg, res, getattr(res, objective)))
+    trials.sort(key=lambda t: t.objective)
+    return trials
+
+
+def bench_explore(sysc, n=2_000):
+    g = layered_graph(n)
+    knobs = [
+        dse.Knob("fsdp_sync", [True, False], layer="software"),
+        dse.Knob("prefetch", [0, 1, 2, 4], layer="software"),
+        dse.Knob("bucket_bytes", [0, 16e6], layer="software"),
+        dse.Knob("link_bw", [25e9, 50e9, 100e9, 400e9], layer="hardware"),
+    ]
+    n_trials = 2 * 4 * 2 * 4
+    assert n_trials == 64
+    import itertools
+    cfgs = [dict(c) for c in itertools.product(
+        *[[(k.name, v) for v in k.values] for k in knobs])]
+
+    def new():
+        return dse.explore(lambda cfg: g, sysc, knobs, budget=n_trials)
+
+    ref_trials = _seed_explore(g, sysc, cfgs)
+    new_trials = new()                                     # warm + check
+    assert [t.objective for t in new_trials] == \
+        [t.objective for t in ref_trials], "explore result drift vs seed"
+    t_new = best_of(new, reps=3)
+    t_par = best_of(lambda: dse.explore(lambda cfg: g, sysc, knobs,
+                                        budget=n_trials, parallel=4), reps=3)
+    t_ref = best_of(lambda: _seed_explore(g, sysc, cfgs), reps=2)
+    emit("sim_bench.explore_64", t_new * 1e6, f"{t_ref / t_new:.1f}x_vs_ref")
+    return {"n_nodes": n, "n_trials": n_trials,
+            "reference_ms": t_ref * 1e3, "compiled_ms": t_new * 1e3,
+            "compiled_parallel4_ms": t_par * 1e3,
+            "speedup": t_ref / t_new,
+            "speedup_parallel4": t_ref / t_par}
+
+
+def main():
+    sysc = SystemConfig(chips=16)
+    topo = build_topology(sysc)
+    payload = {
+        "simulate": bench_simulate(sysc, topo),
+        "straggler": bench_straggler(sysc, topo),
+        "explore": bench_explore(sysc),
+    }
+    path = write_json("BENCH_sim.json", payload)
+    emit("sim_bench.done", 0.0, path)
+
+
+if __name__ == "__main__":
+    main()

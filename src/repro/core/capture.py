@@ -235,8 +235,9 @@ def capture_step(step_fn, abstract_args, in_shardings, mesh,
         kw["in_shardings"] = in_shardings
     if out_shardings is not None:
         kw["out_shardings"] = out_shardings
+    from repro.parallel.mesh import mesh_context
     jitted = jax.jit(step_fn, donate_argnums=donate_argnums, **kw)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jitted.lower(*abstract_args)
         t_lower = time.time() - t0
         t0 = time.time()

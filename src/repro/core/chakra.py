@@ -12,6 +12,19 @@ point-to-point messages, MEM for host/staging ops.  Two edge kinds:
 
 Serialized as JSON ET (one file per rank) so external Chakra consumers
 (ASTRA-sim, Genie, ...) stay pluggable (P1).
+
+Derived structure (topo order, consumer lists, the costmodel's CompiledGraph)
+is memoized on the Graph under a cheap edit token — (n_nodes, n_dep_edges,
+n_ctrl_edges, numeric-attr checksum) — so repeated simulate()/pass queries
+don't rebuild O(N+E) state.  The token catches every mutation made through
+``add()``, every in-place edge edit that changes an edge count, and every
+in-place edit of the numeric attrs the cost model reads (flops, bytes,
+comm_bytes, out_bytes) or of the attr-key set (hash-exact per value and
+position; collisions are astronomically unlikely, not adversarial-proof).
+Code that rewrites edge *targets* while keeping counts identical, or that
+edits non-numeric attr *values* in place (comm_kind, group contents), must
+call ``invalidate_caches()`` — though the codebase idiom is to ``copy()``
+before editing (all passes do).
 """
 from __future__ import annotations
 
@@ -44,6 +57,36 @@ class Graph:
     def __init__(self, meta: Optional[Dict] = None):
         self.nodes: List[Node] = []
         self.meta: Dict = meta or {}
+        self._cache: Dict = {}
+
+    # -- derived-structure cache --------------------------------------------
+    def _token(self):
+        """Cheap edit token guarding memoized derived structure: node/edge
+        counts plus a position-sensitive hash of the numeric attrs the cost
+        model reads, so in-place edits like ``g.node(i).attrs["flops"] = x``
+        — including swaps between nodes and tiny deltas next to huge values
+        (no float-sum absorption) — invalidate too."""
+        nodes = self.nodes
+        attrs_h = hash(tuple([
+            hash((a.get("flops", 0.0), a.get("bytes", 0.0),
+                  a.get("comm_bytes", 0.0), a.get("out_bytes", 0.0), len(a)))
+            for a in [n.attrs for n in nodes]]))
+        return (len(nodes), sum([len(n.deps) for n in nodes]),
+                sum([len(n.ctrl_deps) for n in nodes]), attrs_h)
+
+    def invalidate_caches(self):
+        """Drop memoized topo order / consumers / compiled form.  Needed only
+        after in-place edge retargeting that preserves edge counts."""
+        self._cache = {}
+
+    def _cached(self, key: str, build):
+        tok = self._token()
+        hit = self._cache.get(key)
+        if hit is not None and hit[0] == tok:
+            return hit[1]
+        val = build()
+        self._cache[key] = (tok, val)
+        return val
 
     # -- construction -------------------------------------------------------
     def add(self, name: str, type: str, deps: Iterable[int] = (),
@@ -64,27 +107,51 @@ class Graph:
         return [n for n in self.nodes if n.type == t]
 
     def consumers(self) -> Dict[int, List[int]]:
+        """dep id -> consumer ids (duplicates kept when a consumer lists the
+        same dep in both edge kinds).  Memoized; treat the result as
+        read-only."""
+        return self._cached("consumers", self._build_consumers)
+
+    def _build_consumers(self) -> Dict[int, List[int]]:
         out: Dict[int, List[int]] = {n.id: [] for n in self.nodes}
         for n in self.nodes:
-            for d in n.all_deps:
+            for d in n.deps:
+                out[d].append(n.id)
+            for d in n.ctrl_deps:
                 out[d].append(n.id)
         return out
 
     def topo_order(self) -> List[int]:
-        indeg = {n.id: len(set(n.all_deps)) for n in self.nodes}
-        cons = self.consumers()
-        ready = [nid for nid, d in indeg.items() if d == 0]
+        """Kahn order with LIFO tie-breaking.  Memoized; treat the result as
+        read-only."""
+        return self._cached("topo", self._build_topo_order)
+
+    def _build_topo_order(self) -> List[int]:
+        n_nodes = len(self.nodes)
+        dense = all(n.id == i for i, n in enumerate(self.nodes))
+        if dense:
+            indeg = [0] * n_nodes
+            cons: List[List[int]] = [[] for _ in range(n_nodes)]  # dedup'd
+        else:                       # hand-built graphs with arbitrary ids
+            indeg = {n.id: 0 for n in self.nodes}
+            cons = {n.id: [] for n in self.nodes}
+        for n in self.nodes:
+            ad = n.deps + n.ctrl_deps
+            if len(ad) > 1:
+                ad = set(ad)
+            indeg[n.id] = len(ad)
+            for d in ad:
+                cons[d].append(n.id)
+        ready = [n.id for n in self.nodes if indeg[n.id] == 0]
         order: List[int] = []
-        seen_edges: Dict[int, set] = {n.id: set(n.all_deps) for n in self.nodes}
         while ready:
             nid = ready.pop()
             order.append(nid)
             for c in cons[nid]:
-                if nid in seen_edges[c]:
-                    seen_edges[c].discard(nid)
-                    if not seen_edges[c]:
-                        ready.append(c)
-        if len(order) != len(self.nodes):
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    ready.append(c)
+        if len(order) != n_nodes:
             raise ValueError("graph has a cycle")
         return order
 

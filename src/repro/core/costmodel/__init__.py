@@ -3,11 +3,16 @@ from repro.core.costmodel.topology import (Topology, Switch, Ring, Torus2D,
 from repro.core.costmodel.collectives import (collective_time,
                                               synthesize_2d_time,
                                               synthesize_2d_p2p)
-from repro.core.costmodel.simulator import simulate, SimResult, node_duration
+from repro.core.costmodel.compiled import CompiledGraph, compile_graph
+from repro.core.costmodel.simulator import (simulate, simulate_batch,
+                                            straggler_analysis, SimResult,
+                                            node_duration)
 from repro.core.costmodel.analytical import (roofline, RooflineTerms,
                                              model_flops_per_step)
 
 __all__ = ["Topology", "Switch", "Ring", "Torus2D", "Wafer2D", "MultiPod",
            "build_topology", "collective_time", "synthesize_2d_time",
-           "synthesize_2d_p2p", "simulate", "SimResult", "node_duration",
-           "roofline", "RooflineTerms", "model_flops_per_step"]
+           "synthesize_2d_p2p", "CompiledGraph", "compile_graph",
+           "simulate", "simulate_batch", "straggler_analysis", "SimResult",
+           "node_duration", "roofline", "RooflineTerms",
+           "model_flops_per_step"]

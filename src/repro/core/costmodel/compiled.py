@@ -1,0 +1,361 @@
+"""Compiled graph substrate: lower a chakra.Graph once, simulate many times.
+
+``CompiledGraph`` flattens the Python ``Node`` objects into flat columns —
+NumPy attribute arrays plus adjacency with both a NumPy CSR view and
+Python-list mirrors.  The event loop runs on the list mirrors (element-wise
+indexing of small Python lists beats NumPy scalar indexing by ~5x); the CSR
+arrays are materialized lazily on first access for exporters/array-level
+consumers:
+
+  type_code[n]     0=COMP 1=COMM_COLL 2=COMM_SEND 3=COMM_RECV 4=MEM
+  is_comm[n]       1 for the three COMM_* codes (busy-time accounting key)
+  pos[n]           position of node n in the cached topological order
+  flops/bytes/comm_bytes/out_bytes[n]
+                   float64 attribute columns (absent attr -> 0.0)
+  dep_indptr/dep_indices        dedup'd union of deps+ctrl_deps, CSR (lazy)
+  ddep_indptr/ddep_indices      dedup'd *data* deps only, CSR (lazy)
+  cons_indptr/cons_indices      dedup'd consumers (reverse adjacency, lazy)
+
+Per-node durations depend on (system, topology, algo, derate), so they are
+memoized separately in ``durations()`` keyed by the reprs of those frozen /
+dataclass objects — a hardware sweep over one graph recompiles nothing and a
+duration-only sweep (stragglers) reuses both structure and base durations.
+
+``run()`` replays *exactly* the reference event-driven list-scheduling
+algorithm in ``simulator._simulate_reference`` (same priorities, same
+tie-breaking, same float accumulation order), so its ``SimResult`` is
+bit-identical — equivalence is enforced by tests/test_compiled_sim.py on
+randomized DAGs.
+
+Use ``compile_graph(g)`` to get the per-Graph cached instance; the cache key
+is the Graph's edit token (see chakra.Graph docstring for the invalidation
+contract).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import chakra
+from repro.core.costmodel.collectives import collective_time
+from repro.core.costmodel.topology import Topology, build_topology
+
+_TYPE_CODES = {chakra.COMP: 0, chakra.COMM_COLL: 1, chakra.COMM_SEND: 2,
+               chakra.COMM_RECV: 3, chakra.MEM: 4}
+
+
+def _csr(adj: List, n: int):
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    for i, row in enumerate(adj):
+        indptr[i + 1] = indptr[i] + len(row)
+    indices = np.empty(int(indptr[-1]), dtype=np.int64)
+    for i, row in enumerate(adj):
+        indices[int(indptr[i]):int(indptr[i + 1])] = row
+    return indptr, indices
+
+
+class CompiledGraph:
+    def __init__(self, g: chakra.Graph):
+        nodes = g.nodes
+        n = len(nodes)
+        self.n = n
+        if any(nd.id != i for i, nd in enumerate(nodes)):
+            raise ValueError("CompiledGraph requires contiguous node ids")
+
+        order = g.topo_order()
+        pos = [0] * n
+        for i, nid in enumerate(order):
+            pos[nid] = i
+
+        self.type_code = np.array([_TYPE_CODES.get(nd.type, 4)
+                                   for nd in nodes], dtype=np.int8)
+        self.is_comm = ((self.type_code >= 1) & (self.type_code <= 3))
+        self.flops = np.array([nd.attrs.get("flops", 0.0) for nd in nodes],
+                              dtype=np.float64)
+        self.bytes = np.array([nd.attrs.get("bytes", 0.0) for nd in nodes],
+                              dtype=np.float64)
+        self.comm_bytes = np.array([nd.attrs.get("comm_bytes", 0.0)
+                                    for nd in nodes], dtype=np.float64)
+        self.out_bytes = np.array([nd.attrs.get("out_bytes", 0.0)
+                                   for nd in nodes], dtype=np.float64)
+
+        deps_l, ddeps_l, cons_l = [], [], [[] for _ in range(n)]
+        for nd in nodes:
+            ad = nd.deps + nd.ctrl_deps
+            dd = sorted(set(ad)) if len(ad) > 1 else list(ad)
+            deps_l.append(tuple(dd))
+            dds = nd.deps if len(nd.deps) <= 1 else sorted(set(nd.deps))
+            ddeps_l.append(tuple(dds))
+            for d in dd:
+                cons_l[d].append(nd.id)
+        self._csr_cache: Dict = {}             # built lazily, see csr()
+
+        # hot-loop mirrors (plain Python containers)
+        self._pos = pos
+        self._order = list(order)              # pos -> nid
+        self._zeros = [0] * n
+        self._is_comm = self.is_comm.astype(np.int64).tolist()
+        self._out_bytes = self.out_bytes.tolist()
+        self._deps = deps_l
+        self._ddeps = ddeps_l
+        self._cons = [tuple(c) for c in cons_l]
+        self._indeg0 = [len(d) for d in deps_l]
+        dcount = [0] * n
+        for dds in ddeps_l:
+            for d in dds:
+                dcount[d] += 1
+        self._dcount0 = dcount
+        self._roots = [i for i in range(n) if self._indeg0[i] == 0]
+        self._names = [nd.name for nd in nodes]
+
+        # duration metadata for COMM_COLL nodes; the hashable group tuple
+        # keys the per-config memo in durations() (layer stacks repeat the
+        # same (kind, payload, group) hundreds of times)
+        self._coll_ids = [nd.id for nd in nodes
+                          if nd.type == chakra.COMM_COLL]
+        self._coll_meta = []
+        for nd in nodes:
+            if nd.type != chakra.COMM_COLL:
+                continue
+            group = (nd.attrs.get("group")
+                     or list(range(nd.attrs.get("group_size", 1))))
+            self._coll_meta.append((nd.attrs.get("comm_kind", "all-reduce"),
+                                    group, tuple(group)))
+
+        self._dur_cache: Dict = {}
+        self._result_cache: Dict = {}
+
+    # -- CSR views -----------------------------------------------------------
+    def csr(self, kind: str):
+        """(indptr, indices) int64 CSR arrays for `kind` in {"deps" (dedup'd
+        deps+ctrl union), "ddeps" (dedup'd data deps), "cons" (dedup'd
+        consumers)}.  Built lazily: the event loop runs on the Python-list
+        mirrors, so the arrays cost nothing until an exporter or an
+        array-level consumer (e.g. future multi-rank simulation) asks."""
+        hit = self._csr_cache.get(kind)
+        if hit is None:
+            adj = {"deps": self._deps, "ddeps": self._ddeps,
+                   "cons": self._cons}[kind]
+            hit = self._csr_cache[kind] = _csr(adj, self.n)
+        return hit
+
+    @property
+    def pos(self):
+        return np.asarray(self._pos, dtype=np.int64)
+
+    @property
+    def dep_indptr(self):
+        return self.csr("deps")[0]
+
+    @property
+    def dep_indices(self):
+        return self.csr("deps")[1]
+
+    @property
+    def ddep_indptr(self):
+        return self.csr("ddeps")[0]
+
+    @property
+    def ddep_indices(self):
+        return self.csr("ddeps")[1]
+
+    @property
+    def cons_indptr(self):
+        return self.csr("cons")[0]
+
+    @property
+    def cons_indices(self):
+        return self.csr("cons")[1]
+
+    @staticmethod
+    def config_key(system, topo, algo: str, compute_derate: float):
+        """Hashable identity of everything durations depend on.  reprs of
+        the (frozen/field-only) dataclasses are deterministic and cheap."""
+        return (repr(system), type(topo).__name__, repr(topo), algo,
+                compute_derate)
+
+    # -- durations -----------------------------------------------------------
+    def durations(self, system, topo: Optional[Topology] = None,
+                  algo: str = "auto",
+                  compute_derate: float = 0.6) -> List[float]:
+        """Per-node base durations, memoized by (system, topo, algo, derate).
+
+        Matches simulator.node_duration element-wise (bit-identical: plain
+        IEEE-double ops either way).  Returns a read-only list — callers that
+        override entries must copy first.
+        """
+        topo = topo or build_topology(system)
+        key = self.config_key(system, topo, algo, compute_derate)
+        hit = self._dur_cache.get(key)
+        if hit is not None:
+            return hit
+        dur = np.zeros(self.n, dtype=np.float64)
+        comp = self.type_code == 0
+        if comp.any():
+            t_f = self.flops[comp] / (system.peak_flops * compute_derate)
+            t_b = self.bytes[comp] / system.hbm_bw
+            dur[comp] = np.maximum(t_f, t_b)
+        p2p = (self.type_code == 2) | (self.type_code == 3)
+        if p2p.any():
+            dur[p2p] = (self.comm_bytes[p2p] / topo.link_bw
+                        + topo.link_latency)
+        dur_l = dur.tolist()
+        cb = self.comm_bytes
+        coll_memo: Dict = {}
+        for nid, (kind, group, group_t) in zip(self._coll_ids,
+                                               self._coll_meta):
+            payload = float(cb[nid])
+            ck = (kind, payload, group_t)
+            t = coll_memo.get(ck)
+            if t is None:
+                t = collective_time(kind, payload, group, topo, algo)
+                coll_memo[ck] = t
+            dur_l[nid] = t
+        self._dur_cache[key] = dur_l
+        return dur_l
+
+    # -- event loop ----------------------------------------------------------
+    def run(self, dur: List[float], overlap: bool = True,
+            keep_timeline: bool = False):
+        """Replay of the reference two-stream list scheduler over the flat
+        arrays.  `dur` is a full per-node duration list (see durations()).
+
+        Differences from the reference are representational only: heaps hold
+        bare topo positions (nid = order[pos]; pos is unique so priorities
+        are unchanged), and a ready node whose dep time has already passed
+        goes straight to the avail heap — the reference would move it there
+        in the drain step of the very next scheduling decision, before any
+        candidate comparison, so every decision sees identical heap state.
+        """
+        from repro.core.costmodel.simulator import SimResult
+
+        n_total = self.n
+        pos = self._pos
+        order = self._order
+        ddeps = self._ddeps
+        cons = self._cons
+        out_b = self._out_bytes
+        is_comm = self._is_comm
+        scode = is_comm if overlap else self._zeros
+        remaining = self._indeg0[:]
+        dcount = self._dcount0[:]
+        # dmax[c] = max finish time over c's already-finished deps: every
+        # (dedup'd) dep decrements remaining[c] exactly once, so by the time
+        # remaining[c] hits 0 this equals max(finish[d] for d in deps[c]).
+        dmax = [0.0] * n_total
+        total = 0.0                            # running max finish time
+        sf0 = sf1 = 0.0                        # stream clocks
+        busy0 = busy1 = 0.0                    # busy time by *node type*
+        avail0: List[int] = []                 # heaps of topo positions
+        avail1: List[int] = []
+        future0: List = []                     # heaps of (dep_t, pos)
+        future1: List = []
+        timeline = [] if keep_timeline else None
+        mem_events = []
+        push, pop = heapq.heappush, heapq.heappop
+
+        for nid in self._roots:
+            (avail1 if scode[nid] else avail0).append(pos[nid])
+        heapq.heapify(avail0)
+        heapq.heapify(avail1)
+
+        scheduled = 0
+        while scheduled < n_total:
+            while future0 and future0[0][0] <= sf0:
+                push(avail0, pop(future0)[1])
+            while future1 and future1[0][0] <= sf1:
+                push(avail1, pop(future1)[1])
+            if avail0:
+                est0, p0, a0 = sf0, avail0[0], True
+            elif future0:
+                dt, p0 = future0[0]
+                est0, a0 = (dt if dt > sf0 else sf0), False
+            else:
+                p0 = -1
+            if avail1:
+                est1, p1, a1 = sf1, avail1[0], True
+            elif future1:
+                dt, p1 = future1[0]
+                est1, a1 = (dt if dt > sf1 else sf1), False
+            else:
+                p1 = -1
+            if p0 >= 0 and (p1 < 0 or est0 < est1
+                            or (est0 == est1 and p0 < p1)):
+                s = 0
+                p = pop(avail0) if a0 else pop(future0)[1]
+                start = est0
+            elif p1 >= 0:
+                s = 1
+                p = pop(avail1) if a1 else pop(future1)[1]
+                start = est1
+            else:
+                raise ValueError("deadlock: no ready nodes but graph "
+                                 "unfinished")
+            nid = order[p]
+            d = dur[nid]
+            end = start + d
+            if s:
+                sf1 = end
+            else:
+                sf0 = end
+            if is_comm[nid]:
+                busy1 += d
+            else:
+                busy0 += d
+            if end > total:
+                total = end
+            scheduled += 1
+            if timeline is not None:
+                timeline.append((nid, self._names[nid],
+                                 "comm" if s else "comp", start, end))
+            ob = out_b[nid]
+            if ob:
+                mem_events.append((start, ob))
+            for c in cons[nid]:
+                r = remaining[c] - 1
+                remaining[c] = r
+                dep_t = dmax[c]
+                if end > dep_t:
+                    dmax[c] = dep_t = end
+                if r == 0:
+                    pc = pos[c]
+                    if scode[c]:
+                        if dep_t <= sf1:
+                            push(avail1, pc)
+                        else:
+                            push(future1, (dep_t, pc))
+                    else:
+                        if dep_t <= sf0:
+                            push(avail0, pc)
+                        else:
+                            push(future0, (dep_t, pc))
+            for dd in ddeps[nid]:
+                r = dcount[dd] - 1
+                dcount[dd] = r
+                if r <= 0:
+                    ob = out_b[dd]
+                    if ob:
+                        mem_events.append((end, -ob))
+
+        busy = (busy0, busy1)
+        live = peak = 0.0
+        for _, delta in sorted(mem_events):
+            live += delta
+            if live > peak:
+                peak = live
+        exposed = total - busy[0]
+        if exposed < 0.0:
+            exposed = 0.0
+        return SimResult(total_time=total, compute_time=busy[0],
+                         comm_time=busy[1], exposed_comm=exposed,
+                         peak_bytes=peak, n_nodes=n_total, timeline=timeline)
+
+
+def compile_graph(g: chakra.Graph) -> CompiledGraph:
+    """Lower `g` to a CompiledGraph, memoized on the Graph's edit token."""
+    cached = getattr(g, "_cached", None)
+    if cached is not None:                     # chakra.Graph (has cache infra)
+        return g._cached("compiled", lambda: CompiledGraph(g))
+    return CompiledGraph(g)

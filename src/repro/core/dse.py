@@ -5,14 +5,25 @@ The knob space spans the paper's three layers:
   software  -- graph passes (reorder/bucketing), collective algorithm
   hardware  -- topology, bandwidths, chip count
 
-explore() walks a knob grid; captures are cached by workload key (changing
-only system knobs reuses the captured graph — the paper's SS4.4 workflow
-distinction), cost-model evaluations are cheap.
+explore() walks a knob grid; work is reused at every layer of the stack:
+
+  * captures are cached by workload key (changing only system knobs reuses
+    the captured graph — the paper's SS4.4 workflow distinction);
+  * software-pass application is memoized by (workload key, software-knob
+    tuple), so inject_fsdp_sync/reorder_prefetch/bucket_allreduce copy the
+    graph once per distinct software config instead of once per trial;
+  * each transformed graph is lowered once by the compiled simulator
+    substrate (costmodel.compiled), so hardware-knob sweeps over one graph
+    recompile nothing — per-trial cost is one event-loop replay;
+  * ``explore(..., parallel=N)`` evaluates independent trials on a
+    concurrent.futures thread pool (trial evaluation releases no locks and
+    the caches are GIL-safe dict ops; results are identical to serial).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional
 
 from repro.core import chakra, passes
@@ -38,6 +49,10 @@ class Trial:
                 "objective": self.objective, **self.result.as_dict()}
 
 
+_SOFTWARE_KNOBS = ("fsdp_sync", "prefetch", "bucket_bytes")
+_SYSTEM_KNOBS = ("topology", "collective_algo", "link_bw", "dcn_bw", "chips")
+
+
 def apply_software_knobs(g: chakra.Graph, config: Dict) -> chakra.Graph:
     """Standard software-layer knobs understood by the explorer."""
     if config.get("fsdp_sync"):
@@ -51,57 +66,103 @@ def apply_software_knobs(g: chakra.Graph, config: Dict) -> chakra.Graph:
     return g
 
 
-def evaluate(g: chakra.Graph, system, config: Dict) -> SimResult:
-    sys2 = system
-    for k in ("topology", "collective_algo", "link_bw", "dcn_bw", "chips"):
-        if k in config:
-            sys2 = sys2.replace(**{k: config[k]})
-    g2 = apply_software_knobs(g, config)
+def _sw_key(cfg: Dict) -> tuple:
+    return tuple((k, str(cfg.get(k))) for k in _SOFTWARE_KNOBS)
+
+
+def _system_for(system, cfg: Dict):
+    for k in _SYSTEM_KNOBS:
+        if k in cfg:
+            system = system.replace(**{k: cfg[k]})
+    return system
+
+
+def _simulate_cfg(g2: chakra.Graph, system, config: Dict) -> SimResult:
+    """Simulate an already-transformed graph under config's system knobs —
+    the shared tail of evaluate/explore/greedy_descent."""
+    sys2 = _system_for(system, config)
     topo = build_topology(sys2)
     return simulate(g2, sys2, topo, algo=sys2.collective_algo)
 
 
+def evaluate(g: chakra.Graph, system, config: Dict) -> SimResult:
+    return _simulate_cfg(apply_software_knobs(g, config), system, config)
+
+
 def explore(graph_for: Callable[[Dict], chakra.Graph], system,
             knobs: List[Knob], objective: str = "total_time",
-            strategy: str = "grid", budget: int = 256) -> List[Trial]:
+            strategy: str = "grid", budget: int = 256,
+            parallel: Optional[int] = None) -> List[Trial]:
     """graph_for(workload_config) -> Chakra graph (cached by key).
 
-    Returns trials sorted by objective (ascending)."""
+    `parallel=N` evaluates trials on N threads (identical results, sorted
+    the same; capture and pass application stay serial so graph mutation
+    never races).  Returns trials sorted by objective (ascending)."""
     wl_knobs = [k for k in knobs if k.layer == "workload"]
-    other = [k for k in knobs if k.layer != "workload"]
-    cache: Dict = {}
-    trials: List[Trial] = []
+    graph_cache: Dict = {}
+    sw_cache: Dict = {}
 
     def wl_key(cfg):
         return tuple(sorted((k.name, str(cfg.get(k.name))) for k in wl_knobs))
 
     combos = itertools.product(*[[(k.name, v) for v in k.values]
                                  for k in knobs]) if knobs else [()]
-    for combo in itertools.islice(combos, budget):
-        cfg = dict(combo)
+    cfgs = [dict(c) for c in itertools.islice(combos, budget)]
+
+    # serial phase: capture per distinct workload, transform per distinct
+    # (workload, software) pair — both memoized
+    for cfg in cfgs:
         key = wl_key(cfg)
-        if key not in cache:
-            cache[key] = graph_for(cfg)            # recapture only on workload change
-        res = evaluate(cache[key], system, cfg)
-        obj = getattr(res, objective)
-        trials.append(Trial(cfg, res, obj))
+        if key not in graph_cache:
+            graph_cache[key] = graph_for(cfg)  # recapture only on wl change
+        skey = (key, _sw_key(cfg))
+        if skey not in sw_cache:
+            sw_cache[skey] = apply_software_knobs(graph_cache[key], cfg)
+
+    def run_trial(cfg: Dict) -> Trial:
+        g2 = sw_cache[(wl_key(cfg), _sw_key(cfg))]
+        res = _simulate_cfg(g2, system, cfg)
+        return Trial(cfg, res, getattr(res, objective))
+
+    if parallel and parallel > 1:
+        with ThreadPoolExecutor(max_workers=parallel) as ex:
+            trials = list(ex.map(run_trial, cfgs))
+    else:
+        trials = [run_trial(cfg) for cfg in cfgs]
     trials.sort(key=lambda t: t.objective)
     return trials
 
 
 def greedy_descent(graph_for, system, knobs: List[Knob],
                    objective: str = "total_time", rounds: int = 3) -> Trial:
-    """Coordinate-descent search: sweep one knob at a time, keep the best."""
+    """Coordinate-descent search: sweep one knob at a time, keep the best.
+
+    Captures, software-pass applications AND full-config evaluations are
+    memoized, so revisiting a config while sweeping other knobs is free."""
     current = {k.name: k.values[0] for k in knobs}
-    cache: Dict = {}
+    graph_cache: Dict = {}
+    sw_cache: Dict = {}
+    trial_cache: Dict = {}
+
+    def wl_key(cfg):
+        return tuple(sorted((k.name, str(cfg.get(k.name))) for k in knobs
+                            if k.layer == "workload"))
 
     def eval_cfg(cfg):
-        key = tuple(sorted((k.name, str(cfg.get(k.name))) for k in knobs
-                           if k.layer == "workload"))
-        if key not in cache:
-            cache[key] = graph_for(cfg)
-        res = evaluate(cache[key], system, cfg)
-        return Trial(dict(cfg), res, getattr(res, objective))
+        ckey = tuple(sorted((k, str(v)) for k, v in cfg.items()))
+        hit = trial_cache.get(ckey)
+        if hit is not None:
+            return hit
+        key = wl_key(cfg)
+        if key not in graph_cache:
+            graph_cache[key] = graph_for(cfg)
+        skey = (key, _sw_key(cfg))
+        if skey not in sw_cache:
+            sw_cache[skey] = apply_software_knobs(graph_cache[key], cfg)
+        res = _simulate_cfg(sw_cache[skey], system, cfg)
+        t = Trial(dict(cfg), res, getattr(res, objective))
+        trial_cache[ckey] = t
+        return t
 
     best = eval_cfg(current)
     for _ in range(rounds):

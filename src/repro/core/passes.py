@@ -17,7 +17,8 @@ tell which edges are droppable (paper Fig 3b).
 """
 from __future__ import annotations
 
-from typing import List, Optional
+import bisect
+from typing import List, Optional, Tuple
 
 from repro.core import chakra
 
@@ -27,25 +28,41 @@ def _comm_nodes(g: chakra.Graph, kind: str) -> List[chakra.Node]:
             if n.attrs.get("comm_kind") == kind]
 
 
-def _comp_in_program_order(g: chakra.Graph) -> List[int]:
-    # node ids follow HLO instruction emission order = program order
-    return [n.id for n in g.nodes if n.type == chakra.COMP
-            and n.attrs.get("flops", 0) > 0]
+def _scan_indices(g: chakra.Graph,
+                  kind: str) -> Tuple[List[chakra.Node], List[int]]:
+    """One pass over g.nodes: (`kind` collectives in id order, COMP-node ids
+    in program order).  Replaces the per-pass by_type + comprehension
+    rescans; both outputs are ascending in id by construction."""
+    comms: List[chakra.Node] = []
+    comps: List[int] = []
+    for n in g.nodes:
+        t = n.type
+        if t == chakra.COMM_COLL:
+            if n.attrs.get("comm_kind") == kind:
+                comms.append(n)
+        elif t == chakra.COMP and n.attrs.get("flops", 0) > 0:
+            comps.append(n.id)
+    return comms, comps
+
+
+def _last_comp_before(comps: List[int], nid: int) -> Optional[int]:
+    """Last compute id < nid (comps ascending), or None."""
+    i = bisect.bisect_left(comps, nid)
+    return comps[i - 1] if i else None
 
 
 def inject_fsdp_sync(g: chakra.Graph, kind: str = "all-gather") -> chakra.Graph:
     """Serialize each `kind` collective after the previous one's consumers'
     compute — the sync edges the original FSDP runtime adds (Fig 3b top)."""
     g = g.copy()
-    comms = sorted(_comm_nodes(g, kind), key=lambda n: n.id)
-    comps = _comp_in_program_order(g)
+    comms, comps = _scan_indices(g, kind)
     for i, c in enumerate(comms):
         if i == 0:
             continue
         # the last compute node that appears before this collective
-        prior = [nid for nid in comps if nid < c.id]
-        if prior:
-            c.ctrl_deps.append(prior[-1])
+        prior = _last_comp_before(comps, c.id)
+        if prior is not None:
+            c.ctrl_deps.append(prior)
     g.meta["pass.fsdp_sync"] = True
     g.validate()
     return g
@@ -56,16 +73,16 @@ def reorder_prefetch(g: chakra.Graph, prefetch: int = 2,
     """Retarget each `kind` collective's ctrl deps `prefetch` collectives
     earlier (Fig 3b bottom).  prefetch >= len(comms) removes all sync edges."""
     g = g.copy()
-    comms = sorted(_comm_nodes(g, kind), key=lambda n: n.id)
-    comps = _comp_in_program_order(g)
+    comms, comps = _scan_indices(g, kind)
     for i, c in enumerate(comms):
         c.ctrl_deps = []
         j = i - prefetch
         if j >= 0:
-            prior = [nid for nid in comps if nid < comms[j].id]
-            if prior:
-                c.ctrl_deps.append(prior[-1])
+            prior = _last_comp_before(comps, comms[j].id)
+            if prior is not None:
+                c.ctrl_deps.append(prior)
     g.meta["pass.reorder_prefetch"] = prefetch
+    g.invalidate_caches()        # ctrl retargeting can preserve edge counts
     g.validate()
     return g
 

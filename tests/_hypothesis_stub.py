@@ -1,0 +1,83 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` API surface used by
+this test suite, for containers where hypothesis isn't installed.
+
+Only what ``test_passes.py`` needs: ``integers``, ``floats``, ``booleans``,
+``sampled_from``, ``lists(unique=...)``, ``composite``, ``given`` and
+``settings``.  ``given`` replays each test ``max_examples`` times with a
+seeded ``random.Random`` so failures reproduce across runs (no shrinking).
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, fn):
+        self._fn = fn
+
+    def sample(self, rng: random.Random):
+        return self._fn(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda r: r.choice(seq))
+
+
+def lists(elements: _Strategy, max_size: int = 10, unique: bool = False):
+    def gen(r):
+        k = r.randint(0, max_size)
+        out, seen = [], set()
+        for _ in range(k):
+            v = elements.sample(r)
+            if unique:
+                if v in seen:
+                    continue
+                seen.add(v)
+            out.append(v)
+        return out
+    return _Strategy(gen)
+
+
+def composite(fn):
+    def make(*args, **kwargs):
+        def gen(r):
+            return fn(lambda s: s.sample(r), *args, **kwargs)
+        return _Strategy(gen)
+    return make
+
+
+def given(*strategies):
+    def deco(test):
+        # NB: expose a zero-arg signature so pytest doesn't read the test's
+        # parameters as fixture requests (no functools.wraps here).
+        def run():
+            n = getattr(test, "_max_examples", 40)
+            for i in range(n):
+                rng = random.Random(0xF1A7 + i)
+                vals = [s.sample(rng) for s in strategies]
+                test(*vals)
+        run.__name__ = test.__name__
+        run.__doc__ = test.__doc__
+        run.__module__ = test.__module__
+        return run
+    return deco
+
+
+def settings(max_examples: int = 40, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -1,0 +1,213 @@
+"""Compiled simulator substrate: bit-exact equivalence vs the reference
+engine on randomized DAGs, batched/duration-override paths, cache
+invalidation, overlap=False accounting, and parallel DSE determinism."""
+import random
+
+import pytest
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.costmodel import (build_topology, compile_graph, simulate,
+                                  simulate_batch, straggler_analysis)
+from repro.core.costmodel.simulator import _simulate_reference
+from repro.core.dse import Knob, explore
+
+SYS = SystemConfig(chips=16)
+TOPO = build_topology(SYS)
+
+FIELDS = ("total_time", "compute_time", "comm_time", "exposed_comm",
+          "peak_bytes", "n_nodes")
+
+
+def rand_graph(rng: random.Random, n: int) -> chakra.Graph:
+    """Random DAG over all node types, with duplicate/absent attrs, dup
+    edges across dep kinds, and varying fanin."""
+    g = chakra.Graph()
+    for i in range(n):
+        k = min(i, 4)
+        deps = rng.sample(range(i), rng.randint(0, k)) if i else []
+        ctrl = rng.sample(range(i), rng.randint(0, k)) if i else []
+        if deps and rng.random() < 0.3:
+            ctrl = ctrl + [deps[0]]          # same edge in both kinds
+        r = rng.random()
+        if r < 0.5 or i == 0:
+            g.add(f"n{i}", chakra.COMP, deps=deps, ctrl_deps=ctrl,
+                  flops=rng.uniform(0, 1e9), bytes=rng.uniform(0, 1e8),
+                  out_bytes=rng.choice([0.0, rng.uniform(1, 100)]))
+        elif r < 0.75:
+            g.add(f"c{i}", chakra.COMM_COLL, deps=deps, ctrl_deps=ctrl,
+                  comm_kind=rng.choice(["all-gather", "all-reduce",
+                                        "reduce-scatter"]),
+                  comm_bytes=rng.uniform(1, 1e7), out_bytes=8.0,
+                  group=list(range(rng.choice([2, 4, 8, 16]))))
+        elif r < 0.85:
+            g.add(f"s{i}", rng.choice([chakra.COMM_SEND, chakra.COMM_RECV]),
+                  deps=deps, ctrl_deps=ctrl, comm_bytes=rng.uniform(1, 1e6))
+        else:
+            g.add(f"m{i}", chakra.MEM, deps=deps, ctrl_deps=ctrl,
+                  out_bytes=4.0)
+    return g
+
+
+def assert_identical(rc, rr):
+    for f in FIELDS:
+        assert getattr(rc, f) == getattr(rr, f), \
+            f"{f}: {getattr(rc, f)!r} != {getattr(rr, f)!r}"
+    assert rc.timeline == rr.timeline
+
+
+def test_equivalence_on_randomized_dags():
+    """>= 50 random DAGs x (overlap on/off) x (with/without duration
+    overrides), all SimResult fields exactly equal, timeline included."""
+    for seed in range(55):
+        rng = random.Random(seed)
+        g = rand_graph(rng, rng.randint(5, 120))
+        durs = None
+        if seed % 2 == 0:
+            picks = rng.sample(range(len(g)), max(1, len(g) // 4))
+            durs = {nid: rng.uniform(0.0, 1e-3) for nid in picks}
+        for overlap in (True, False):
+            rc = simulate(g, SYS, TOPO, overlap=overlap, durations=durs,
+                          keep_timeline=True)
+            rr = _simulate_reference(g, SYS, TOPO, overlap=overlap,
+                                     durations=durs, keep_timeline=True)
+            assert_identical(rc, rr)
+
+
+def test_equivalence_other_algos_and_derates():
+    for seed in (1000, 1001, 1002):
+        g = rand_graph(random.Random(seed), 60)
+        for algo in ("ring", "hd"):
+            for derate in (0.4, 1.0):
+                rc = simulate(g, SYS, TOPO, algo=algo,
+                              compute_derate=derate, keep_timeline=True)
+                rr = _simulate_reference(g, SYS, TOPO, algo=algo,
+                                         compute_derate=derate,
+                                         keep_timeline=True)
+                assert_identical(rc, rr)
+
+
+def test_overlap_false_accounting():
+    """Regression: without overlap, exposed/compute/comm must still be
+    meaningful (busy time split by node type, not by stream)."""
+    g = chakra.Graph()
+    a = g.add("a", chakra.COMP, flops=0.6e9)               # 1 ms at derate .6
+    c = g.add("c", chakra.COMM_COLL, deps=[a], comm_kind="all-gather",
+              comm_bytes=1e8, group=list(range(16)))
+    g.add("b", chakra.COMP, deps=[c], flops=0.6e9)
+    sysc = SystemConfig(chips=16, peak_flops=1e12, hbm_bw=1e12)
+    r = simulate(g, sysc, overlap=False)
+    assert r.compute_time == pytest.approx(2e-3)           # COMP only
+    assert r.comm_time > 0.0
+    assert r.exposed_comm == pytest.approx(r.total_time - r.compute_time)
+    assert r.exposed_comm > 0.0                            # was always 0
+    # serial chain: both engines agree and total = comp + comm
+    assert r.total_time == pytest.approx(r.compute_time + r.comm_time)
+    assert_identical(r, _simulate_reference(g, sysc, overlap=False))
+
+
+def test_simulate_batch_matches_individual_calls():
+    g = rand_graph(random.Random(7), 80)
+    cg = compile_graph(g)
+    base = cg.durations(SYS, TOPO)
+    overrides = [None,
+                 {0: base[0] * 2.0},
+                 {nid: base[nid] * 1.5 for nid in range(0, len(g), 3)}]
+    batch = simulate_batch(g, SYS, overrides, topo=TOPO)
+    for ov, rb in zip(overrides, batch):
+        ri = simulate(g, SYS, TOPO, durations=ov)
+        for f in FIELDS:
+            assert getattr(rb, f) == getattr(ri, f)
+
+
+def test_straggler_analysis_batched_matches_reference_math():
+    g = rand_graph(random.Random(11), 60)
+    rows = straggler_analysis(g, SYS, TOPO, slowdowns=(1.0, 1.5, 2.0))
+    assert rows[0]["slowdown_realized"] == pytest.approx(1.0)
+    assert rows[-1]["step_time"] >= rows[0]["step_time"]
+    # cross-check one factor against a hand-built reference-engine run
+    from repro.core.costmodel.simulator import node_duration
+    dur = {n.id: node_duration(n, SYS, TOPO) * 1.5
+           for n in g.nodes if n.type == chakra.COMP}
+    ref = _simulate_reference(g, SYS, TOPO, durations=dur).total_time
+    assert rows[1]["step_time"] == ref
+
+
+def test_compiled_cache_invalidation_on_mutation():
+    g = rand_graph(random.Random(3), 40)
+    r1 = simulate(g, SYS, TOPO)
+    assert compile_graph(g) is compile_graph(g)       # cache hit
+    cg_before = compile_graph(g)
+    tail = g.add("late", chakra.COMP, deps=[0], flops=1e12, bytes=0.0)
+    assert compile_graph(g) is not cg_before          # token changed
+    r2 = simulate(g, SYS, TOPO)
+    assert r2.n_nodes == r1.n_nodes + 1
+    assert r2.total_time > r1.total_time
+    assert_identical(simulate(g, SYS, TOPO, keep_timeline=True),
+                     _simulate_reference(g, SYS, TOPO, keep_timeline=True))
+    # repeated identical calls hit the result cache but hand back a fresh
+    # instance each time — mutating a returned result must not poison it
+    ra = simulate(g, SYS, TOPO)
+    assert ra is not simulate(g, SYS, TOPO)
+    ra.total_time = -1.0
+    assert simulate(g, SYS, TOPO).total_time == r2.total_time
+    # ... and a changed config misses the cache
+    assert simulate(g, SYS, TOPO, compute_derate=0.5).total_time != \
+        simulate(g, SYS, TOPO).total_time
+    del tail
+
+
+def _dse_graph(n_layers=8, comm_mb=8.0):
+    g = chakra.Graph()
+    prev = None
+    for i in range(n_layers):
+        ag = g.add(f"ag{i}", chakra.COMM_COLL, comm_kind="all-gather",
+                   comm_bytes=comm_mb * 1e6, out_bytes=comm_mb * 1e6,
+                   group=list(range(16)))
+        deps = [ag] + ([prev] if prev is not None else [])
+        prev = g.add(f"comp{i}", chakra.COMP, deps=deps, flops=5e10,
+                     out_bytes=1e6)
+        g.add(f"ar{i}", chakra.COMM_COLL, deps=[prev],
+              comm_kind="all-reduce", comm_bytes=2e6, group=list(range(16)))
+    return g
+
+
+def test_explore_parallel_matches_serial():
+    def graph_for(cfg):
+        return _dse_graph(cfg.get("layers", 8))
+
+    knobs = [
+        Knob("layers", [4, 8], layer="workload"),
+        Knob("fsdp_sync", [True, False], layer="software"),
+        Knob("prefetch", [0, 2, 8], layer="software"),
+        Knob("bucket_bytes", [0, 8e6], layer="software"),
+        Knob("link_bw", [25e9, 100e9], layer="hardware"),
+    ]
+    serial = explore(graph_for, SYS, knobs)
+    par = explore(graph_for, SYS, knobs, parallel=4)
+    assert len(serial) == len(par) == 2 * 2 * 3 * 2 * 2
+    for a, b in zip(serial, par):
+        assert a.config == b.config
+        assert a.objective == b.objective
+        for f in FIELDS:
+            assert getattr(a.result, f) == getattr(b.result, f)
+
+
+def test_explore_memoizes_software_passes():
+    applied = []
+    import repro.core.dse as dse_mod
+    orig = dse_mod.apply_software_knobs
+
+    def counting(g, cfg):
+        applied.append(dict(cfg))
+        return orig(g, cfg)
+
+    dse_mod.apply_software_knobs = counting
+    try:
+        knobs = [Knob("prefetch", [0, 2], layer="software"),
+                 Knob("link_bw", [25e9, 50e9, 100e9], layer="hardware")]
+        trials = explore(lambda cfg: _dse_graph(6), SYS, knobs)
+    finally:
+        dse_mod.apply_software_knobs = orig
+    assert len(trials) == 6
+    assert len(applied) == 2          # once per distinct software config
