@@ -1,0 +1,90 @@
+"""Benchmark regression gate: fail if BENCH_sim speedup ratios fall below
+the floors recorded in benchmarks/thresholds.json.
+
+Usage (the verify recipe's perf gate):
+
+    PYTHONPATH=.:src python -m benchmarks.sim_bench --smoke
+    PYTHONPATH=.:src python -m benchmarks.check_regression
+
+or in one shot::
+
+    PYTHONPATH=.:src python -m benchmarks.check_regression --run-smoke
+
+Reads artifacts/bench/BENCH_sim.json (``--bench PATH`` to override).  The
+floors are deliberately conservative — they hold for both the full and
+``--smoke`` matrices on a loaded machine — so a failure means the engine
+actually regressed, not that the box was busy.  Exit code 1 on regression,
+2 on missing inputs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+DEFAULT_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
+                             "BENCH_sim.json")
+DEFAULT_THRESH = os.path.join(HERE, "thresholds.json")
+
+
+def check(bench: dict, thresholds: dict) -> list:
+    """Return a list of (key, measured, floor) violations."""
+    bad = []
+
+    def one(section: str, key: str, floor: float, measured):
+        if measured is None:
+            bad.append((f"{section}.{key}", None, floor))
+        elif measured < floor:
+            bad.append((f"{section}.{key}", measured, floor))
+
+    sim_floors = thresholds.get("simulate", {})
+    for size, row in sorted(bench.get("simulate", {}).items()):
+        for key, floor in sim_floors.items():
+            one(f"simulate.{size}", key, floor, row.get(key))
+    for section in ("straggler", "explore"):
+        for key, floor in thresholds.get(section, {}).items():
+            one(section, key, floor, bench.get(section, {}).get(key))
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default=DEFAULT_BENCH,
+                    help="BENCH_sim.json path")
+    ap.add_argument("--thresholds", default=DEFAULT_THRESH)
+    ap.add_argument("--run-smoke", action="store_true",
+                    help="run `sim_bench --smoke` first to produce the "
+                         "bench file")
+    args = ap.parse_args(argv)
+
+    if args.run_smoke:
+        from benchmarks import sim_bench
+        sim_bench.main(["--smoke"])
+
+    if not os.path.exists(args.bench):
+        print(f"check_regression: no bench file at {args.bench} "
+              "(run benchmarks.sim_bench first, or pass --run-smoke)")
+        return 2
+    with open(args.bench) as f:
+        bench = json.load(f)
+    with open(args.thresholds) as f:
+        thresholds = {k: v for k, v in json.load(f).items()
+                      if not k.startswith("_")}
+
+    bad = check(bench, thresholds)
+    mode = "smoke" if bench.get("smoke") else "full"
+    if bad:
+        for key, measured, floor in bad:
+            shown = "missing" if measured is None else f"{measured:.2f}x"
+            print(f"check_regression: FAIL {key}: {shown} < floor "
+                  f"{floor:.2f}x ({mode} run)")
+        return 1
+    print(f"check_regression: OK — all speedup floors hold ({mode} run, "
+          f"{len(thresholds)} sections)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,166 @@
+"""Heterogeneous-cluster simulation benchmark (BENCH_hetero.json).
+
+Exercises the rank-asymmetric engine on the scenarios the rank-symmetric
+model could not express:
+
+  straggler       32-rank FSDP layer stack with ONE rank's compute slowed.
+                  Collectives gate on the straggler, but compute ahead of
+                  each barrier still overlaps, so a 1.5x single-rank
+                  slowdown must inflate step time *strictly between* 1.0x
+                  and 1.5x (the acceptance bound) — the old single-timeline
+                  proxy could only scale the whole step.
+  mixed_gen       DSE sweep over ``slow_chip_ratio`` (a fraction of ranks
+                  from an older/derated chip generation) via dse.explore's
+                  hetero hardware knobs — step time grows with the ratio.
+  pod_degraded    second half of the cluster behind a degraded pod uplink
+                  (``pod_link_scale``): collectives spanning both pods are
+                  priced by the weakest member and barrier on the slow pod.
+  coalescing      the cluster-free scaling story: a 256-rank straggler
+                  cluster coalesces to a handful of rank classes, so the
+                  asymmetric sim costs ~2 event loops instead of 256
+                  (coalesce=False is the naive executable spec).
+
+No jax required — graphs are built directly; runs in seconds.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, write_json
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra, dse
+from repro.core.costmodel import (build_topology, simulate, simulate_cluster,
+                                  straggler_analysis)
+
+
+def fsdp_stack(n_layers: int, ranks: int) -> chakra.Graph:
+    """FSDP layer stack (all-gather -> fwd -> bwd -> all-reduce per layer)
+    with world-spanning collective groups."""
+    g = chakra.Graph()
+    group = list(range(ranks))
+    prev = None
+    for i in range(n_layers):
+        ag = g.add(f"ag{i}", chakra.COMM_COLL, comm_kind="all-gather",
+                   comm_bytes=8e6, out_bytes=8e6, group=group,
+                   ctrl_deps=[prev] if prev is not None else [])
+        fwd = g.add(f"f{i}", chakra.COMP,
+                    deps=[ag] + ([prev] if prev is not None else []),
+                    flops=5e10, bytes=1e8, out_bytes=1e6)
+        bwd = g.add(f"b{i}", chakra.COMP, deps=[fwd], flops=1e11,
+                    bytes=2e8, out_bytes=1e6)
+        g.add(f"ar{i}", chakra.COMM_COLL, deps=[bwd],
+              comm_kind="all-reduce", comm_bytes=4e6, group=group)
+        prev = bwd
+    return g
+
+
+def bench_straggler(sysc, topo, ranks: int, n_layers: int = 48):
+    g = fsdp_stack(n_layers, ranks)
+    slow = (1.0, 1.1, 1.25, 1.5, 2.0)
+    rows = straggler_analysis(g, sysc, topo, slowdowns=slow, n_ranks=ranks)
+    realized = [r["slowdown_realized"] for r in rows]
+    assert realized == sorted(realized), realized
+    by_f = {r["slowdown"]: r for r in rows}
+    infl = by_f[1.5]["slowdown_realized"]
+    # acceptance: barrier-gated but partially overlapped
+    assert 1.0 < infl < 1.5, infl
+    for r in rows:
+        emit(f"hetero.straggler_{ranks}.x{r['slowdown']:.2f}",
+             r["step_time"] * 1e6, f"{r['slowdown_realized']:.3f}x_realized")
+    emit(f"hetero.straggler_{ranks}.victim_wait_ms",
+         by_f[1.5]["victim_wait"] * 1e6,
+         f"{by_f[1.5]['victim_wait'] * 1e3:.3f}")
+    return {"n_ranks": ranks, "n_layers": n_layers, "rows": rows,
+            "inflation_1p5x": infl}
+
+
+def bench_mixed_generations(sysc, ranks: int, n_layers: int = 32):
+    g = fsdp_stack(n_layers, ranks)
+    knobs = [
+        dse.Knob("slow_chip_ratio", [0.0, 0.125, 0.25, 0.5],
+                 layer="hardware"),
+        dse.Knob("slow_chip_scale", [0.7], layer="hardware"),
+        dse.Knob("cluster_ranks", [ranks], layer="hardware"),
+    ]
+    trials = dse.explore(lambda cfg: g, sysc, knobs)
+    by_ratio = {t.config["slow_chip_ratio"]: t for t in trials}
+    steps = [by_ratio[r].objective for r in (0.0, 0.125, 0.25, 0.5)]
+    assert steps == sorted(steps), steps        # more old chips -> slower
+    for r, t in sorted(by_ratio.items()):
+        emit(f"hetero.mixed_gen.ratio{int(r * 1000):03d}",
+             t.objective * 1e6,
+             f"{t.objective / steps[0]:.3f}x_vs_uniform")
+    return {"n_ranks": ranks,
+            "steps": {str(r): by_ratio[r].result.as_dict()
+                      for r in (0.0, 0.125, 0.25, 0.5)},
+            "slowdown_at_half": steps[-1] / steps[0]}
+
+
+def bench_pod_degraded(sysc, topo, ranks: int, n_layers: int = 32):
+    g = fsdp_stack(n_layers, ranks)
+    out = {}
+    prev_t = 0.0
+    for scale in (1.0, 0.7, 0.5, 0.3):
+        profs = dse.rank_profiles_for(ranks, {"pod_link_scale": scale})
+        cr = simulate_cluster(g, sysc, topo, n_ranks=ranks,
+                              rank_profiles=profs)
+        out[str(scale)] = cr.as_dict()
+        assert cr.step_time >= prev_t - 1e-15, (scale, cr.step_time, prev_t)
+        prev_t = cr.step_time
+        emit(f"hetero.pod_scale{int(scale * 100):03d}",
+             cr.step_time * 1e6, f"classes={cr.n_classes}")
+    return out
+
+
+def bench_coalescing(sysc, ranks: int = 256, n_layers: int = 48):
+    g = fsdp_stack(n_layers, ranks)
+    topo = build_topology(sysc, ranks)
+    cg_durs = {0: {}}                    # one straggler: rank 0 slowed 1.5x
+    from repro.core.costmodel import compile_graph
+    base = compile_graph(g).durations(sysc, topo)
+    comp = [n.id for n in g.nodes if n.type == chakra.COMP]
+    cg_durs = {0: {nid: base[nid] * 1.5 for nid in comp}}
+
+    def run(coalesce):
+        return simulate_cluster(g, sysc, topo, n_ranks=ranks,
+                                rank_durations=cg_durs, coalesce=coalesce)
+
+    a = run(True)                        # warm caches
+    b = run(False)
+    assert a.step_time == b.step_time and a.rank_times == b.rank_times
+    t_co = min(_timed(lambda: run(True)) for _ in range(3))
+    t_naive = min(_timed(lambda: run(False)) for _ in range(2))
+    emit(f"hetero.coalesce_{ranks}", t_co * 1e6,
+         f"{t_naive / t_co:.1f}x_vs_naive_{a.n_classes}_classes")
+    return {"n_ranks": ranks, "n_classes": a.n_classes,
+            "coalesced_ms": t_co * 1e3, "naive_ms": t_naive * 1e3,
+            "speedup": t_naive / t_co}
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def main():
+    ranks = 32
+    sysc = SystemConfig(chips=ranks, topology="switch", link_bw=12.5e9)
+    topo = build_topology(sysc, ranks)
+    # sanity: the symmetric cluster is the plain simulate() (cluster-free)
+    g = fsdp_stack(8, ranks)
+    assert simulate_cluster(g, sysc, topo, n_ranks=ranks).step_time == \
+        simulate(g, sysc, topo).total_time
+    payload = {
+        "straggler": bench_straggler(sysc, topo, ranks),
+        "mixed_gen": bench_mixed_generations(sysc, ranks),
+        "pod_degraded": bench_pod_degraded(sysc, topo, ranks),
+        "coalescing": bench_coalescing(sysc),
+    }
+    path = write_json("BENCH_hetero.json", payload)
+    emit("hetero.done", 0.0, path)
+
+
+if __name__ == "__main__":
+    main()

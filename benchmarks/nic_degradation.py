@@ -9,7 +9,13 @@ DCN links, and 'NIC degradation' by background traffic consuming a fraction
 of link bandwidth (the paper's ib_write_bw rate-limit stand-in).  Expected:
 per-iteration duration rises monotonically with degradation, i.e. the
 workload graph is sensitive enough to expose a flapping NIC *before* GPUs
-are attached."""
+are attached.
+
+The sweep is a duration-override batch (same shape as stragglers): the
+graph is compiled once, each degradation level is one
+``CompiledGraph.comm_overrides`` dict repricing COMM nodes at the scaled
+NIC bandwidth, and one ``simulate_batch`` call replays them all — no
+per-level recompilation or duration rebuild."""
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -19,7 +25,8 @@ from benchmarks.common import PRESET_70B, emit, fsdp_layer_stack_capture  # noqa
 
 def main():
     from repro.configs.base import SystemConfig
-    from repro.core.costmodel import build_topology, simulate
+    from repro.core.costmodel import (build_topology, compile_graph,
+                                      simulate_batch)
 
     ranks = 32                    # paper: Llama3-70B DP=32 over scale-out
     g = fsdp_layer_stack_capture(
@@ -28,12 +35,16 @@ def main():
         cache_tag=f"70b_dp{ranks}")
 
     nic_bw = 12.5e9               # 100 Gbps InfiniBand
+    sysc = SystemConfig(chips=ranks, topology="switch", link_bw=nic_bw)
+    topo = build_topology(sysc, ranks)
+    cg = compile_graph(g)
+    levels = (0.0, 0.1, 0.3, 0.5, 0.7, 0.9)
+    overrides = [None if d == 0.0 else
+                 cg.comm_overrides(sysc, topo, bw_scale=1.0 - d)
+                 for d in levels]
+    results = simulate_batch(g, sysc, overrides, topo=topo)
     durations = []
-    for degradation in (0.0, 0.1, 0.3, 0.5, 0.7, 0.9):
-        sysc = SystemConfig(chips=ranks, topology="switch",
-                            link_bw=nic_bw * (1.0 - degradation))
-        topo = build_topology(sysc, ranks)
-        r = simulate(g, sysc, topo)
+    for degradation, r in zip(levels, results):
         durations.append(r.total_time)
         emit(f"nic.degr{int(degradation * 100):02d}.iter_ms",
              r.total_time * 1e6, f"{r.total_time * 1e3:.2f}")

@@ -9,6 +9,10 @@
   nic_degradation  Fig 12  degraded-NIC detection from the workload graph
   roofline         (ours)  40-cell roofline table from the dry-run
   sim_bench        (ours)  compiled simulator/DSE engine vs seed reference
+  hetero_cluster   (ours)  rank-asymmetric cluster sim: stragglers, mixed
+                           chip generations, degraded pods, coalescing
+  check_regression (gate)  fails if BENCH_sim speedups fall below
+                           benchmarks/thresholds.json floors
 
 Each bench runs in its own subprocess so it controls its fake-device count
 before importing jax."""
@@ -18,7 +22,8 @@ import sys
 import time
 
 BENCHES = ["opcounts", "e2e_validation", "fsdp_reorder", "bandwidth_sweep",
-           "wafer_tacos", "nic_degradation", "roofline", "sim_bench"]
+           "wafer_tacos", "nic_degradation", "roofline", "sim_bench",
+           "hetero_cluster", "check_regression"]
 
 
 def main() -> None:

@@ -21,10 +21,21 @@ layer) at 1k/10k/50k nodes.  Three scenarios, each timed best-of-reps:
 Writes BENCH_sim.json (scenario -> times and speedups) via common.write_json
 and prints the usual ``name,us_per_call,derived`` CSV lines.
 
+``--smoke`` runs a reduced matrix (1k/5k nodes, fewer reps, smaller
+straggler/explore problems) in a few seconds — the payload gets
+``"smoke": true`` and the same speedup keys, sized so the floors in
+benchmarks/thresholds.json hold in either mode (the check_regression gate).
+
+Note the straggler scenario compares the *cluster-barrier* analysis (one
+slowed rank gating collectives, a handful of coalesced event loops per
+factor) against the seed's per-factor reference resimulation of the old
+single-timeline proxy — engine speedup net of the added model fidelity.
+
 No jax required — graphs are built directly; runs in seconds.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 from benchmarks.common import emit, write_json
@@ -118,7 +129,8 @@ def bench_straggler(sysc, topo, n=10_000):
                                                slowdowns=slow), reps=3)
     t_ref = best_of(lambda: _straggler_reference(g, sysc, topo, slow),
                     reps=2)
-    emit("sim_bench.straggler_10k", t_new * 1e6, f"{t_ref / t_new:.1f}x_vs_ref")
+    emit(f"sim_bench.straggler_{n // 1000}k", t_new * 1e6,
+         f"{t_ref / t_new:.1f}x_vs_ref")
     return {"n_nodes": n, "n_factors": len(slow),
             "reference_ms": t_ref * 1e3, "batched_ms": t_new * 1e3,
             "speedup": t_ref / t_new}
@@ -170,14 +182,27 @@ def bench_explore(sysc, n=2_000):
             "speedup_parallel4": t_ref / t_par}
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced matrix for CI gating (seconds)")
+    args = ap.parse_args(argv)
     sysc = SystemConfig(chips=16)
     topo = build_topology(sysc)
-    payload = {
-        "simulate": bench_simulate(sysc, topo),
-        "straggler": bench_straggler(sysc, topo),
-        "explore": bench_explore(sysc),
-    }
+    if args.smoke:
+        payload = {
+            "smoke": True,
+            "simulate": bench_simulate(sysc, topo, sizes=(1_000, 5_000)),
+            "straggler": bench_straggler(sysc, topo, n=2_000),
+            "explore": bench_explore(sysc, n=1_000),
+        }
+    else:
+        payload = {
+            "smoke": False,
+            "simulate": bench_simulate(sysc, topo),
+            "straggler": bench_straggler(sysc, topo),
+            "explore": bench_explore(sysc),
+        }
     path = write_json("BENCH_sim.json", payload)
     emit("sim_bench.done", 0.0, path)
 

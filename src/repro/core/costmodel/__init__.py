@@ -1,18 +1,21 @@
 from repro.core.costmodel.topology import (Topology, Switch, Ring, Torus2D,
-                                           Wafer2D, MultiPod, build_topology)
+                                           Wafer2D, MultiPod, RankProfile,
+                                           build_topology)
 from repro.core.costmodel.collectives import (collective_time,
                                               synthesize_2d_time,
                                               synthesize_2d_p2p)
 from repro.core.costmodel.compiled import CompiledGraph, compile_graph
 from repro.core.costmodel.simulator import (simulate, simulate_batch,
+                                            simulate_cluster,
                                             straggler_analysis, SimResult,
-                                            node_duration)
+                                            ClusterSimResult, node_duration)
 from repro.core.costmodel.analytical import (roofline, RooflineTerms,
                                              model_flops_per_step)
 
 __all__ = ["Topology", "Switch", "Ring", "Torus2D", "Wafer2D", "MultiPod",
-           "build_topology", "collective_time", "synthesize_2d_time",
-           "synthesize_2d_p2p", "CompiledGraph", "compile_graph",
-           "simulate", "simulate_batch", "straggler_analysis", "SimResult",
+           "RankProfile", "build_topology", "collective_time",
+           "synthesize_2d_time", "synthesize_2d_p2p", "CompiledGraph",
+           "compile_graph", "simulate", "simulate_batch", "simulate_cluster",
+           "straggler_analysis", "SimResult", "ClusterSimResult",
            "node_duration", "roofline", "RooflineTerms",
            "model_flops_per_step"]

@@ -30,17 +30,29 @@ def _ring_time(payload: float, n: int, bw: float, alpha: float,
 
 
 def collective_time(kind: str, payload: float, group: List[int],
-                    topo: Topology, algo: str = "auto") -> float:
+                    topo: Topology, algo: str = "auto",
+                    bw_scale: float = None) -> float:
     """Seconds for one collective of `payload` bytes per rank over `group`.
 
     payload semantics: all-gather/reduce-scatter -> full (gathered) size;
     all-reduce -> full tensor size; all-to-all -> per-rank send total;
-    collective-permute -> message size."""
+    collective-permute -> message size.
+
+    `bw_scale` multiplies every bandwidth term (latency is unaffected) —
+    the hook the cluster simulator uses to price a collective at one rank's
+    degraded link speed.  When None it defaults to the topology's
+    ``group_link_scale(group)``: a group is priced by its weakest member's
+    per-link override (1.0 when no overrides are configured, keeping the
+    homogeneous path bit-identical)."""
     n = len(group)
     if n <= 1 or payload <= 0:
         return 0.0
+    if bw_scale is None:
+        bw_scale = topo.group_link_scale(group)
     alpha = topo.link_latency
     bw = topo.ring_bw(group)
+    if bw_scale != 1.0:
+        bw *= bw_scale
 
     if algo == "auto":
         if isinstance(topo, Torus2D) and not topo.group_is_axis(group) \
@@ -50,18 +62,24 @@ def collective_time(kind: str, payload: float, group: List[int],
             algo = "ring"
 
     if kind == "collective-permute":
+        link_bw = topo.link_bw
+        if bw_scale != 1.0:
+            link_bw *= bw_scale
         hops = max((topo.hop_distance(a, b) for a, b in
                     zip(group, group[1:] + group[:1])), default=1)
-        return payload / topo.link_bw + hops * alpha
+        return payload / link_bw + hops * alpha
 
     if kind == "all-to-all":
         # bisection-limited
         bis = topo.bisection_bw()
+        if bw_scale != 1.0:
+            bis *= bw_scale
         t_bis = payload * n / 2 / max(bis, 1e-9) / n
         return max(payload / bw, t_bis) + (n - 1) * alpha
 
     if algo == "2d_synth" and isinstance(topo, Torus2D):
-        return synthesize_2d_time(kind, payload, group, topo)
+        return synthesize_2d_time(kind, payload, group, topo,
+                                  bw_scale=bw_scale)
 
     if algo == "hd" and n & (n - 1) == 0:
         steps = int(math.log2(n))
@@ -89,13 +107,15 @@ def _axis_groups(group: List[int], topo: Torus2D):
 
 
 def synthesize_2d_time(kind: str, payload: float, group: List[int],
-                       topo: Torus2D) -> float:
+                       topo: Torus2D, bw_scale: float = 1.0) -> float:
     """Dimension-ordered collective on a 2-D torus/mesh."""
     rows, cols = _axis_groups(group, topo)
     nr = max(len(r) for r in rows)
     ncl = max(len(c) for c in cols)
     alpha = topo.link_latency
     bw = topo.link_bw * (2.0 if topo.wrap else 1.0)
+    if bw_scale != 1.0:
+        bw *= bw_scale
 
     if kind == "all-reduce":
         # RS along rows, AR along cols on 1/nr of data, AG along rows
@@ -107,7 +127,8 @@ def synthesize_2d_time(kind: str, payload: float, group: List[int],
         t = _ring_time(payload / ncl, nr, bw, alpha, 1.0)
         t += _ring_time(payload, ncl, bw, alpha, 1.0)
         return t
-    return _ring_time(payload, len(group), topo.ring_bw(group), alpha, 1.0)
+    return _ring_time(payload, len(group), topo.ring_bw(group) * bw_scale,
+                      alpha, 1.0)
 
 
 def synthesize_2d_p2p(kind: str, payload: float, group: List[int],

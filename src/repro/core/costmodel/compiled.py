@@ -27,6 +27,29 @@ tie-breaking, same float accumulation order), so its ``SimResult`` is
 bit-identical — equivalence is enforced by tests/test_compiled_sim.py on
 randomized DAGs.
 
+Cluster model (``run_cluster``)
+-------------------------------
+``run_cluster()`` generalizes the event loop from one SPMD timeline to K
+ranks: a per-rank duration *matrix* (one row per simulated rank class), 2K
+streams (each row keeps its own compute+comm stream pair), and cross-rank
+barrier semantics for ``COMM_COLL`` nodes.  A collective instance completes
+only when its slowest participating row has *arrived* (deps done + comm
+stream free); its cost is then charged from that arrival, so faster ranks
+accumulate attributable barrier-wait time while their compute streams keep
+running ahead.  Each row is the unmodified ``run()`` scheduler — a row whose
+comm stream commits a barrier'd collective suspends until every co-member
+arrives, which preserves the single-rank float-accumulation order exactly:
+with symmetric rows all arrivals are equal, every barrier resolves to
+``arrival + cost``, and the per-row results are bit-identical to ``run()``
+(``run()`` itself is kept as the tuned K=1 special case).  Rows whose comm
+streams commit two collectives in *opposite* orders model a real SPMD hang
+and raise a deadlock error naming the blocked collectives.
+
+``simulator.simulate_cluster`` sits on top: it coalesces ranks into
+equivalence classes (profile + collective-group environment) so a
+symmetric 1024-rank cluster still costs one event loop, and only distinct
+rank behaviors pay for extra rows.
+
 Use ``compile_graph(g)`` to get the per-Graph cached instance; the cache key
 is the Graph's edit token (see chakra.Graph docstring for the invalidation
 contract).
@@ -97,6 +120,7 @@ class CompiledGraph:
         self._order = list(order)              # pos -> nid
         self._zeros = [0] * n
         self._is_comm = self.is_comm.astype(np.int64).tolist()
+        self._is_coll = (self.type_code == 1).astype(np.int64).tolist()
         self._out_bytes = self.out_bytes.tolist()
         self._deps = deps_l
         self._ddeps = ddeps_l
@@ -126,6 +150,7 @@ class CompiledGraph:
 
         self._dur_cache: Dict = {}
         self._result_cache: Dict = {}
+        self._canon_cache: Dict = {}           # canonical collective order
 
     # -- CSR views -----------------------------------------------------------
     def csr(self, kind: str):
@@ -177,14 +202,41 @@ class CompiledGraph:
                 compute_derate)
 
     # -- durations -----------------------------------------------------------
+    def priced_colls(self, topo, algo: str = "auto",
+                     bw_scale: Optional[float] = None) -> Dict[int, float]:
+        """{nid: seconds} for every COMM_COLL node, memoized per distinct
+        (kind, payload, group) — THE collective-pricing loop, shared by
+        ``durations()``, ``comm_overrides()`` and the cluster row builder so
+        a pricing change lands everywhere at once.  ``bw_scale=None`` lets
+        ``collective_time`` derive each group's weakest-member scale from
+        the topology's link overrides; an explicit scale overrides that."""
+        out: Dict[int, float] = {}
+        memo: Dict = {}
+        cb = self.comm_bytes
+        for nid, (kind, group, group_t) in zip(self._coll_ids,
+                                               self._coll_meta):
+            payload = float(cb[nid])
+            ck = (kind, payload, group_t)
+            t = memo.get(ck)
+            if t is None:
+                t = collective_time(kind, payload, group, topo, algo,
+                                    bw_scale=bw_scale)
+                memo[ck] = t
+            out[nid] = t
+        return out
+
     def durations(self, system, topo: Optional[Topology] = None,
                   algo: str = "auto",
                   compute_derate: float = 0.6) -> List[float]:
         """Per-node base durations, memoized by (system, topo, algo, derate).
 
         Matches simulator.node_duration element-wise (bit-identical: plain
-        IEEE-double ops either way).  Returns a read-only list — callers that
-        override entries must copy first.
+        IEEE-double ops either way).  When the topology carries per-link
+        overrides, the rank-symmetric view prices every link-bound node by
+        the weakest link in the cluster (collectives via group_link_scale,
+        p2p via the min override) — the conservative single-rank proxy;
+        ``simulate_cluster`` prices each rank at its own links.  Returns a
+        read-only list — callers that override entries must copy first.
         """
         topo = topo or build_topology(system)
         key = self.config_key(system, topo, algo, compute_derate)
@@ -199,19 +251,14 @@ class CompiledGraph:
             dur[comp] = np.maximum(t_f, t_b)
         p2p = (self.type_code == 2) | (self.type_code == 3)
         if p2p.any():
-            dur[p2p] = (self.comm_bytes[p2p] / topo.link_bw
+            link_bw = topo.link_bw
+            ls = getattr(topo, "link_scales", None)
+            if ls:
+                link_bw = link_bw * min(ls.values())
+            dur[p2p] = (self.comm_bytes[p2p] / link_bw
                         + topo.link_latency)
         dur_l = dur.tolist()
-        cb = self.comm_bytes
-        coll_memo: Dict = {}
-        for nid, (kind, group, group_t) in zip(self._coll_ids,
-                                               self._coll_meta):
-            payload = float(cb[nid])
-            ck = (kind, payload, group_t)
-            t = coll_memo.get(ck)
-            if t is None:
-                t = collective_time(kind, payload, group, topo, algo)
-                coll_memo[ck] = t
+        for nid, t in self.priced_colls(topo, algo).items():
             dur_l[nid] = t
         self._dur_cache[key] = dur_l
         return dur_l
@@ -351,6 +398,369 @@ class CompiledGraph:
         return SimResult(total_time=total, compute_time=busy[0],
                          comm_time=busy[1], exposed_comm=exposed,
                          peak_bytes=peak, n_nodes=n_total, timeline=timeline)
+
+    def canonical_coll_order(self, dur: List[float],
+                             overlap: bool = True) -> List[int]:
+        """COMM_COLL node ids in the order the nominal (rank-symmetric)
+        schedule commits them — the cluster engine's stand-in for the
+        compiled SPMD binary's fixed collective launch order.  Memoized per
+        (duration vector, overlap)."""
+        key = (id(dur), overlap)
+        hit = self._canon_cache.get(key)
+        if hit is None or hit[0] is not dur:   # id() can be reused; verify
+            is_coll = self._is_coll
+            tl = self.run(dur, overlap=overlap, keep_timeline=True).timeline
+            hit = (dur, [nid for nid, _, _, _, _ in tl if is_coll[nid]])
+            self._canon_cache[key] = hit
+        return hit[1]
+
+    # -- K-rank event loop ---------------------------------------------------
+    def run_cluster(self, dur_rows: List[List[float]],
+                    barrier_map: List[Dict[int, list]],
+                    coll_order: Optional[List[int]] = None,
+                    overlap: bool = True, keep_timeline: bool = False):
+        """K-row generalization of ``run()`` with cross-rank collective
+        barriers (see the module docstring's cluster-model section).
+
+        `dur_rows[j]` is row j's full per-node duration list; `barrier_map[j]`
+        maps a COMM_COLL node id to the shared mutable barrier
+        ``[remaining, max_arrival, rows_tuple, cost, arrivals_dict]`` that row
+        participates in (only collectives whose participant set spans >= 2
+        rows appear — a single-row collective runs on the plain ``run()``
+        path, which is what keeps the symmetric/coalesced case bit-identical).
+        The barrier's `cost` is fixed up front as the max over member rows'
+        own durations for that node: each row prices the collective at its
+        own link speed, so the max IS the weakest-member price.
+
+        `coll_order` (required when any barrier exists) is the canonical
+        program order of collectives: each row issues its barrier'd
+        collectives in exactly this order, deferring one whose turn has not
+        come.  A compiled SPMD binary launches collectives in one global
+        order, and without the discipline two rows with skewed timing can
+        commit two collectives in opposite orders and hang — with it the
+        cluster is provably deadlock-free.  In the symmetric case rows
+        already commit in canonical order, so the discipline never fires and
+        the per-row loop stays bit-identical to ``run()``.
+
+        Returns ``(results, waits)``: per-row ``SimResult`` plus per-row
+        total comm-stream barrier-wait seconds (time between a row's arrival
+        at a collective and the slowest member's arrival).
+        """
+        from repro.core.costmodel.simulator import SimResult
+
+        n_total = self.n
+        pos = self._pos
+        order = self._order
+        ddeps = self._ddeps
+        cons = self._cons
+        out_b = self._out_bytes
+        is_comm = self._is_comm
+        names = self._names
+        scode = is_comm if overlap else self._zeros
+        is_coll = self._is_coll
+        push, pop = heapq.heappush, heapq.heappop
+        J = len(dur_rows)
+
+        if coll_order is None and any(barrier_map):
+            raise ValueError("run_cluster needs coll_order when barriers "
+                             "are present (see canonical_coll_order)")
+
+        class _Row:
+            __slots__ = ("remaining", "dcount", "dmax", "sf0", "sf1",
+                         "busy0", "busy1", "total", "wait", "avail0",
+                         "avail1", "future0", "future1", "mem_events",
+                         "timeline", "scheduled", "done",
+                         "exp_list", "exp_i", "deferred")
+
+        states = []
+        for j in range(J):
+            st = _Row()
+            st.remaining = self._indeg0[:]
+            st.dcount = self._dcount0[:]
+            st.dmax = [0.0] * n_total
+            st.sf0 = st.sf1 = 0.0
+            st.busy0 = st.busy1 = 0.0
+            st.total = 0.0
+            st.wait = 0.0
+            st.avail0, st.avail1 = [], []
+            for nid in self._roots:
+                (st.avail1 if scode[nid] else st.avail0).append(pos[nid])
+            heapq.heapify(st.avail0)
+            heapq.heapify(st.avail1)
+            st.future0, st.future1 = [], []
+            st.mem_events = []
+            st.timeline = [] if keep_timeline else None
+            st.scheduled = 0
+            st.done = False
+            # program-order discipline covers EVERY collective (not just
+            # barrier'd ones) so commit order — and float accumulation
+            # order — is identical whatever the rank coalescing chose
+            st.exp_list = coll_order or ()
+            st.exp_i = 0
+            st.deferred = {}
+            states.append(st)
+
+        def _deliver(st, nid, end):
+            """Post-duration commit tail shared by barrier resolution and the
+            normal path of a suspended row: consumer wakeups + ddep frees,
+            identical bookkeeping to run()."""
+            for c in cons[nid]:
+                r = st.remaining[c] - 1
+                st.remaining[c] = r
+                dep_t = st.dmax[c]
+                if end > dep_t:
+                    st.dmax[c] = dep_t = end
+                if r == 0:
+                    pc = pos[c]
+                    if scode[c]:
+                        if dep_t <= st.sf1:
+                            push(st.avail1, pc)
+                        else:
+                            push(st.future1, (dep_t, pc))
+                    else:
+                        if dep_t <= st.sf0:
+                            push(st.avail0, pc)
+                        else:
+                            push(st.future0, (dep_t, pc))
+            for dd in ddeps[nid]:
+                r = st.dcount[dd] - 1
+                st.dcount[dd] = r
+                if r <= 0:
+                    ob = out_b[dd]
+                    if ob:
+                        st.mem_events.append((end, -ob))
+
+        def _complete_suspended(w, nid, b, end):
+            """Finish the commit a suspended row w started when it arrived at
+            barrier b: charge cost from its own arrival, attribute the wait,
+            then release it."""
+            st = states[w]
+            arr, sw = b[4][w]
+            cost = b[3]
+            if sw:
+                st.sf1 = end
+            else:                      # overlap=False: comm runs on stream 0
+                st.sf0 = end
+            st.busy1 += cost           # busy accounting is by node *type*
+            st.wait += b[1] - arr
+            if end > st.total:
+                st.total = end
+            st.scheduled += 1
+            if st.timeline is not None:
+                st.timeline.append((nid, names[nid],
+                                    "comm" if sw else "comp", arr, end))
+            ob = out_b[nid]
+            if ob:
+                st.mem_events.append((arr, ob))
+            _deliver(st, nid, end)
+
+        ready = list(range(J))
+        finished = 0
+
+        def advance(j):
+            """Run row j until it finishes the graph (returns 1) or suspends
+            on a collective barrier (returns 0).  Body replicates run()."""
+            st = states[j]
+            dur = dur_rows[j]
+            bmap = barrier_map[j]
+            remaining = st.remaining
+            dcount = st.dcount
+            dmax = st.dmax
+            sf0, sf1 = st.sf0, st.sf1
+            busy0, busy1 = st.busy0, st.busy1
+            total = st.total
+            avail0, avail1 = st.avail0, st.avail1
+            future0, future1 = st.future0, st.future1
+            mem_events = st.mem_events
+            timeline = st.timeline
+            scheduled = st.scheduled
+
+            while scheduled < n_total:
+                while future0 and future0[0][0] <= sf0:
+                    push(avail0, pop(future0)[1])
+                while future1 and future1[0][0] <= sf1:
+                    push(avail1, pop(future1)[1])
+                if avail0:
+                    est0, p0, a0 = sf0, avail0[0], True
+                elif future0:
+                    dt, p0 = future0[0]
+                    est0, a0 = (dt if dt > sf0 else sf0), False
+                else:
+                    p0 = -1
+                if avail1:
+                    est1, p1, a1 = sf1, avail1[0], True
+                elif future1:
+                    dt, p1 = future1[0]
+                    est1, a1 = (dt if dt > sf1 else sf1), False
+                else:
+                    p1 = -1
+                if p0 >= 0 and (p1 < 0 or est0 < est1
+                                or (est0 == est1 and p0 < p1)):
+                    s = 0
+                    p = pop(avail0) if a0 else pop(future0)[1]
+                    start = est0
+                elif p1 >= 0:
+                    s = 1
+                    p = pop(avail1) if a1 else pop(future1)[1]
+                    start = est1
+                else:
+                    raise ValueError("deadlock: no ready nodes but graph "
+                                     "unfinished")
+                nid = order[p]
+                if is_coll[nid] and st.exp_list:
+                    if nid != st.exp_list[st.exp_i]:
+                        # program-order discipline: this collective's turn
+                        # hasn't come — park it and pick again
+                        st.deferred[nid] = dmax[nid]
+                        continue
+                    st.exp_i += 1
+                    if st.exp_i < len(st.exp_list):
+                        dt = st.deferred.pop(st.exp_list[st.exp_i], None)
+                        if dt is not None:
+                            nxt = st.exp_list[st.exp_i]
+                            if scode[nxt]:
+                                push(future1, (dt, pos[nxt]))
+                            else:
+                                push(future0, (dt, pos[nxt]))
+                    b = bmap.get(nid)
+                    if b is not None:
+                        # barrier'd collective: record arrival (+ committing
+                        # stream); resolve if we are the last member to
+                        # arrive in driver order, else suspend
+                        b[0] -= 1
+                        b[4][j] = (start, s)
+                        if start > b[1]:
+                            b[1] = start
+                        if b[0]:
+                            st.sf0, st.sf1 = sf0, sf1
+                            st.busy0, st.busy1 = busy0, busy1
+                            st.total = total
+                            st.scheduled = scheduled
+                            return 0
+                        cost = b[3]
+                        end = b[1] + cost
+                        for w in b[2]:
+                            if w != j:
+                                _complete_suspended(w, nid, b, end)
+                                ready.append(w)
+                        if s:
+                            sf1 = end
+                        else:          # overlap=False: comm on stream 0
+                            sf0 = end
+                        busy1 += cost  # busy accounting is by node *type*
+                        st.wait += b[1] - start
+                        if end > total:
+                            total = end
+                        scheduled += 1
+                        if timeline is not None:
+                            timeline.append((nid, names[nid],
+                                             "comm" if s else "comp",
+                                             start, end))
+                        ob = out_b[nid]
+                        if ob:
+                            mem_events.append((start, ob))
+                        # consumer/ddep bookkeeping reads the stream clocks
+                        st.sf0, st.sf1 = sf0, sf1
+                        _deliver(st, nid, end)
+                        continue
+                d = dur[nid]
+                end = start + d
+                if s:
+                    sf1 = end
+                else:
+                    sf0 = end
+                if is_comm[nid]:
+                    busy1 += d
+                else:
+                    busy0 += d
+                if end > total:
+                    total = end
+                scheduled += 1
+                if timeline is not None:
+                    timeline.append((nid, names[nid],
+                                     "comm" if s else "comp", start, end))
+                ob = out_b[nid]
+                if ob:
+                    mem_events.append((start, ob))
+                for c in cons[nid]:
+                    r = remaining[c] - 1
+                    remaining[c] = r
+                    dep_t = dmax[c]
+                    if end > dep_t:
+                        dmax[c] = dep_t = end
+                    if r == 0:
+                        pc = pos[c]
+                        if scode[c]:
+                            if dep_t <= sf1:
+                                push(avail1, pc)
+                            else:
+                                push(future1, (dep_t, pc))
+                        else:
+                            if dep_t <= sf0:
+                                push(avail0, pc)
+                            else:
+                                push(future0, (dep_t, pc))
+                for dd in ddeps[nid]:
+                    r = dcount[dd] - 1
+                    dcount[dd] = r
+                    if r <= 0:
+                        ob = out_b[dd]
+                        if ob:
+                            mem_events.append((end, -ob))
+
+            st.sf0, st.sf1 = sf0, sf1
+            st.busy0, st.busy1 = busy0, busy1
+            st.total = total
+            st.scheduled = scheduled
+            st.done = True
+            return 1
+
+        while finished < J:
+            if not ready:
+                pend = [(j, nid) for j, bm in enumerate(barrier_map)
+                        for nid, b in bm.items()
+                        if b[0] and j in b[4]]
+                raise ValueError(
+                    "cluster deadlock: ranks issued collectives in "
+                    f"conflicting orders (pending arrivals: {pend[:8]}) — "
+                    "a real SPMD program would hang here")
+            j = ready.pop()
+            st = states[j]
+            if st.done:
+                continue
+            finished += advance(j)
+
+        out, waits = [], []
+        for st in states:
+            live = peak = 0.0
+            for _, delta in sorted(st.mem_events):
+                live += delta
+                if live > peak:
+                    peak = live
+            exposed = st.total - st.busy0
+            if exposed < 0.0:
+                exposed = 0.0
+            out.append(SimResult(total_time=st.total, compute_time=st.busy0,
+                                 comm_time=st.busy1, exposed_comm=exposed,
+                                 peak_bytes=peak, n_nodes=n_total,
+                                 timeline=st.timeline))
+            waits.append(st.wait)
+        return out, waits
+
+    # -- duration-override helpers ------------------------------------------
+    def comm_overrides(self, system, topo, bw_scale: float,
+                       algo: str = "auto") -> Dict[int, float]:
+        """{nid: seconds} repricing every COMM node at `bw_scale`-scaled link
+        bandwidth (the explicit scale, ignoring any per-link overrides) —
+        the shape of a per-NIC degradation sweep: one compiled graph, one
+        override dict per degradation level, one simulate_batch."""
+        out = self.priced_colls(topo, algo, bw_scale=bw_scale)
+        cb = self.comm_bytes
+        link_bw = topo.link_bw * bw_scale
+        for nid in np.nonzero((self.type_code == 2)
+                              | (self.type_code == 3))[0]:
+            out[int(nid)] = (float(cb[nid]) / link_bw + topo.link_latency)
+        return out
 
 
 def compile_graph(g: chakra.Graph) -> CompiledGraph:

@@ -31,6 +31,28 @@ compute-stream busy time).
 
 ``simulate_batch()`` amortizes compilation across many duration-override
 runs (straggler sweeps, sensitivity analyses).
+
+Cluster model (``simulate_cluster``)
+------------------------------------
+``simulate_cluster()`` drops the rank-symmetric assumption: K ranks each
+replay the SPMD graph on their own compute+comm stream pair, with per-rank
+durations derived from ``RankProfile``s (mixed chip generations, degraded
+hosts) and per-link bandwidth overrides (flapping NICs, degraded pods), and
+COMM_COLL nodes acting as cross-rank barriers — a collective completes only
+when its slowest participating rank arrives, and its cost (priced by the
+weakest member's links) is charged from that arrival.  Ranks are first
+coalesced into behavioral equivalence classes (same profile, isomorphic
+collective-group environment), so the engine cost scales with the number of
+*distinct* rank behaviors, not the cluster size: a fully symmetric K-rank
+cluster costs exactly one event loop and is bit-identical to ``simulate()``
+for every K (the cluster-free property, enforced by
+tests/test_cluster_sim.py).  Collective participant instances are modeled
+as consecutive rank blocks of the node's group size (the standard mesh
+ordering); the group attr still prices stride/axis effects.
+
+``straggler_analysis`` is built on it: a straggler is one slowed rank
+gating barriers — fast ranks accumulate attributable barrier wait while
+their own compute runs ahead — rather than the old single-timeline proxy.
 """
 from __future__ import annotations
 
@@ -38,10 +60,13 @@ import dataclasses
 import heapq
 from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
 from repro.core import chakra
 from repro.core.costmodel.collectives import collective_time
 from repro.core.costmodel.compiled import CompiledGraph, compile_graph
-from repro.core.costmodel.topology import Topology, build_topology
+from repro.core.costmodel.topology import (RankProfile, Topology,
+                                           build_topology)
 
 
 @dataclasses.dataclass
@@ -73,7 +98,11 @@ def node_duration(n: chakra.Node, system, topo: Topology,
         return collective_time(n.attrs.get("comm_kind", "all-reduce"),
                                payload, group, topo, algo)
     if n.type in (chakra.COMM_SEND, chakra.COMM_RECV):
-        return (n.attrs.get("comm_bytes", 0.0) / topo.link_bw
+        link_bw = topo.link_bw
+        ls = getattr(topo, "link_scales", None)
+        if ls:                      # weakest-link proxy, like collectives
+            link_bw = link_bw * min(ls.values())
+        return (n.attrs.get("comm_bytes", 0.0) / link_bw
                 + topo.link_latency)
     return 0.0
 
@@ -259,33 +288,326 @@ def _simulate_reference(g: chakra.Graph, system,
                      peak_bytes=peak, n_nodes=len(g.nodes), timeline=timeline)
 
 
-def straggler_analysis(g: chakra.Graph, system, topo: Optional[Topology] = None,
-                       slowdowns=(1.0, 1.1, 1.25, 1.5, 2.0),
-                       backup_overhead: float = 0.05):
-    """Quantify straggler impact + backup-rank mitigation (DESIGN.md SS7).
+# ---------------------------------------------------------------------------
+# Cluster-level asymmetric simulation
+# ---------------------------------------------------------------------------
 
-    In a synchronous SPMD step every collective gates on the slowest
-    participant, so a straggler whose compute runs `f`x slower sets the
-    cluster's step time: simulate the straggler's own timeline with COMP
-    durations scaled by f.  A hot backup that replaces the straggler returns
-    the step to nominal at `backup_overhead` cost (state replication).
+@dataclasses.dataclass
+class ClusterSimResult:
+    """Per-rank view of one cluster step.
 
-    Implemented over the compiled substrate: the graph is lowered once and
-    every slowdown factor is a duration-override replay (simulate_batch).
+    Ranks are grouped into behavioral classes (``class_of_rank`` maps rank ->
+    class index); each class carries one ``SimResult`` plus its total
+    comm-stream barrier wait (seconds a member spent arrived-but-blocked at
+    collectives, i.e. straggler-attributable time).  Duck-types the scalar
+    ``SimResult`` fields (total_time et al. = the slowest rank's view) so DSE
+    objectives work unchanged."""
+    n_ranks: int
+    class_of_rank: List[int]
+    class_reps: List[int]              # class -> lowest member rank id
+    results: List[SimResult]           # class -> per-rank SimResult
+    class_barrier_wait: List[float]    # class -> total barrier wait (s)
+    step_time: float                   # max over ranks of total_time
+    slowest_rank: int                  # lowest rank id attaining step_time
 
-    Returns a list of dicts: slowdown, step_time, slowdown_realized,
-    backup_step_time, backup_wins.
+    @property
+    def n_classes(self) -> int:
+        return len(self.results)
+
+    @property
+    def total_time(self) -> float:
+        return self.step_time
+
+    def rank_result(self, r: int) -> SimResult:
+        return self.results[self.class_of_rank[r]]
+
+    @property
+    def rank_times(self) -> List[float]:
+        return [self.results[c].total_time for c in self.class_of_rank]
+
+    @property
+    def barrier_wait(self) -> List[float]:
+        """Per-rank total barrier wait, expanded over all K ranks."""
+        return [self.class_barrier_wait[c] for c in self.class_of_rank]
+
+    @property
+    def max_barrier_wait(self) -> float:
+        return max(self.class_barrier_wait)
+
+    @property
+    def compute_time(self) -> float:
+        return self.rank_result(self.slowest_rank).compute_time
+
+    @property
+    def comm_time(self) -> float:
+        return self.rank_result(self.slowest_rank).comm_time
+
+    @property
+    def exposed_comm(self) -> float:
+        return self.rank_result(self.slowest_rank).exposed_comm
+
+    @property
+    def peak_bytes(self) -> float:
+        return max(r.peak_bytes for r in self.results)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.results[0].n_nodes
+
+    def as_dict(self):
+        waits = self.class_barrier_wait
+        counts = [0] * len(self.results)
+        for c in self.class_of_rank:
+            counts[c] += 1
+        mean_wait = sum(w * k for w, k in zip(waits, counts)) / self.n_ranks
+        return {"total_time": self.step_time, "step_time": self.step_time,
+                "compute_time": self.compute_time,
+                "comm_time": self.comm_time,
+                "exposed_comm": self.exposed_comm,
+                "peak_bytes": self.peak_bytes, "n_nodes": self.n_nodes,
+                "n_ranks": self.n_ranks, "n_classes": self.n_classes,
+                "slowest_rank": self.slowest_rank,
+                "max_barrier_wait": self.max_barrier_wait,
+                "mean_barrier_wait": mean_wait}
+
+
+def _refine_colors(K: int, sizes: Sequence[int], init_keys: List) -> List[int]:
+    """Partition ranks into behavioral equivalence classes.
+
+    Two ranks share a class iff they have the same hardware key and,
+    recursively, their collective-group instances (consecutive blocks per
+    distinct group size) carry the same class multiset — the standard
+    partition-refinement fixpoint.  Class ids are dense, assigned in
+    first-seen (= lowest-rank) order."""
+    seen: Dict = {}
+    colors = [seen.setdefault(k, len(seen)) for k in init_keys]
+    n_colors = len(seen)
+    while True:
+        per_rank: List[List] = [[] for _ in range(K)]
+        for s in sizes:
+            if s >= K:
+                blocks = [range(K)]
+            else:
+                blocks = [range(i, min(i + s, K)) for i in range(0, K, s)]
+            for blk in blocks:
+                cnt: Dict[int, int] = {}
+                for m in blk:
+                    c = colors[m]
+                    cnt[c] = cnt.get(c, 0) + 1
+                key = tuple(sorted(cnt.items()))
+                for m in blk:
+                    per_rank[m].append(key)
+        seen = {}
+        new = [seen.setdefault((colors[r], tuple(per_rank[r])), len(seen))
+               for r in range(K)]
+        if len(seen) == n_colors:      # refinement stalled -> fixpoint
+            return new
+        colors, n_colors = new, len(seen)
+
+
+def _rank_row(cg: CompiledGraph, system, topo, algo: str,
+              compute_derate: float, base: List[float], prof: RankProfile,
+              lscale: float, reprice_colls: bool) -> List[float]:
+    """Per-node duration list for one rank class.  Returns `base` itself
+    (no copy) for a fully nominal rank; otherwise recomputes only the node
+    kinds the profile touches."""
+    if prof.is_default() and lscale == 1.0 and not reprice_colls:
+        return base
+    row = list(base)
+    eff_pf = prof.effective_flops(system)
+    eff_hbm = prof.effective_hbm(system)
+    if eff_pf != system.peak_flops or eff_hbm != system.hbm_bw:
+        comp = cg.type_code == 0
+        if comp.any():
+            t_f = cg.flops[comp] / (eff_pf * compute_derate)
+            t_b = cg.bytes[comp] / eff_hbm
+            vals = np.maximum(t_f, t_b).tolist()
+            for nid, v in zip(np.nonzero(comp)[0].tolist(), vals):
+                row[nid] = v
+    if lscale != 1.0 or reprice_colls:
+        p2p = (cg.type_code == 2) | (cg.type_code == 3)
+        if p2p.any():
+            link_bw = topo.link_bw * lscale
+            for nid in np.nonzero(p2p)[0].tolist():
+                row[nid] = (float(cg.comm_bytes[nid]) / link_bw
+                            + topo.link_latency)
+        for nid, t in cg.priced_colls(topo, algo, bw_scale=lscale).items():
+            row[nid] = t
+    return row
+
+
+def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
+                     n_ranks: Optional[int] = None,
+                     rank_profiles=None, rank_durations: Optional[Dict] = None,
+                     algo: str = "auto", overlap: bool = True,
+                     compute_derate: float = 0.6,
+                     keep_timeline: bool = False,
+                     coalesce: bool = True) -> ClusterSimResult:
+    """Simulate one SPMD step on a (possibly heterogeneous) K-rank cluster.
+
+    `rank_profiles` is a {rank: RankProfile} dict or a length-K sequence
+    (absent/default entries are baseline ranks); `rank_durations` maps
+    rank -> {nid: seconds} per-node duration overrides for that rank (the
+    straggler-injection hook).  Per-link overrides come from
+    ``topo.link_scales`` and each profile's ``link_scale``; a collective is
+    priced by its weakest participant.
+
+    `coalesce=True` (default) simulates one representative per rank
+    equivalence class — the symmetric case runs exactly one event loop
+    regardless of K, and is bit-identical to ``simulate()`` (its K=1 special
+    case).  `coalesce=False` simulates every rank individually; both paths
+    produce identical results (property-tested) — the naive path exists as
+    the executable spec for the coalescing.
     """
     topo = topo or build_topology(system)
+    K = int(n_ranks if n_ranks is not None else topo.n_ranks)
+    if K < 1:
+        raise ValueError(f"cluster needs >= 1 rank, got {K}")
+    cg = compile_graph(g)
+    base = cg.durations(system, topo, algo, compute_derate)
+
+    default_prof = RankProfile()
+    profs: Dict[int, RankProfile] = {}
+    if rank_profiles:
+        items = (rank_profiles.items() if isinstance(rank_profiles, dict)
+                 else enumerate(rank_profiles))
+        for r, p in items:
+            if p is None or p.is_default():
+                continue
+            if not 0 <= r < K:
+                raise ValueError(f"rank_profiles rank {r} outside "
+                                 f"cluster of {K}")
+            profs[int(r)] = p
+    rdur: Dict[int, Dict] = {}
+    if rank_durations:
+        for r, od in rank_durations.items():
+            if not od:
+                continue
+            if not 0 <= r < K:
+                raise ValueError(f"rank_durations rank {r} outside "
+                                 f"cluster of {K}")
+            rdur[int(r)] = od
+    tls = getattr(topo, "link_scales", None) or {}
+
+    init_keys = []
+    for r in range(K):
+        od = rdur.get(r)
+        okey = tuple(sorted(od.items())) if od else None
+        init_keys.append((profs.get(r, default_prof), tls.get(r, 1.0), okey))
+
+    sizes = sorted({min(len(meta[1]), K) for meta in cg._coll_meta
+                    if min(len(meta[1]), K) > 1})
+    colors = (_refine_colors(K, sizes, init_keys) if coalesce
+              else list(range(K)))
+    n_classes = max(colors) + 1
+    reps: List[Optional[int]] = [None] * n_classes
+    for r in range(K):
+        if reps[colors[r]] is None:
+            reps[colors[r]] = r
+
+    # per-class duration rows (shared across classes with the same hardware
+    # key; rank_durations overrides applied on a copy)
+    reprice = bool(tls)                # per-link overrides: every row must be
+    row_memo: Dict = {}                # priced at its own rank's link scale
+    rows: List[List[float]] = []
+    for rep in reps:
+        p = profs.get(rep, default_prof)
+        ls = p.link_scale * tls.get(rep, 1.0)
+        rkey = (p, ls)
+        row = row_memo.get(rkey)
+        if row is None:
+            row = _rank_row(cg, system, topo, algo, compute_derate, base,
+                            p, ls, reprice)
+            row_memo[rkey] = row
+        od = rdur.get(rep)
+        if od:
+            row = _override(row, od)
+        rows.append(row)
+
+    # cross-rank barriers: one per (collective, participant-class clique);
+    # collectives whose instance maps to a single class stay on the plain
+    # run() path (trivially resolved at arrival)
+    barrier_map: List[Dict[int, list]] = [dict() for _ in range(n_classes)]
+    for nid, (kind, group, group_t) in zip(cg._coll_ids, cg._coll_meta):
+        s = len(group)
+        if min(s, K) <= 1:
+            continue
+        for j, rep in enumerate(reps):
+            if nid in barrier_map[j]:
+                continue
+            if s >= K:
+                members = range(K)
+            else:
+                i0 = (rep // s) * s
+                members = range(i0, min(i0 + s, K))
+            W = sorted({colors[m] for m in members})
+            if len(W) == 1:
+                continue
+            b = [len(W), 0.0, tuple(W),
+                 max(rows[w][nid] for w in W), {}]
+            for w in W:
+                barrier_map[w][nid] = b
+
+    # canonical program order of collectives (the compiled binary's launch
+    # order, taken from the nominal symmetric schedule) — only needed when
+    # some barrier actually spans classes
+    coll_order = (cg.canonical_coll_order(base, overlap=overlap)
+                  if any(barrier_map) else None)
+
+    results, waits = cg.run_cluster(rows, barrier_map, coll_order=coll_order,
+                                    overlap=overlap,
+                                    keep_timeline=keep_timeline)
+
+    step = max(r.total_time for r in results)
+    slowest = next(r for r in range(K)
+                   if results[colors[r]].total_time == step)
+    return ClusterSimResult(n_ranks=K, class_of_rank=colors,
+                            class_reps=[int(r) for r in reps],
+                            results=results, class_barrier_wait=waits,
+                            step_time=step, slowest_rank=slowest)
+
+
+def straggler_analysis(g: chakra.Graph, system, topo: Optional[Topology] = None,
+                       slowdowns=(1.0, 1.1, 1.25, 1.5, 2.0),
+                       backup_overhead: float = 0.05,
+                       n_ranks: Optional[int] = None,
+                       straggler_rank: int = 0):
+    """Quantify straggler impact + backup-rank mitigation (DESIGN.md SS7).
+
+    A straggler is modeled as *one slowed rank gating collective barriers*
+    (``simulate_cluster`` with COMP durations of `straggler_rank` scaled by
+    f): collectives complete only when the straggler arrives, so fast ranks
+    accumulate barrier wait while compute ahead of the barrier still
+    overlaps — step-time inflation lands strictly between 1x and fx instead
+    of the old single-timeline proxy's whole-step scaling.  A hot backup
+    that replaces the straggler returns the step to nominal at
+    `backup_overhead` cost (state replication).
+
+    The nominal (f=1) row reuses the compiled graph's cached symmetric
+    result — no separate simulate() recompute; thanks to rank coalescing
+    each slowed factor costs a handful of event loops regardless of K.
+
+    Returns a list of dicts: slowdown, step_time, slowdown_realized,
+    backup_step_time, backup_wins, slowest_rank, victim_wait, n_ranks.
+    """
+    topo = topo or build_topology(system)
+    K = int(n_ranks if n_ranks is not None else topo.n_ranks)
     cg = compile_graph(g)
     base = cg.durations(system, topo)
-    comp_ids = [n.id for n in g.nodes if n.type == chakra.COMP]
-    nominal = simulate(g, system, topo).total_time
-    overrides = [{nid: base[nid] * f for nid in comp_ids} for f in slowdowns]
-    results = simulate_batch(g, system, overrides, topo=topo)
+    comp_ids = np.nonzero(cg.type_code == 0)[0].tolist()
+    nominal_res = simulate(g, system, topo)    # memoized on the compiled graph
+    nominal = nominal_res.total_time
     out = []
-    for f, r in zip(slowdowns, results):
-        t = r.total_time
+    for f in slowdowns:
+        if f == 1.0:
+            # symmetric cluster == the cached nominal timeline on every rank
+            t, wait, slowest = nominal, 0.0, 0
+        else:
+            rd = {straggler_rank: {nid: base[nid] * f for nid in comp_ids}}
+            cr = simulate_cluster(g, system, topo, n_ranks=K,
+                                  rank_durations=rd)
+            t, wait, slowest = (cr.step_time, cr.max_barrier_wait,
+                                cr.slowest_rank)
         backup_t = nominal * (1.0 + backup_overhead)
         out.append({
             "slowdown": f,
@@ -293,5 +615,8 @@ def straggler_analysis(g: chakra.Graph, system, topo: Optional[Topology] = None,
             "slowdown_realized": t / nominal,
             "backup_step_time": backup_t,
             "backup_wins": backup_t < t,
+            "slowest_rank": slowest,
+            "victim_wait": wait,
+            "n_ranks": K,
         })
     return out

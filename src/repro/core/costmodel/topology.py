@@ -4,12 +4,53 @@ Each topology answers: per-link bandwidth/latency, hop distance between
 ranks, and the effective ring bandwidth available to a group (used by the
 collective-time models).  TPU-native topologies (torus) and the paper's
 SS6.2 wafer-scale 2-D mesh are the same object modulo wraparound links.
+
+Heterogeneity hooks (cluster-level asymmetric simulation):
+
+  * ``RankProfile`` describes one rank's hardware deviation from the
+    SystemConfig baseline — absolute ``peak_flops``/``hbm_bw`` overrides
+    (mixed chip generations), a multiplicative ``compute_scale`` (thermal /
+    degraded-host derate), and a ``link_scale`` on its NIC/ICI bandwidth.
+    Consumed by ``simulator.simulate_cluster`` and the DSE hardware knobs.
+  * ``Topology.link_scales`` maps rank -> per-link bandwidth multiplier
+    (flapping NIC, degraded pod uplink).  ``group_link_scale`` returns the
+    weakest member's multiplier, which ``collectives.collective_time`` uses
+    to price a collective by its slowest participant.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Tuple
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class RankProfile:
+    """Per-rank hardware profile; the all-defaults instance is the baseline
+    rank (bit-identical to the rank-symmetric model).
+
+    ``peak_flops``/``hbm_bw`` are absolute overrides (None -> SystemConfig
+    value); ``compute_scale`` multiplies both (a 1.5x-slower degraded host is
+    ``compute_scale=1/1.5``); ``link_scale`` multiplies this rank's link
+    bandwidth in every collective/p2p it participates in."""
+    peak_flops: Optional[float] = None
+    hbm_bw: Optional[float] = None
+    compute_scale: float = 1.0
+    link_scale: float = 1.0
+    tag: str = ""
+
+    def is_default(self) -> bool:
+        return (self.peak_flops is None and self.hbm_bw is None
+                and self.compute_scale == 1.0 and self.link_scale == 1.0)
+
+    def effective_flops(self, system) -> float:
+        base = self.peak_flops if self.peak_flops is not None \
+            else system.peak_flops
+        return base * self.compute_scale
+
+    def effective_hbm(self, system) -> float:
+        base = self.hbm_bw if self.hbm_bw is not None else system.hbm_bw
+        return base * self.compute_scale
 
 
 @dataclasses.dataclass
@@ -17,8 +58,25 @@ class Topology:
     n_ranks: int
     link_bw: float            # bytes/s per link per direction
     link_latency: float       # seconds per hop
+    # rank -> bandwidth multiplier for that rank's links (<1 = degraded);
+    # absent ranks are 1.0.  Priced into collectives via group_link_scale.
+    link_scales: Optional[Dict[int, float]] = None
 
     name = "abstract"
+
+    def rank_link_scale(self, r: int) -> float:
+        """Per-link bandwidth multiplier of rank r (1.0 = nominal)."""
+        if not self.link_scales:
+            return 1.0
+        return self.link_scales.get(r, 1.0)
+
+    def group_link_scale(self, group: List[int]) -> float:
+        """Weakest member's link multiplier — a collective over `group` runs
+        no faster than its slowest participant's links allow."""
+        if not self.link_scales:
+            return 1.0
+        return min((self.link_scales.get(r, 1.0) for r in group),
+                   default=1.0)
 
     def hop_distance(self, a: int, b: int) -> int:
         raise NotImplementedError

@@ -18,17 +18,29 @@ explore() walks a knob grid; work is reused at every layer of the stack:
   * ``explore(..., parallel=N)`` evaluates independent trials on a
     concurrent.futures thread pool (trial evaluation releases no locks and
     the caches are GIL-safe dict ops; results are identical to serial).
+
+Heterogeneous-cluster knobs (hardware layer): ``degraded_fraction`` /
+``degraded_link_scale`` (a fraction of ranks with degraded NICs),
+``slow_chip_ratio`` / ``slow_chip_scale`` (a fraction of ranks from an
+older/derated chip generation), ``pod_link_scale`` (the second half of the
+cluster behind a degraded pod uplink) and ``cluster_ranks`` (K).  Any of
+them switches the trial onto ``simulate_cluster``: the knob values build
+per-rank ``RankProfile``s and the objective reads the slowest rank's step
+time, so ``explore``/``greedy_descent`` sweep mixed-generation or
+partially-degraded clusters exactly like any other hardware knob.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional
 
 from repro.core import chakra, passes
-from repro.core.costmodel.simulator import SimResult, simulate
-from repro.core.costmodel.topology import build_topology
+from repro.core.costmodel.simulator import (SimResult, simulate,
+                                            simulate_cluster)
+from repro.core.costmodel.topology import RankProfile, build_topology
 
 
 @dataclasses.dataclass
@@ -51,6 +63,59 @@ class Trial:
 
 _SOFTWARE_KNOBS = ("fsdp_sync", "prefetch", "bucket_bytes")
 _SYSTEM_KNOBS = ("topology", "collective_algo", "link_bw", "dcn_bw", "chips")
+_HETERO_KNOBS = ("degraded_fraction", "degraded_link_scale",
+                 "slow_chip_ratio", "slow_chip_scale", "pod_link_scale",
+                 "cluster_ranks")
+
+
+def rank_profiles_for(n_ranks: int, config: Dict) -> Optional[Dict]:
+    """Hetero hardware knobs -> {rank: RankProfile} for simulate_cluster.
+
+    ``slow_chip_ratio`` puts the *first* ceil(ratio*K) ranks on an older
+    generation (``compute_scale = slow_chip_scale``, default 0.7);
+    ``degraded_fraction`` puts the *last* ceil(fraction*K) ranks behind
+    degraded links (``link_scale = degraded_link_scale``, default 0.5);
+    ``pod_link_scale`` multiplies the link scale of the second half of the
+    cluster (a degraded pod uplink).  Returns None when every rank is
+    nominal."""
+    profs: Dict[int, RankProfile] = {}
+
+    def merge(r: int, **kw):
+        p = profs.get(r, RankProfile())
+        profs[r] = dataclasses.replace(p, **kw)
+
+    ratio = config.get("slow_chip_ratio") or 0.0
+    if ratio > 0.0:
+        scale = config.get("slow_chip_scale", 0.7)
+        for r in range(min(n_ranks, int(math.ceil(ratio * n_ranks)))):
+            merge(r, compute_scale=scale)
+    frac = config.get("degraded_fraction") or 0.0
+    if frac > 0.0:
+        scale = config.get("degraded_link_scale", 0.5)
+        for r in range(max(0, n_ranks - int(math.ceil(frac * n_ranks))),
+                       n_ranks):
+            merge(r, link_scale=scale)
+    pod = config.get("pod_link_scale")
+    if pod is not None and pod != 1.0:
+        for r in range(n_ranks // 2, n_ranks):
+            merge(r, link_scale=profs.get(r, RankProfile()).link_scale * pod)
+    return {r: p for r, p in profs.items() if not p.is_default()} or None
+
+
+def _is_hetero(config: Dict) -> bool:
+    """True when the config actually deviates from a homogeneous cluster —
+    only then is the (un-memoized) cluster engine worth paying for.  Nominal
+    values of the scale knobs (pod_link_scale=1.0, or *_scale set without
+    its activating fraction/ratio) stay on the plain simulate() path, which
+    is bit-identical for a symmetric cluster anyway.  An explicit
+    ``cluster_ranks`` forces the cluster engine (uniform result types for a
+    sweep that wants per-rank attribution on every trial)."""
+    if config.get("degraded_fraction") or config.get("slow_chip_ratio"):
+        return True
+    pod = config.get("pod_link_scale")
+    if pod is not None and pod != 1.0:
+        return True
+    return config.get("cluster_ranks") is not None
 
 
 def apply_software_knobs(g: chakra.Graph, config: Dict) -> chakra.Graph:
@@ -79,9 +144,17 @@ def _system_for(system, cfg: Dict):
 
 def _simulate_cfg(g2: chakra.Graph, system, config: Dict) -> SimResult:
     """Simulate an already-transformed graph under config's system knobs —
-    the shared tail of evaluate/explore/greedy_descent."""
+    the shared tail of evaluate/explore/greedy_descent.  Hetero knobs route
+    the trial to the cluster engine (objective = slowest rank's step time);
+    a symmetric hetero config is bit-identical to the plain path."""
     sys2 = _system_for(system, config)
     topo = build_topology(sys2)
+    if _is_hetero(config):
+        n_ranks = int(config.get("cluster_ranks") or topo.n_ranks)
+        return simulate_cluster(g2, sys2, topo, n_ranks=n_ranks,
+                                rank_profiles=rank_profiles_for(n_ranks,
+                                                                config),
+                                algo=sys2.collective_algo)
     return simulate(g2, sys2, topo, algo=sys2.collective_algo)
 
 

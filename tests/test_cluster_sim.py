@@ -1,0 +1,341 @@
+"""Cluster-level asymmetric simulation: rank-symmetry bit-identity vs
+simulate(), coalesced == naive equivalence on heterogeneous profiles,
+directed barrier semantics with slowed ranks, per-link pricing, hetero DSE
+knobs, and the benchmark regression gate."""
+import random
+
+import pytest
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.costmodel import (RankProfile, build_topology, compile_graph,
+                                  simulate, simulate_cluster,
+                                  straggler_analysis, collective_time)
+from repro.core.costmodel.topology import Switch
+from repro.core.dse import Knob, explore, greedy_descent, rank_profiles_for
+
+from test_compiled_sim import FIELDS, rand_graph
+
+SYS = SystemConfig(chips=16)
+TOPO = build_topology(SYS)
+
+
+def assert_rank_identical(cr, rank, ref):
+    rr = cr.rank_result(rank)
+    for f in FIELDS:
+        assert getattr(rr, f) == getattr(ref, f), \
+            f"rank {rank} {f}: {getattr(rr, f)!r} != {getattr(ref, f)!r}"
+    assert rr.timeline == ref.timeline
+
+
+def test_symmetric_cluster_bit_identical_to_simulate():
+    """A symmetric K-rank cluster must reproduce single-rank simulate()
+    bit-for-bit — every field, every rank, K in {1, 2, 4, 8}, with and
+    without coalescing, overlap on/off (the cluster-free property)."""
+    for seed in range(25):
+        rng = random.Random(seed)
+        g = rand_graph(rng, rng.randint(5, 120))
+        for overlap in (True, False):
+            ref = simulate(g, SYS, TOPO, overlap=overlap, keep_timeline=True)
+            for K in (1, 2, 4, 8):
+                for coalesce in (True, False):
+                    cr = simulate_cluster(g, SYS, TOPO, n_ranks=K,
+                                          overlap=overlap, coalesce=coalesce,
+                                          keep_timeline=True)
+                    assert cr.n_classes == (1 if coalesce else K)
+                    for r in range(K):
+                        assert_rank_identical(cr, r, ref)
+                    assert cr.step_time == ref.total_time
+                    assert all(w == 0.0 for w in cr.class_barrier_wait)
+                    assert cr.slowest_rank == 0
+
+
+def test_coalesced_matches_naive_on_hetero_profiles():
+    """Rank coalescing is an optimization, not a model change: per-rank
+    results must equal the naive (one row per rank) engine exactly, for
+    mixed compute/link/absolute-override profiles."""
+    profs = {0: RankProfile(compute_scale=0.6),
+             3: RankProfile(link_scale=0.5),
+             5: RankProfile(peak_flops=1e14, hbm_bw=5e11)}
+    for seed in range(12):
+        rng = random.Random(1000 + seed)
+        g = rand_graph(rng, rng.randint(10, 100))
+        for overlap in (True, False):
+            a = simulate_cluster(g, SYS, TOPO, n_ranks=8, rank_profiles=profs,
+                                 coalesce=True, overlap=overlap)
+            b = simulate_cluster(g, SYS, TOPO, n_ranks=8, rank_profiles=profs,
+                                 coalesce=False, overlap=overlap)
+            assert a.n_classes < b.n_classes
+            for r in range(8):
+                ra, rb = a.rank_result(r), b.rank_result(r)
+                for f in FIELDS:
+                    assert getattr(ra, f) == getattr(rb, f), (seed, r, f)
+                assert a.barrier_wait[r] == b.barrier_wait[r]
+            assert a.step_time == b.step_time
+            assert a.slowest_rank == b.slowest_rank
+
+
+def test_coalesced_matches_naive_with_rank_durations():
+    for seed in (3, 7):
+        g = rand_graph(random.Random(seed), 60)
+        rd = {2: {i: 1e-4 for i in range(0, 60, 7)}}
+        a = simulate_cluster(g, SYS, TOPO, n_ranks=4, rank_durations=rd)
+        b = simulate_cluster(g, SYS, TOPO, n_ranks=4, rank_durations=rd,
+                             coalesce=False)
+        assert a.rank_times == b.rank_times
+        assert a.barrier_wait == b.barrier_wait
+
+
+def _chain_graph(K):
+    """comp a -> world collective c -> comp b."""
+    g = chakra.Graph()
+    a = g.add("a", chakra.COMP, flops=1.0)
+    c = g.add("c", chakra.COMM_COLL, deps=[a], comm_kind="all-reduce",
+              comm_bytes=1e6, group=list(range(K)))
+    g.add("b", chakra.COMP, deps=[c], flops=1.0)
+    return g, a, c
+
+
+def test_barrier_gates_on_slowest_rank():
+    """Directed semantics: the collective starts at the slowest rank's
+    arrival; fast ranks' barrier wait is exactly the arrival skew."""
+    K = 2
+    g, a, c = _chain_graph(K)
+    sysc = SystemConfig(chips=K, topology="switch")
+    topo = build_topology(sysc, K)
+    coll = collective_time("all-reduce", 1e6, list(range(K)), topo)
+    t_fast, t_slow = 1e-3, 5e-3
+    rd = {0: {a: t_fast}, 1: {a: t_slow}}
+    cr = simulate_cluster(g, sysc, topo, n_ranks=K, rank_durations=rd,
+                          keep_timeline=True)
+    tl_fast = cr.rank_result(0).timeline
+    tl_slow = cr.rank_result(1).timeline
+    # collective entry: (nid, name, stream, start, end)
+    ce_fast = next(e for e in tl_fast if e[0] == c)
+    ce_slow = next(e for e in tl_slow if e[0] == c)
+    assert ce_fast[3] == t_fast            # fast rank arrives early...
+    assert ce_slow[3] == t_slow
+    assert ce_fast[4] == ce_slow[4] == t_slow + coll   # ...completes together
+    assert cr.barrier_wait[0] == t_slow - t_fast
+    assert cr.barrier_wait[1] == 0.0
+    assert cr.slowest_rank in (0, 1)
+    # both ranks end at the same step time (synchronous step)
+    assert cr.rank_result(0).total_time == cr.rank_result(1).total_time
+
+
+def test_subgroup_collective_gates_only_its_block():
+    """A collective over consecutive blocks of its group size: a straggler
+    in the last block leaves the other blocks' ranks at nominal."""
+    K = 4
+    g = chakra.Graph()
+    a = g.add("a", chakra.COMP, flops=1.0)
+    c = g.add("c", chakra.COMM_COLL, deps=[a], comm_kind="all-gather",
+              comm_bytes=1e6, group=[0, 1])          # group size 2 -> 2 blocks
+    g.add("b", chakra.COMP, deps=[c], flops=1.0)
+    sysc = SystemConfig(chips=K, topology="switch")
+    topo = build_topology(sysc, K)
+    nominal = simulate(g, sysc, topo).total_time
+    rd = {3: {a: 7e-3}}                              # straggler in block {2,3}
+    cr = simulate_cluster(g, sysc, topo, n_ranks=K, rank_durations=rd)
+    assert cr.rank_result(0).total_time == nominal   # block {0,1} untouched
+    assert cr.rank_result(1).total_time == nominal
+    assert cr.rank_result(2).total_time > nominal    # gated by rank 3
+    assert cr.rank_result(3).total_time > nominal
+    assert cr.barrier_wait[2] > 0.0
+    assert cr.slowest_rank in (2, 3)
+
+
+def test_straggler_analysis_cluster_semantics():
+    """One slowed rank gating barriers: inflation strictly between 1x and
+    fx (compute partially overlapped), monotone in f, with wait/slowest-rank
+    attribution."""
+    g = chakra.Graph()
+    prev = None
+    K = 32
+    for i in range(24):
+        ag = g.add(f"ag{i}", chakra.COMM_COLL, comm_kind="all-gather",
+                   comm_bytes=8e6, out_bytes=8e6, group=list(range(K)),
+                   ctrl_deps=[prev] if prev is not None else [])
+        prev = g.add(f"f{i}", chakra.COMP,
+                     deps=[ag] + ([prev] if prev is not None else []),
+                     flops=5e10, bytes=1e8, out_bytes=1e6)
+        g.add(f"ar{i}", chakra.COMM_COLL, deps=[prev],
+              comm_kind="all-reduce", comm_bytes=4e6, group=list(range(K)))
+    sysc = SystemConfig(chips=K, topology="switch", link_bw=12.5e9)
+    topo = build_topology(sysc, K)
+    rows = straggler_analysis(g, sysc, topo, slowdowns=(1.0, 1.5, 2.0),
+                              n_ranks=K)
+    assert rows[0]["slowdown_realized"] == pytest.approx(1.0)
+    assert rows[0]["victim_wait"] == 0.0
+    realized = [r["slowdown_realized"] for r in rows]
+    assert realized == sorted(realized)
+    mid = rows[1]
+    assert 1.0 < mid["slowdown_realized"] < 1.5      # barrier-gated, overlapped
+    assert mid["slowest_rank"] == 0
+    assert mid["victim_wait"] > 0.0
+    assert mid["n_ranks"] == K
+
+
+def test_straggler_nominal_reuses_cached_result():
+    """The f=1.0 row must come from the compiled graph's memoized symmetric
+    result, not a separate engine run."""
+    g = rand_graph(random.Random(2), 50)
+    r0 = simulate(g, SYS, TOPO)                      # warms the result cache
+    cg = compile_graph(g)
+    calls = []
+    orig = cg.run
+
+    def counting_run(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    cg.run = counting_run
+    try:
+        rows = straggler_analysis(g, SYS, TOPO, slowdowns=(1.0,))
+    finally:
+        cg.run = orig
+    assert rows[0]["step_time"] == r0.total_time
+    assert not calls                                 # pure cache reuse
+
+
+def test_per_link_overrides_price_weakest_member():
+    topo = Switch(n_ranks=8, link_bw=1e9, link_latency=0.0,
+                  link_scales={2: 0.5})
+    t_clean = collective_time("all-gather", 1e6, [0, 1], topo)
+    t_degraded = collective_time("all-gather", 1e6, [1, 2], topo)
+    assert t_degraded == pytest.approx(2.0 * t_clean)
+    # explicit bw_scale overrides the derived group scale
+    assert collective_time("all-gather", 1e6, [1, 2], topo, bw_scale=1.0) \
+        == t_clean
+
+
+def test_uniform_link_scales_symmetric_bit_identity():
+    """Uniformly degraded links are still a *symmetric* cluster: the
+    single-rank view prices every link-bound node (collectives AND p2p) by
+    the weakest link, so simulate() and simulate_cluster stay bit-identical
+    — both engines included."""
+    from repro.core.costmodel.simulator import _simulate_reference
+    for seed in (4, 8):
+        g = rand_graph(random.Random(seed), 80)
+        topo = Switch(n_ranks=16, link_bw=50e9, link_latency=1e-6,
+                      link_scales={r: 0.5 for r in range(16)})
+        ref = simulate(g, SYS, topo, keep_timeline=True)
+        assert_rank_identical(
+            simulate_cluster(g, SYS, topo, n_ranks=4, keep_timeline=True), 2,
+            ref)
+        rr = _simulate_reference(g, SYS, topo, keep_timeline=True)
+        for f in FIELDS:
+            assert getattr(ref, f) == getattr(rr, f), f
+        # and the degradation actually bites (vs a clean topo)
+        clean = Switch(n_ranks=16, link_bw=50e9, link_latency=1e-6)
+        assert ref.total_time > simulate(g, SYS, clean).total_time
+
+
+def test_nominal_scale_knobs_stay_on_plain_path():
+    """pod_link_scale=1.0 (or a *_scale knob without its fraction/ratio) is
+    a homogeneous cluster — it must take the memoized simulate() path, not
+    the cluster engine."""
+    from repro.core.costmodel import SimResult
+    from repro.core.dse import _is_hetero, evaluate
+    assert not _is_hetero({"pod_link_scale": 1.0})
+    assert not _is_hetero({"degraded_link_scale": 0.5, "slow_chip_scale": 0.7})
+    assert not _is_hetero({"degraded_fraction": 0.0, "slow_chip_ratio": 0.0})
+    assert _is_hetero({"pod_link_scale": 0.7})
+    assert _is_hetero({"degraded_fraction": 0.25})
+    assert _is_hetero({"cluster_ranks": 8})        # explicit opt-in
+    g = rand_graph(random.Random(1), 40)
+    r = evaluate(g, SYS, {"pod_link_scale": 1.0})
+    assert isinstance(r, SimResult)
+    assert r.total_time == evaluate(g, SYS, {}).total_time
+
+
+def test_topology_link_scales_cluster_consistency():
+    g = rand_graph(random.Random(5), 60)
+    topo = Switch(n_ranks=16, link_bw=50e9, link_latency=1e-6,
+                  link_scales={1: 0.25})
+    a = simulate_cluster(g, SYS, topo, n_ranks=16)
+    b = simulate_cluster(g, SYS, topo, n_ranks=16, coalesce=False)
+    assert a.rank_times == b.rank_times
+    clean = Switch(n_ranks=16, link_bw=50e9, link_latency=1e-6)
+    assert a.step_time > simulate_cluster(g, SYS, clean, n_ranks=16).step_time
+
+
+def test_cluster_result_api():
+    g = rand_graph(random.Random(9), 40)
+    cr = simulate_cluster(g, SYS, TOPO, n_ranks=4,
+                          rank_profiles={1: RankProfile(compute_scale=0.5)})
+    assert cr.total_time == cr.step_time
+    assert len(cr.rank_times) == 4 and len(cr.barrier_wait) == 4
+    d = cr.as_dict()
+    for key in ("total_time", "step_time", "compute_time", "comm_time",
+                "exposed_comm", "peak_bytes", "n_nodes", "n_ranks",
+                "n_classes", "slowest_rank", "max_barrier_wait",
+                "mean_barrier_wait"):
+        assert key in d, key
+    assert d["n_ranks"] == 4 and d["n_classes"] >= 2
+    with pytest.raises(ValueError):
+        simulate_cluster(g, SYS, TOPO, n_ranks=0)
+    with pytest.raises(ValueError):
+        simulate_cluster(g, SYS, TOPO, n_ranks=2,
+                         rank_profiles={5: RankProfile(compute_scale=0.5)})
+
+
+def test_dse_hetero_knobs_route_to_cluster():
+    g = chakra.Graph()
+    prev = None
+    for i in range(6):
+        ag = g.add(f"ag{i}", chakra.COMM_COLL, comm_kind="all-gather",
+                   comm_bytes=8e6, out_bytes=8e6, group=list(range(32)))
+        deps = [ag] + ([prev] if prev is not None else [])
+        prev = g.add(f"c{i}", chakra.COMP, deps=deps, flops=5e10,
+                     out_bytes=1e6)
+    sysc = SystemConfig(chips=32)
+    knobs = [Knob("prefetch", [0, 2], layer="software"),
+             Knob("degraded_fraction", [0.0, 0.25], layer="hardware"),
+             Knob("degraded_link_scale", [0.5], layer="hardware")]
+    trials = explore(lambda cfg: g, sysc, knobs)
+    assert len(trials) == 4
+    best, worst = trials[0], trials[-1]
+    assert best.config["degraded_fraction"] == 0.0
+    assert worst.config["degraded_fraction"] == 0.25
+    # baseline trial stays on the memoized simulate() path; degraded trial
+    # carries cluster attribution
+    assert "n_classes" not in best.result.as_dict()
+    assert worst.result.as_dict()["n_classes"] >= 2
+    # symmetric hetero trial == plain simulate path (bit-identical)
+    plain = explore(lambda cfg: g, sysc,
+                    [Knob("prefetch", [best.config["prefetch"]],
+                          layer="software")])[0]
+    assert best.objective == plain.objective
+    # greedy descent sweeps the same space to the same optimum
+    assert greedy_descent(lambda cfg: g, sysc, knobs).objective \
+        == best.objective
+
+
+def test_rank_profiles_for_builders():
+    profs = rank_profiles_for(8, {"slow_chip_ratio": 0.25,
+                                  "slow_chip_scale": 0.8,
+                                  "degraded_fraction": 0.25,
+                                  "degraded_link_scale": 0.4})
+    assert set(profs) == {0, 1, 6, 7}
+    assert profs[0].compute_scale == 0.8 and profs[0].link_scale == 1.0
+    assert profs[7].link_scale == 0.4 and profs[7].compute_scale == 1.0
+    pod = rank_profiles_for(8, {"pod_link_scale": 0.5})
+    assert set(pod) == {4, 5, 6, 7}
+    assert all(p.link_scale == 0.5 for p in pod.values())
+    assert rank_profiles_for(8, {}) is None
+    assert rank_profiles_for(8, {"degraded_fraction": 0.0}) is None
+
+
+def test_check_regression_gate():
+    from benchmarks.check_regression import check
+    thresholds = {"simulate": {"speedup_cached": 10.0},
+                  "straggler": {"speedup": 1.5}}
+    good = {"simulate": {"1000": {"speedup_cached": 40.0}},
+            "straggler": {"speedup": 3.0}}
+    assert check(good, thresholds) == []
+    bad = {"simulate": {"1000": {"speedup_cached": 2.0}},
+           "straggler": {}}
+    violations = check(bad, thresholds)
+    assert ("simulate.1000.speedup_cached", 2.0, 10.0) in violations
+    assert ("straggler.speedup", None, 1.5) in violations

@@ -121,10 +121,16 @@ def test_simulate_batch_matches_individual_calls():
 
 
 def test_straggler_analysis_batched_matches_reference_math():
+    """straggler_analysis now runs the cluster-barrier model (one slowed
+    rank gating collectives); on this graph the straggler is the last
+    arrival at every barrier it joins, so its timeline — and the cluster
+    step — degenerates to exactly the old single-timeline proxy, which the
+    reference engine cross-checks bit-for-bit."""
     g = rand_graph(random.Random(11), 60)
     rows = straggler_analysis(g, SYS, TOPO, slowdowns=(1.0, 1.5, 2.0))
     assert rows[0]["slowdown_realized"] == pytest.approx(1.0)
     assert rows[-1]["step_time"] >= rows[0]["step_time"]
+    assert rows[-1]["slowest_rank"] == 0 and rows[-1]["n_ranks"] == 16
     # cross-check one factor against a hand-built reference-engine run
     from repro.core.costmodel.simulator import node_duration
     dur = {n.id: node_duration(n, SYS, TOPO) * 1.5
