@@ -1,20 +1,24 @@
-"""Benchmark regression gate: fail if BENCH_sim speedup ratios fall below
-the floors recorded in benchmarks/thresholds.json.
+"""Benchmark regression gate: fail if BENCH_sim speedup ratios or the
+trace subsystem's round-trip/calibration figures fall below the floors
+recorded in benchmarks/thresholds.json.
 
 Usage (the verify recipe's perf gate):
 
     PYTHONPATH=.:src python -m benchmarks.sim_bench --smoke
+    PYTHONPATH=.:src python -m benchmarks.trace_roundtrip --smoke
     PYTHONPATH=.:src python -m benchmarks.check_regression
 
 or in one shot::
 
     PYTHONPATH=.:src python -m benchmarks.check_regression --run-smoke
 
-Reads artifacts/bench/BENCH_sim.json (``--bench PATH`` to override).  The
-floors are deliberately conservative — they hold for both the full and
-``--smoke`` matrices on a loaded machine — so a failure means the engine
-actually regressed, not that the box was busy.  Exit code 1 on regression,
-2 on missing inputs.
+Reads artifacts/bench/BENCH_sim.json and BENCH_trace.json (``--bench`` /
+``--trace-bench`` to override).  The speedup floors are deliberately
+conservative — they hold for both the full and ``--smoke`` matrices on a
+loaded machine — so a failure means the engine actually regressed, not
+that the box was busy; the trace floors are correctness contracts
+(alignment, round-trip accuracy, calibration recovery).  Exit code 1 on
+regression, 2 on missing inputs.
 """
 from __future__ import annotations
 
@@ -26,6 +30,8 @@ import sys
 HERE = os.path.dirname(__file__)
 DEFAULT_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
                              "BENCH_sim.json")
+DEFAULT_TRACE_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
+                                   "BENCH_trace.json")
 DEFAULT_THRESH = os.path.join(HERE, "thresholds.json")
 
 
@@ -43,7 +49,7 @@ def check(bench: dict, thresholds: dict) -> list:
     for size, row in sorted(bench.get("simulate", {}).items()):
         for key, floor in sim_floors.items():
             one(f"simulate.{size}", key, floor, row.get(key))
-    for section in ("straggler", "explore"):
+    for section in ("straggler", "explore", "trace"):
         for key, floor in thresholds.get(section, {}).items():
             one(section, key, floor, bench.get(section, {}).get(key))
     return bad
@@ -53,15 +59,18 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--bench", default=DEFAULT_BENCH,
                     help="BENCH_sim.json path")
+    ap.add_argument("--trace-bench", default=DEFAULT_TRACE_BENCH,
+                    help="BENCH_trace.json path")
     ap.add_argument("--thresholds", default=DEFAULT_THRESH)
     ap.add_argument("--run-smoke", action="store_true",
-                    help="run `sim_bench --smoke` first to produce the "
-                         "bench file")
+                    help="run `sim_bench --smoke` + `trace_roundtrip "
+                         "--smoke` first to produce the bench files")
     args = ap.parse_args(argv)
 
     if args.run_smoke:
-        from benchmarks import sim_bench
+        from benchmarks import sim_bench, trace_roundtrip
         sim_bench.main(["--smoke"])
+        trace_roundtrip.main(["--smoke"])
 
     if not os.path.exists(args.bench):
         print(f"check_regression: no bench file at {args.bench} "
@@ -69,6 +78,13 @@ def main(argv=None) -> int:
         return 2
     with open(args.bench) as f:
         bench = json.load(f)
+    if os.path.exists(args.trace_bench):
+        with open(args.trace_bench) as f:
+            bench["trace"] = json.load(f)
+    else:
+        print(f"check_regression: no trace bench at {args.trace_bench} "
+              "(run benchmarks.trace_roundtrip first, or pass --run-smoke)")
+        return 2
     with open(args.thresholds) as f:
         thresholds = {k: v for k, v in json.load(f).items()
                       if not k.startswith("_")}

@@ -116,26 +116,33 @@ def bench_pod_degraded(sysc, topo, ranks: int, n_layers: int = 32):
 def bench_coalescing(sysc, ranks: int = 256, n_layers: int = 48):
     g = fsdp_stack(n_layers, ranks)
     topo = build_topology(sysc, ranks)
-    cg_durs = {0: {}}                    # one straggler: rank 0 slowed 1.5x
     from repro.core.costmodel import compile_graph
     base = compile_graph(g).durations(sysc, topo)
     comp = [n.id for n in g.nodes if n.type == chakra.COMP]
+    # one straggler: rank 0's compute slowed 1.5x
     cg_durs = {0: {nid: base[nid] * 1.5 for nid in comp}}
 
-    def run(coalesce):
+    def run(coalesce, fresh=True):
+        if fresh:                        # measure the engine, not the
+            compile_graph(g)._result_cache.clear()   # per-config result memo
         return simulate_cluster(g, sysc, topo, n_ranks=ranks,
                                 rank_durations=cg_durs, coalesce=coalesce)
 
-    a = run(True)                        # warm caches
+    a = run(True)                        # warm structure/duration caches
     b = run(False)
     assert a.step_time == b.step_time and a.rank_times == b.rank_times
     t_co = min(_timed(lambda: run(True)) for _ in range(3))
     t_naive = min(_timed(lambda: run(False)) for _ in range(2))
+    run(True)
+    t_hit = min(_timed(lambda: run(True, fresh=False)) for _ in range(3))
     emit(f"hetero.coalesce_{ranks}", t_co * 1e6,
          f"{t_naive / t_co:.1f}x_vs_naive_{a.n_classes}_classes")
+    emit(f"hetero.cluster_memo_{ranks}", t_hit * 1e6,
+         f"{t_co / t_hit:.1f}x_vs_engine_cache_hit")
     return {"n_ranks": ranks, "n_classes": a.n_classes,
             "coalesced_ms": t_co * 1e3, "naive_ms": t_naive * 1e3,
-            "speedup": t_naive / t_co}
+            "speedup": t_naive / t_co, "memo_hit_ms": t_hit * 1e3,
+            "memo_speedup": t_co / t_hit}
 
 
 def _timed(fn) -> float:

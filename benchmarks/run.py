@@ -11,7 +11,10 @@
   sim_bench        (ours)  compiled simulator/DSE engine vs seed reference
   hetero_cluster   (ours)  rank-asymmetric cluster sim: stragglers, mixed
                            chip generations, degraded pods, coalescing
-  check_regression (gate)  fails if BENCH_sim speedups fall below
+  trace_roundtrip  (ours)  trace subsystem: export->ingest->validate
+                           round-trip exactness + calibration recovery
+  check_regression (gate)  fails if BENCH_sim speedups or BENCH_trace
+                           round-trip/calibration figures fall below
                            benchmarks/thresholds.json floors
 
 Each bench runs in its own subprocess so it controls its fake-device count
@@ -23,7 +26,7 @@ import time
 
 BENCHES = ["opcounts", "e2e_validation", "fsdp_reorder", "bandwidth_sweep",
            "wafer_tacos", "nic_degradation", "roofline", "sim_bench",
-           "hetero_cluster", "check_regression"]
+           "hetero_cluster", "trace_roundtrip", "check_regression"]
 
 
 def main() -> None:

@@ -1,0 +1,152 @@
+"""Trace round-trip benchmark + correctness gate (BENCH_trace.json).
+
+Exercises the trace subsystem end to end, the way a real validation
+session would:
+
+  roundtrip          simulate -> export Chrome trace -> ingest -> align ->
+                     validate.  Must report 100% node alignment and ~0%
+                     end-to-end error (the subsystem's self-consistency
+                     contract); timings per stage in us.
+  cluster_roundtrip  same through an 8-rank ``simulate_cluster`` with a
+                     straggler profile (per-rank processes in the trace).
+  calibration        trace generated under deliberately perturbed hbm_bw /
+                     link scale; coordinate-descent calibration must
+                     recover both within 5% and shrink the rms span error.
+
+check_regression.py gates the recorded floors (benchmarks/thresholds.json
+section "trace"): roundtrip match/accuracy, calibration recovery and
+error-reduction ratio.  No jax required — runs in seconds.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import emit, write_json
+from benchmarks.hetero_cluster import fsdp_stack
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.costmodel import (RankProfile, build_topology, simulate,
+                                  simulate_cluster)
+from repro.trace import (calibrate, ingest_chrome_trace, to_chrome_trace,
+                         validate)
+
+
+def _timed(fn, iters: int):
+    fn()                                   # warm caches
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt * 1e6                   # us/call
+
+
+def calibration_stack(n_layers: int, ranks: int) -> chakra.Graph:
+    """fsdp_stack plus HBM-bound COMP nodes so hbm_bw is identifiable
+    independently of compute_derate."""
+    g = fsdp_stack(n_layers, ranks)
+    for i in range(n_layers):
+        g.add(f"mem{i}", chakra.COMP, deps=[4 * i + 1], flops=1e8,
+              bytes=5e8)
+    return g
+
+
+def bench_roundtrip(sysc, topo, n_layers: int, iters: int):
+    g = fsdp_stack(n_layers, topo.n_ranks)
+    res = simulate(g, sysc, topo, keep_timeline=True)
+    trace, t_export = _timed(lambda: to_chrome_trace(res, graph=g), iters)
+    tl, t_ingest = _timed(lambda: ingest_chrome_trace(trace), iters)
+    rep, t_validate = _timed(lambda: validate(g, tl, sysc, topo), iters)
+    assert rep.match_fraction == 1.0, rep.match_fraction
+    assert rep.e2e_error < 1e-9, rep.e2e_error
+    emit("trace.export", t_export, f"{len(trace['traceEvents'])}_events")
+    emit("trace.ingest", t_ingest, f"{len(tl.events)}_spans")
+    emit("trace.validate", t_validate,
+         f"{rep.e2e_error * 100:.4f}%_e2e_err")
+    return {"n_nodes": len(g), "export_us": t_export, "ingest_us": t_ingest,
+            "validate_us": t_validate,
+            "roundtrip_match": rep.match_fraction,
+            "roundtrip_accuracy": 1.0 - rep.e2e_error}
+
+
+def bench_cluster_roundtrip(sysc, topo, n_layers: int, ranks: int,
+                            iters: int):
+    g = fsdp_stack(n_layers, ranks)
+    profs = {ranks - 1: RankProfile(compute_scale=0.7)}
+    cr = simulate_cluster(g, sysc, topo, n_ranks=ranks, rank_profiles=profs,
+                          keep_timeline=True)
+    trace, t_export = _timed(lambda: to_chrome_trace(cr, graph=g), iters)
+    tl = ingest_chrome_trace(trace)
+    rep, t_validate = _timed(
+        lambda: validate(g, tl, sysc, topo, rank_profiles=profs), iters)
+    assert rep.n_ranks == ranks
+    assert rep.match_fraction == 1.0, rep.match_fraction
+    assert rep.e2e_error < 1e-9, rep.e2e_error
+    emit(f"trace.cluster_export_{ranks}r", t_export,
+         f"{len(trace['traceEvents'])}_events")
+    emit(f"trace.cluster_validate_{ranks}r", t_validate,
+         f"{rep.match_fraction * 100:.0f}%_matched")
+    return {"n_ranks": ranks, "export_us": t_export,
+            "validate_us": t_validate,
+            "cluster_match": rep.match_fraction,
+            "cluster_accuracy": 1.0 - rep.e2e_error}
+
+
+def bench_calibration(sysc, topo, n_layers: int):
+    g = calibration_stack(n_layers, topo.n_ranks)
+    hbm_f, link_f = 0.65, 0.7
+    true_sys = sysc.replace(hbm_bw=sysc.hbm_bw * hbm_f,
+                            link_bw=sysc.link_bw * link_f)
+    res = simulate(g, true_sys, build_topology(true_sys, topo.n_ranks),
+                   keep_timeline=True)
+    tl = ingest_chrome_trace(to_chrome_trace(res, graph=g))
+    t0 = time.perf_counter()
+    cal = calibrate(g, tl, sysc, topo)
+    t_fit = (time.perf_counter() - t0) * 1e6
+    err_hbm = abs(cal.params["hbm_bw"] / (sysc.hbm_bw * hbm_f) - 1.0)
+    err_link = abs(cal.params["link_bw_scale"] / link_f - 1.0)
+    recovery = 1.0 - max(err_hbm, err_link)
+    reduction = cal.initial_error / max(cal.fitted_error, 1e-12)
+    assert recovery >= 0.95, (err_hbm, err_link)
+    before = validate(g, tl, sysc, topo)
+    after = validate(g, tl, cal.system, cal.topology,
+                     compute_derate=cal.compute_derate)
+    assert after.e2e_error < before.e2e_error
+    emit("trace.calibrate", t_fit,
+         f"{recovery * 100:.2f}%_param_recovery")
+    emit("trace.calibrate_err_reduction", reduction,
+         f"{cal.initial_error * 100:.2f}%->{cal.fitted_error * 100:.2f}%_rms")
+    return {"fit_us": t_fit, "calib_recovery": recovery,
+            "calib_error_reduction": reduction,
+            "hbm_err": err_hbm, "link_err": err_link,
+            "e2e_before": before.e2e_error, "e2e_after": after.e2e_error}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller graphs / fewer timing iters (CI gate)")
+    args = ap.parse_args(argv)
+    layers, iters = (12, 3) if args.smoke else (48, 10)
+    ranks = 8
+    sysc = SystemConfig(chips=ranks, topology="switch")
+    topo = build_topology(sysc, ranks)
+
+    payload = {"smoke": bool(args.smoke), "n_layers": layers}
+    rt = bench_roundtrip(sysc, topo, layers, iters)
+    cl = bench_cluster_roundtrip(sysc, topo, layers, ranks, iters)
+    cal = bench_calibration(sysc, topo, layers)
+    payload.update({k: v for k, v in rt.items()})
+    payload["cluster"] = cl
+    payload["cluster_match"] = cl["cluster_match"]
+    payload["cluster_accuracy"] = cl["cluster_accuracy"]
+    payload["calibration"] = cal
+    payload["calib_recovery"] = cal["calib_recovery"]
+    payload["calib_error_reduction"] = cal["calib_error_reduction"]
+    path = write_json("BENCH_trace.json", payload)
+    emit("trace.bench_json", 0.0, path)
+
+
+if __name__ == "__main__":
+    main()

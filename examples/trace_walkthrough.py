@@ -1,0 +1,110 @@
+"""Trace subsystem walkthrough: simulate -> export -> validate -> calibrate.
+
+The full Flint loop is capture -> simulate -> export -> validate ->
+calibrate; this example starts from a hand-built FSDP-style graph so it
+runs in seconds with no jax.  It plays both sides of the validation story:
+
+  1. simulate the graph and export a Chrome trace (open it in Perfetto);
+  2. pretend the *measured* cluster has degraded HBM and links by
+     generating a second trace under perturbed hardware;
+  3. validate the nominal model against that "measured" trace — see the
+     error and the worst offenders;
+  4. calibrate: fit hbm_bw / link scale / latency from the trace, then
+     re-validate with the fitted model and feed it to dse.explore.
+
+Equivalent CLI session (graph.json from chakra.Graph.save):
+
+    python -m repro.trace export graph.json -o sim_trace.json --ranks 8
+    python -m repro.trace validate graph.json measured_trace.json
+    python -m repro.trace calibrate graph.json measured_trace.json \
+        -o calibrated.json --validate
+    python -m repro.trace validate graph.json measured_trace.json \
+        --system calibrated.json
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import SystemConfig           # noqa: E402
+from repro.core import chakra, dse                    # noqa: E402
+from repro.core.costmodel import (build_topology, simulate,   # noqa: E402
+                                  simulate_cluster)
+from repro.trace import (calibrate, export_chrome_trace,      # noqa: E402
+                         ingest_chrome_trace, to_chrome_trace, validate)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "trace")
+os.makedirs(ART, exist_ok=True)
+
+
+def build_graph(n_layers=16, ranks=8):
+    """FSDP layer stack with both compute- and HBM-bound kernels."""
+    g = chakra.Graph(meta={"workload": "trace_walkthrough"})
+    group = list(range(ranks))
+    prev = None
+    for i in range(n_layers):
+        ag = g.add(f"ag{i}", chakra.COMM_COLL, comm_kind="all-gather",
+                   comm_bytes=8e6, out_bytes=8e6, group=group,
+                   ctrl_deps=[prev] if prev is not None else [])
+        fwd = g.add(f"f{i}", chakra.COMP,
+                    deps=[ag] + ([prev] if prev is not None else []),
+                    flops=5e10, bytes=1e8, out_bytes=1e6)
+        bwd = g.add(f"b{i}", chakra.COMP, deps=[fwd], flops=1e11,
+                    bytes=2e8, out_bytes=1e6)
+        g.add(f"opt{i}", chakra.COMP, deps=[bwd], flops=1e8, bytes=5e8)
+        g.add(f"ar{i}", chakra.COMM_COLL, deps=[bwd],
+              comm_kind="all-reduce", comm_bytes=4e6 * (1 + i % 3),
+              group=group)
+        prev = bwd
+    return g
+
+
+def main():
+    ranks = 8
+    sysc = SystemConfig(chips=ranks, topology="switch")
+    topo = build_topology(sysc, ranks)
+    g = build_graph(ranks=ranks)
+
+    # 1. simulate and export a per-rank Chrome trace ------------------------
+    cr = simulate_cluster(g, sysc, topo, n_ranks=ranks, keep_timeline=True)
+    sim_path = os.path.join(ART, "sim_trace.json")
+    export_chrome_trace(cr, sim_path, graph=g)
+    print(f"[1] exported {ranks}-rank trace -> {sim_path} "
+          f"(step {cr.step_time * 1e3:.3f} ms) — open in "
+          "https://ui.perfetto.dev")
+
+    # 2. a "measured" trace: same workload, degraded hardware ---------------
+    true_sys = sysc.replace(hbm_bw=sysc.hbm_bw * 0.65,
+                            link_bw=sysc.link_bw * 0.7)
+    measured = simulate(g, true_sys, build_topology(true_sys, ranks),
+                        keep_timeline=True)
+    tl = ingest_chrome_trace(to_chrome_trace(measured, graph=g))
+    print(f"[2] 'measured' step time {measured.total_time * 1e3:.3f} ms "
+          f"(hbm x0.65, links x0.70)")
+
+    # 3. validate the nominal model against it ------------------------------
+    before = validate(g, tl, sysc, topo)
+    print("[3] nominal model vs measured trace:")
+    print("    " + before.summary().replace("\n", "\n    "))
+
+    # 4. calibrate, re-validate, and sweep with the fitted model ------------
+    cal = calibrate(g, tl, sysc, topo)
+    print("[4] " + cal.summary().replace("\n", "\n    "))
+    after = validate(g, tl, cal.system, cal.topology,
+                     compute_derate=cal.compute_derate)
+    print(f"    validation e2e error {before.e2e_error * 100:.2f}% -> "
+          f"{after.e2e_error * 100:.2f}%")
+    assert after.e2e_error < before.e2e_error
+
+    trials = dse.explore(lambda cfg: g, cal.system,
+                         [dse.Knob("prefetch", [None, 2, 4]),
+                          dse.Knob("bucket_bytes", [None, 32e6])],
+                         compute_derate=cal.compute_derate,
+                         topo=cal.topology)
+    best = trials[0]
+    print(f"    calibrated DSE over {len(trials)} configs: best "
+          f"{best.objective * 1e3:.3f} ms with {best.config}")
+
+
+if __name__ == "__main__":
+    main()

@@ -52,6 +52,14 @@ class Node:
     def all_deps(self) -> List[int]:
         return self.deps + self.ctrl_deps
 
+    def fingerprint(self) -> str:
+        """Stable cross-format identity: name plus op class.  The trace
+        subsystem (repro.trace.align) re-identifies nodes in an ingested
+        timeline by this string; nodes sharing a fingerprint are
+        disambiguated by program order, so it must not depend on node id
+        or on attrs a measured trace cannot reproduce."""
+        return f"{self.name}|{self.type}"
+
 
 class Graph:
     def __init__(self, meta: Optional[Dict] = None):

@@ -276,7 +276,7 @@ class CompiledGraph:
         in the drain step of the very next scheduling decision, before any
         candidate comparison, so every decision sees identical heap state.
         """
-        from repro.core.costmodel.simulator import SimResult
+        from repro.core.costmodel.simulator import SimResult, Span
 
         n_total = self.n
         pos = self._pos
@@ -355,8 +355,8 @@ class CompiledGraph:
                 total = end
             scheduled += 1
             if timeline is not None:
-                timeline.append((nid, self._names[nid],
-                                 "comm" if s else "comp", start, end))
+                timeline.append(Span(nid, self._names[nid],
+                                     "comm" if s else "comp", start, end))
             ob = out_b[nid]
             if ob:
                 mem_events.append((start, ob))
@@ -446,7 +446,7 @@ class CompiledGraph:
         total comm-stream barrier-wait seconds (time between a row's arrival
         at a collective and the slowest member's arrival).
         """
-        from repro.core.costmodel.simulator import SimResult
+        from repro.core.costmodel.simulator import SimResult, Span
 
         n_total = self.n
         pos = self._pos
@@ -547,8 +547,8 @@ class CompiledGraph:
                 st.total = end
             st.scheduled += 1
             if st.timeline is not None:
-                st.timeline.append((nid, names[nid],
-                                    "comm" if sw else "comp", arr, end))
+                st.timeline.append(Span(nid, names[nid],
+                                        "comm" if sw else "comp", arr, end))
             ob = out_b[nid]
             if ob:
                 st.mem_events.append((arr, ob))
@@ -653,9 +653,9 @@ class CompiledGraph:
                             total = end
                         scheduled += 1
                         if timeline is not None:
-                            timeline.append((nid, names[nid],
-                                             "comm" if s else "comp",
-                                             start, end))
+                            timeline.append(Span(nid, names[nid],
+                                                 "comm" if s else "comp",
+                                                 start, end))
                         ob = out_b[nid]
                         if ob:
                             mem_events.append((start, ob))
@@ -677,8 +677,8 @@ class CompiledGraph:
                     total = end
                 scheduled += 1
                 if timeline is not None:
-                    timeline.append((nid, names[nid],
-                                     "comm" if s else "comp", start, end))
+                    timeline.append(Span(nid, names[nid],
+                                         "comm" if s else "comp", start, end))
                 ob = out_b[nid]
                 if ob:
                     mem_events.append((start, ob))

@@ -46,9 +46,12 @@ collective-group environment), so the engine cost scales with the number of
 *distinct* rank behaviors, not the cluster size: a fully symmetric K-rank
 cluster costs exactly one event loop and is bit-identical to ``simulate()``
 for every K (the cluster-free property, enforced by
-tests/test_cluster_sim.py).  Collective participant instances are modeled
-as consecutive rank blocks of the node's group size (the standard mesh
-ordering); the group attr still prices stride/axis effects.
+tests/test_cluster_sim.py).  Collective participant instances are mapped
+from the node's group attr: consecutive groups tile the cluster in blocks
+of the group size (the standard mesh ordering), constant-stride and
+explicitly-listed groups map their own interleaved/translated instances
+(``_group_instances``).  Timeline-free results are memoized per
+(config, profile-set) on the compiled graph, mirroring ``simulate()``.
 
 ``straggler_analysis`` is built on it: a straggler is one slowed rank
 gating barriers — fast ranks accumulate attributable barrier wait while
@@ -58,7 +61,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -67,6 +70,21 @@ from repro.core.costmodel.collectives import collective_time
 from repro.core.costmodel.compiled import CompiledGraph, compile_graph
 from repro.core.costmodel.topology import (RankProfile, Topology,
                                            build_topology)
+
+
+class Span(NamedTuple):
+    """One scheduled node occurrence — the unit the trace subsystem
+    (repro.trace) exports.  Tuple-compatible with the historical timeline
+    entries ``(nid, name, stream, start, end)``."""
+    nid: int
+    name: str
+    stream: str                   # "comp" | "comm"
+    start: float                  # seconds
+    end: float                    # seconds
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
 
 
 @dataclasses.dataclass
@@ -83,6 +101,14 @@ class SimResult:
         d = dataclasses.asdict(self)
         d.pop("timeline")
         return d
+
+    def spans(self) -> List[Span]:
+        """Timeline as ``Span`` records; requires ``keep_timeline=True``."""
+        if self.timeline is None:
+            raise ValueError("no timeline recorded: re-run simulate() with "
+                             "keep_timeline=True")
+        return [e if isinstance(e, Span) else Span(*e)
+                for e in self.timeline]
 
 
 def node_duration(n: chakra.Node, system, topo: Topology,
@@ -259,7 +285,7 @@ def _simulate_reference(g: chakra.Graph, system,
         finish[nid] = end
         scheduled += 1
         if keep_timeline:
-            timeline.append((n.id, n.name, s, start, end))
+            timeline.append(Span(n.id, n.name, s, start, end))
         out_b = n.attrs.get("out_bytes", 0.0)
         if out_b:
             mem_events.append((start, out_b))
@@ -321,6 +347,19 @@ class ClusterSimResult:
     def rank_result(self, r: int) -> SimResult:
         return self.results[self.class_of_rank[r]]
 
+    def rank_spans(self, r: int) -> List[Span]:
+        """Rank r's timeline as ``Span`` records (keep_timeline=True)."""
+        return self.rank_result(r).spans()
+
+    def spans(self) -> List:
+        """Flat (rank, Span) pairs over all K ranks, classes expanded —
+        the whole-cluster counterpart of ``SimResult.spans()`` (the
+        exporter walks ranks itself via ``rank_spans``)."""
+        out = []
+        for r in range(self.n_ranks):
+            out.extend((r, sp) for sp in self.rank_spans(r))
+        return out
+
     @property
     def rank_times(self) -> List[float]:
         return [self.results[c].total_time for c in self.class_of_rank]
@@ -371,32 +410,101 @@ class ClusterSimResult:
                 "mean_barrier_wait": mean_wait}
 
 
-def _refine_colors(K: int, sizes: Sequence[int], init_keys: List) -> List[int]:
+def _copy_cluster_result(cr: ClusterSimResult) -> ClusterSimResult:
+    """Fresh ClusterSimResult sharing no mutable state with `cr` (timelines
+    are absent on the cached path, so per-class results copy shallowly)."""
+    return dataclasses.replace(
+        cr, class_of_rank=list(cr.class_of_rank),
+        class_reps=list(cr.class_reps),
+        results=[dataclasses.replace(r) for r in cr.results],
+        class_barrier_wait=list(cr.class_barrier_wait))
+
+
+def _group_instances(group: Sequence[int], K: int) -> List[Optional[tuple]]:
+    """Participant instances of one collective on a K-rank cluster, derived
+    from its chakra ``group`` attr.
+
+    Returns ``inst_of``: a length-K list mapping rank -> the member tuple of
+    its instance (None = the rank participates alone, no cross-rank
+    barrier).  Layouts understood:
+
+      * consecutive ranks (the standard mesh ordering) tile the cluster in
+        consecutive blocks of the group size — the historical model;
+      * constant-stride lists (e.g. a cross-pod DP group [0, 4, 8, 12])
+        tile each span of ``size * stride`` ranks with ``stride``
+        interleaved instances;
+      * arbitrary explicit lists are translated by their span; ranks no
+        translate covers stay instance-free.
+    """
+    inst_of: List[Optional[tuple]] = [None] * K
+    g = sorted({int(r) for r in group})
+    s = len(g)
+    if s <= 1 or K <= 1:
+        return inst_of
+    if s >= K:
+        whole = tuple(range(K))
+        return [whole] * K
+
+    def place(members):
+        mt = tuple(m for m in members if 0 <= m < K)
+        if len(mt) >= 2:
+            for m in mt:
+                inst_of[m] = mt
+
+    if g[-1] - g[0] == s - 1:          # consecutive -> tile by block
+        for i0 in range(0, K, s):
+            place(range(i0, min(i0 + s, K)))
+        return inst_of
+    strides = {b - a for a, b in zip(g, g[1:])}
+    if len(strides) == 1:              # constant stride -> interleaved
+        st = strides.pop()             # lattice anchored at the listed group
+        span = s * st
+        g0 = g[0]
+        for r in range(K):
+            if inst_of[r] is not None:
+                continue
+            # unique (phase, block) translate of the pattern containing r,
+            # with the listed group itself as the identity translate
+            e = r - g0
+            dj = e % st
+            delta = dj + ((e - dj) // st // s) * span
+            place(x + delta for x in g)
+        return inst_of
+    span = g[-1] - g[0] + 1            # arbitrary -> translate by span
+    for t in range(g[0] % span - span, K, span):
+        place(t + (x - g[0]) for x in g)
+    return inst_of
+
+
+def _refine_colors(K: int, inst_maps: Sequence[List],
+                   init_keys: List) -> List[int]:
     """Partition ranks into behavioral equivalence classes.
 
     Two ranks share a class iff they have the same hardware key and,
-    recursively, their collective-group instances (consecutive blocks per
-    distinct group size) carry the same class multiset — the standard
-    partition-refinement fixpoint.  Class ids are dense, assigned in
-    first-seen (= lowest-rank) order."""
+    recursively, their collective-group instances (one ``inst_of`` map per
+    distinct group pattern, see ``_group_instances``) carry the same class
+    multiset — the standard partition-refinement fixpoint.  Class ids are
+    dense, assigned in first-seen (= lowest-rank) order."""
     seen: Dict = {}
     colors = [seen.setdefault(k, len(seen)) for k in init_keys]
     n_colors = len(seen)
     while True:
         per_rank: List[List] = [[] for _ in range(K)]
-        for s in sizes:
-            if s >= K:
-                blocks = [range(K)]
-            else:
-                blocks = [range(i, min(i + s, K)) for i in range(0, K, s)]
-            for blk in blocks:
-                cnt: Dict[int, int] = {}
-                for m in blk:
-                    c = colors[m]
-                    cnt[c] = cnt.get(c, 0) + 1
-                key = tuple(sorted(cnt.items()))
-                for m in blk:
-                    per_rank[m].append(key)
+        for inst_of in inst_maps:
+            keyed: Dict[tuple, tuple] = {}
+            for r in range(K):
+                mem = inst_of[r]
+                if mem is None:
+                    per_rank[r].append(None)
+                    continue
+                key = keyed.get(mem)
+                if key is None:
+                    cnt: Dict[int, int] = {}
+                    for m in mem:
+                        c = colors[m]
+                        cnt[c] = cnt.get(c, 0) + 1
+                    key = keyed[mem] = tuple(sorted(cnt.items()))
+                per_rank[r].append(key)
         seen = {}
         new = [seen.setdefault((colors[r], tuple(per_rank[r])), len(seen))
                for r in range(K)]
@@ -489,16 +597,32 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
             rdur[int(r)] = od
     tls = getattr(topo, "link_scales", None) or {}
 
+    # per-(config, profile-set) memo on the compiled graph, mirroring
+    # simulate()'s result cache: hetero DSE sweeps revisit identical
+    # cluster configs, and a timeline-free run is pure in these inputs
+    ckey = None
+    if not keep_timeline:
+        ckey = ("cluster", cg.config_key(system, topo, algo, compute_derate),
+                overlap, K, coalesce, tuple(sorted(profs.items())),
+                tuple(sorted((r, tuple(sorted(od.items())))
+                             for r, od in rdur.items())))
+        hit = cg._result_cache.get(ckey)
+        if hit is not None:
+            return _copy_cluster_result(hit)
+
     init_keys = []
     for r in range(K):
         od = rdur.get(r)
         okey = tuple(sorted(od.items())) if od else None
         init_keys.append((profs.get(r, default_prof), tls.get(r, 1.0), okey))
 
-    sizes = sorted({min(len(meta[1]), K) for meta in cg._coll_meta
-                    if min(len(meta[1]), K) > 1})
-    colors = (_refine_colors(K, sizes, init_keys) if coalesce
-              else list(range(K)))
+    # one instance map per distinct group pattern: explicit/strided group
+    # attrs map their own participant instances; consecutive groups keep
+    # the historical block tiling
+    inst_maps = {p: _group_instances(p, K)
+                 for p in sorted({meta[2] for meta in cg._coll_meta})}
+    colors = (_refine_colors(K, list(inst_maps.values()), init_keys)
+              if coalesce else list(range(K)))
     n_classes = max(colors) + 1
     reps: List[Optional[int]] = [None] * n_classes
     for r in range(K):
@@ -526,20 +650,19 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
 
     # cross-rank barriers: one per (collective, participant-class clique);
     # collectives whose instance maps to a single class stay on the plain
-    # run() path (trivially resolved at arrival)
+    # run() path (trivially resolved at arrival).  Membership comes from
+    # the group attr's instance map — at the refinement fixpoint two
+    # same-class ranks sit in identically-colored instances, so one
+    # barrier per class set is exact.
     barrier_map: List[Dict[int, list]] = [dict() for _ in range(n_classes)]
     for nid, (kind, group, group_t) in zip(cg._coll_ids, cg._coll_meta):
-        s = len(group)
-        if min(s, K) <= 1:
-            continue
+        inst_of = inst_maps[group_t]
         for j, rep in enumerate(reps):
             if nid in barrier_map[j]:
                 continue
-            if s >= K:
-                members = range(K)
-            else:
-                i0 = (rep // s) * s
-                members = range(i0, min(i0 + s, K))
+            members = inst_of[rep]
+            if members is None:
+                continue
             W = sorted({colors[m] for m in members})
             if len(W) == 1:
                 continue
@@ -561,10 +684,14 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
     step = max(r.total_time for r in results)
     slowest = next(r for r in range(K)
                    if results[colors[r]].total_time == step)
-    return ClusterSimResult(n_ranks=K, class_of_rank=colors,
-                            class_reps=[int(r) for r in reps],
-                            results=results, class_barrier_wait=waits,
-                            step_time=step, slowest_rank=slowest)
+    res = ClusterSimResult(n_ranks=K, class_of_rank=colors,
+                           class_reps=[int(r) for r in reps],
+                           results=results, class_barrier_wait=waits,
+                           step_time=step, slowest_rank=slowest)
+    if ckey is not None:
+        # fresh copies both ways: callers may post-process in place
+        cg._result_cache[ckey] = _copy_cluster_result(res)
+    return res
 
 
 def straggler_analysis(g: chakra.Graph, system, topo: Optional[Topology] = None,

@@ -34,13 +34,15 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional
 
 from repro.core import chakra, passes
 from repro.core.costmodel.simulator import (SimResult, simulate,
                                             simulate_cluster)
-from repro.core.costmodel.topology import RankProfile, build_topology
+from repro.core.costmodel.topology import (RankProfile, Topology,
+                                           build_topology)
 
 
 @dataclasses.dataclass
@@ -63,6 +65,9 @@ class Trial:
 
 _SOFTWARE_KNOBS = ("fsdp_sync", "prefetch", "bucket_bytes")
 _SYSTEM_KNOBS = ("topology", "collective_algo", "link_bw", "dcn_bw", "chips")
+# knobs that change the Topology object itself — a trial sweeping one of
+# these must rebuild it even when the caller passed a calibrated instance
+_TOPO_KNOBS = ("topology", "link_bw", "dcn_bw", "chips")
 _HETERO_KNOBS = ("degraded_fraction", "degraded_link_scale",
                  "slow_chip_ratio", "slow_chip_scale", "pod_link_scale",
                  "cluster_ranks")
@@ -142,35 +147,65 @@ def _system_for(system, cfg: Dict):
     return system
 
 
-def _simulate_cfg(g2: chakra.Graph, system, config: Dict) -> SimResult:
+def _simulate_cfg(g2: chakra.Graph, system, config: Dict,
+                  compute_derate: float = 0.6,
+                  topo: Optional[Topology] = None) -> SimResult:
     """Simulate an already-transformed graph under config's system knobs —
     the shared tail of evaluate/explore/greedy_descent.  Hetero knobs route
     the trial to the cluster engine (objective = slowest rank's step time);
-    a symmetric hetero config is bit-identical to the plain path."""
+    a symmetric hetero config is bit-identical to the plain path.
+
+    `topo` is a pre-built (e.g. trace-calibrated, see repro.trace.calibrate)
+    Topology used verbatim unless the trial's config sweeps a knob that
+    changes the topology itself; `compute_derate` is the calibrated flops
+    efficiency."""
     sys2 = _system_for(system, config)
-    topo = build_topology(sys2)
+    if topo is None or any(k in config for k in _TOPO_KNOBS):
+        topo = build_topology(sys2)
     if _is_hetero(config):
         n_ranks = int(config.get("cluster_ranks") or topo.n_ranks)
         return simulate_cluster(g2, sys2, topo, n_ranks=n_ranks,
                                 rank_profiles=rank_profiles_for(n_ranks,
                                                                 config),
-                                algo=sys2.collective_algo)
-    return simulate(g2, sys2, topo, algo=sys2.collective_algo)
+                                algo=sys2.collective_algo,
+                                compute_derate=compute_derate)
+    return simulate(g2, sys2, topo, algo=sys2.collective_algo,
+                    compute_derate=compute_derate)
 
 
-def evaluate(g: chakra.Graph, system, config: Dict) -> SimResult:
-    return _simulate_cfg(apply_software_knobs(g, config), system, config)
+def evaluate(g: chakra.Graph, system, config: Dict,
+             compute_derate: float = 0.6,
+             topo: Optional[Topology] = None) -> SimResult:
+    return _simulate_cfg(apply_software_knobs(g, config), system, config,
+                         compute_derate, topo)
+
+
+_gil_pool_warned = False
 
 
 def explore(graph_for: Callable[[Dict], chakra.Graph], system,
             knobs: List[Knob], objective: str = "total_time",
             strategy: str = "grid", budget: int = 256,
-            parallel: Optional[int] = None) -> List[Trial]:
+            parallel: Optional[int] = None,
+            compute_derate: float = 0.6,
+            topo: Optional[Topology] = None) -> List[Trial]:
     """graph_for(workload_config) -> Chakra graph (cached by key).
 
     `parallel=N` evaluates trials on N threads (identical results, sorted
     the same; capture and pass application stay serial so graph mutation
-    never races).  Returns trials sorted by objective (ascending)."""
+    never races).  `compute_derate`/`topo` accept trace-calibrated
+    parameters (repro.trace.calibrate): pass ``cal.compute_derate`` and
+    ``cal.topology`` so every trial prices against the fitted hardware.
+    Returns trials sorted by objective (ascending)."""
+    global _gil_pool_warned
+    if parallel and parallel > 1 and not _gil_pool_warned:
+        warnings.warn(
+            "explore(parallel=N) runs trials on a thread pool, and trial "
+            "evaluation is pure Python — the GIL serializes it, so expect "
+            "no speedup over parallel=None (measured in BENCH_sim.json). "
+            "A process-pool path needs picklable graph_for callables.",
+            RuntimeWarning, stacklevel=2)
+        _gil_pool_warned = True
     wl_knobs = [k for k in knobs if k.layer == "workload"]
     graph_cache: Dict = {}
     sw_cache: Dict = {}
@@ -194,7 +229,7 @@ def explore(graph_for: Callable[[Dict], chakra.Graph], system,
 
     def run_trial(cfg: Dict) -> Trial:
         g2 = sw_cache[(wl_key(cfg), _sw_key(cfg))]
-        res = _simulate_cfg(g2, system, cfg)
+        res = _simulate_cfg(g2, system, cfg, compute_derate, topo)
         return Trial(cfg, res, getattr(res, objective))
 
     if parallel and parallel > 1:
@@ -207,7 +242,9 @@ def explore(graph_for: Callable[[Dict], chakra.Graph], system,
 
 
 def greedy_descent(graph_for, system, knobs: List[Knob],
-                   objective: str = "total_time", rounds: int = 3) -> Trial:
+                   objective: str = "total_time", rounds: int = 3,
+                   compute_derate: float = 0.6,
+                   topo: Optional[Topology] = None) -> Trial:
     """Coordinate-descent search: sweep one knob at a time, keep the best.
 
     Captures, software-pass applications AND full-config evaluations are
@@ -232,7 +269,8 @@ def greedy_descent(graph_for, system, knobs: List[Knob],
         skey = (key, _sw_key(cfg))
         if skey not in sw_cache:
             sw_cache[skey] = apply_software_knobs(graph_cache[key], cfg)
-        res = _simulate_cfg(sw_cache[skey], system, cfg)
+        res = _simulate_cfg(sw_cache[skey], system, cfg, compute_derate,
+                            topo)
         t = Trial(dict(cfg), res, getattr(res, objective))
         trial_cache[ckey] = t
         return t

@@ -1,0 +1,16 @@
+# Trace subsystem: Chrome-trace export, measured-trace ingestion,
+# graph<->trace validation and cost-model calibration — the paper's
+# "validate the workload graph against post-execution traces" loop.
+from repro.trace.align import Alignment, align, align_rank
+from repro.trace.calibrate import (PARAM_NAMES, CalibrationResult,
+                                   calibrate)
+from repro.trace.export import (TRACE_SCHEMA, export_chrome_trace,
+                                to_chrome_trace)
+from repro.trace.ingest import Timeline, TraceEvent, ingest_chrome_trace
+from repro.trace.validate import ValidationReport, validate
+
+__all__ = ["Alignment", "align", "align_rank", "PARAM_NAMES",
+           "CalibrationResult", "calibrate", "TRACE_SCHEMA",
+           "export_chrome_trace", "to_chrome_trace", "Timeline",
+           "TraceEvent", "ingest_chrome_trace", "ValidationReport",
+           "validate"]

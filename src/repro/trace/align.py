@@ -1,0 +1,96 @@
+"""Graph <-> trace alignment: match measured timeline events to workload
+graph nodes.
+
+Three passes per rank, strictest first:
+
+  1. exact node-id hints — our own exporter stamps ``args.nid``; accepted
+     only when the named node agrees (a foreign trace can't fool it);
+  2. fingerprint + program order — events and nodes that share a chakra
+     fingerprint (``name|type``) are zipped k-th-to-k-th, events in start
+     order, nodes in construction (= program) order;
+  3. bare name + program order — same, for traces without op-class info.
+
+Everything left over is reported unmatched; ``match_fraction`` is the
+denominator of every downstream validation/calibration claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import chakra
+from repro.trace.ingest import Timeline, TraceEvent
+
+
+@dataclasses.dataclass
+class Alignment:
+    """Node->event matching for one rank of a measured trace."""
+    rank: int
+    pairs: List[Tuple[int, TraceEvent]]
+    unmatched_nodes: List[int]
+    unmatched_events: List[TraceEvent]
+
+    @property
+    def n_matched(self) -> int:
+        return len(self.pairs)
+
+    @property
+    def match_fraction(self) -> float:
+        total = self.n_matched + len(self.unmatched_nodes)
+        return self.n_matched / total if total else 1.0
+
+    def measured(self) -> Dict[int, float]:
+        """nid -> measured duration (seconds)."""
+        return {nid: ev.dur for nid, ev in self.pairs}
+
+
+def _event_fingerprint(ev: TraceEvent) -> Optional[str]:
+    return ev.args.get("fingerprint")
+
+
+def align_rank(g: chakra.Graph, tl: Timeline, rank: int) -> Alignment:
+    events = tl.rank_events(rank)
+    nodes = g.nodes
+    taken_node = [False] * len(nodes)
+    taken_ev = [False] * len(events)
+    pairs: List[Tuple[int, TraceEvent]] = []
+
+    # pass 1: exporter-stamped node ids, verified by name
+    for i, ev in enumerate(events):
+        nid = ev.args.get("nid")
+        if isinstance(nid, int) and 0 <= nid < len(nodes) \
+                and not taken_node[nid] and nodes[nid].name == ev.name:
+            pairs.append((nid, ev))
+            taken_node[nid] = True
+            taken_ev[i] = True
+
+    # passes 2 + 3: fingerprint then bare name, k-th occurrence to k-th
+    for keyer_n, keyer_e in (
+            (lambda n: n.fingerprint(), _event_fingerprint),
+            (lambda n: n.name, lambda ev: ev.name)):
+        by_key: Dict[str, List[int]] = {}
+        for n in nodes:                    # construction order == program order
+            if not taken_node[n.id]:
+                by_key.setdefault(keyer_n(n), []).append(n.id)
+        for i, ev in enumerate(events):    # rank_events is start-sorted
+            if taken_ev[i]:
+                continue
+            key = keyer_e(ev)
+            cands = by_key.get(key)
+            if cands:
+                nid = cands.pop(0)
+                pairs.append((nid, ev))
+                taken_node[nid] = True
+                taken_ev[i] = True
+
+    pairs.sort(key=lambda p: p[0])
+    return Alignment(
+        rank=rank, pairs=pairs,
+        unmatched_nodes=[n.id for n in nodes if not taken_node[n.id]],
+        unmatched_events=[ev for i, ev in enumerate(events)
+                          if not taken_ev[i]])
+
+
+def align(g: chakra.Graph, tl: Timeline) -> Dict[int, Alignment]:
+    """Per-rank alignments for every rank present in the timeline."""
+    return {r: align_rank(g, tl, r) for r in tl.ranks()}

@@ -1,0 +1,187 @@
+"""``python -m repro.trace`` — export / validate / calibrate from the shell.
+
+    # simulate a captured graph and emit a Chrome trace (view in Perfetto)
+    python -m repro.trace export graph.json -o trace.json --ranks 8
+
+    # score the graph's predictions against a measured trace
+    python -m repro.trace validate graph.json trace.json --ranks 8
+
+    # fit hardware parameters from the trace, write them back out
+    python -m repro.trace calibrate graph.json trace.json -o calibrated.json
+
+Hardware flags (--chips/--topology/--peak-flops/--hbm-bw/--link-bw/
+--link-latency/--derate/--algo) override the TPU-v5e SystemConfig defaults;
+``--system calibrated.json`` loads a previous calibrate run instead.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.costmodel.simulator import simulate, simulate_cluster
+from repro.core.costmodel.topology import build_topology
+from repro.trace.calibrate import calibrate
+from repro.trace.export import export_chrome_trace
+from repro.trace.ingest import ingest_chrome_trace
+from repro.trace.validate import validate
+
+
+def _add_system_flags(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--system", default=None, metavar="JSON",
+                    help="load SystemConfig+derate from a calibrate -o file")
+    ap.add_argument("--chips", type=int, default=None)
+    ap.add_argument("--topology", default=None,
+                    help="switch | ring | torus2d | torus3d | wafer2d")
+    ap.add_argument("--peak-flops", type=float, default=None)
+    ap.add_argument("--hbm-bw", type=float, default=None)
+    ap.add_argument("--link-bw", type=float, default=None)
+    ap.add_argument("--link-latency", type=float, default=None)
+    ap.add_argument("--derate", type=float, default=None,
+                    help="compute derate / flops efficiency (default 0.6)")
+    ap.add_argument("--algo", default="auto",
+                    help="collective algorithm (auto | ring | hd | 2d_synth)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="serialize comm onto the compute stream")
+    ap.add_argument("--ranks", type=int, default=0,
+                    help="simulate a K-rank cluster (0 = single timeline)")
+
+
+def _system_from_args(args):
+    sysc, derate = SystemConfig(), 0.6
+    if args.system:
+        with open(args.system) as f:
+            saved = json.load(f)
+        sysc = SystemConfig(**saved.get("system", {}))
+        derate = saved.get("compute_derate", derate)
+    over = {k: getattr(args, a) for k, a in
+            (("chips", "chips"), ("topology", "topology"),
+             ("peak_flops", "peak_flops"), ("hbm_bw", "hbm_bw"),
+             ("link_bw", "link_bw"), ("link_latency", "link_latency"))
+            if getattr(args, a) is not None}
+    if over:
+        sysc = sysc.replace(**over)
+    if args.derate is not None:
+        derate = args.derate
+    return sysc, derate
+
+
+def _cmd_export(args) -> int:
+    g = chakra.Graph.load(args.graph)
+    sysc, derate = _system_from_args(args)
+    # size the fabric to the simulated cluster (benchmarks' convention);
+    # without --ranks the system's chip count stands
+    topo = build_topology(sysc, args.ranks if args.ranks > 1 else None)
+    overlap = not args.no_overlap
+    if args.ranks and args.ranks > 1:
+        res = simulate_cluster(g, sysc, topo, n_ranks=args.ranks,
+                               algo=args.algo, overlap=overlap,
+                               compute_derate=derate, keep_timeline=True)
+        total, n_proc = res.step_time, res.n_ranks
+    else:
+        res = simulate(g, sysc, topo, algo=args.algo, overlap=overlap,
+                       compute_derate=derate, keep_timeline=True)
+        total, n_proc = res.total_time, 1
+    export_chrome_trace(res, args.out, graph=g)
+    print(f"wrote {args.out}: {n_proc} rank(s), {len(g)} nodes/rank, "
+          f"step {total * 1e3:.3f} ms — open in https://ui.perfetto.dev "
+          "or chrome://tracing")
+    return 0
+
+
+def _cmd_validate(args) -> int:
+    g = chakra.Graph.load(args.graph)
+    tl = ingest_chrome_trace(args.trace)
+    sysc, derate = _system_from_args(args)
+    K = args.ranks or len(tl.ranks())
+    rep = validate(g, tl, sysc, build_topology(sysc, K if K > 1 else None),
+                   n_ranks=args.ranks or None, algo=args.algo,
+                   overlap=not args.no_overlap, compute_derate=derate)
+    print(rep.summary())
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rep.as_dict(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    if args.max_error is not None and rep.e2e_error > args.max_error:
+        print(f"FAIL: e2e error {rep.e2e_error * 100:.2f}% exceeds "
+              f"--max-error {args.max_error * 100:.2f}%")
+        return 1
+    return 0
+
+
+def _cmd_calibrate(args) -> int:
+    g = chakra.Graph.load(args.graph)
+    tl = ingest_chrome_trace(args.trace)
+    sysc, derate = _system_from_args(args)
+    K = args.ranks or len(tl.ranks())
+    cal = calibrate(g, tl, sysc,
+                    build_topology(sysc, K if K > 1 else None),
+                    algo=args.algo, compute_derate=derate)
+    print(cal.summary())
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"system": dataclasses.asdict(cal.system),
+                       "compute_derate": cal.compute_derate,
+                       "params": cal.params,
+                       "rms_rel_error": cal.fitted_error}, f,
+                      indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out} (reuse via --system {args.out})")
+    if args.validate:
+        before = validate(g, tl, sysc,
+                          build_topology(sysc, K if K > 1 else None),
+                          n_ranks=args.ranks or None,
+                          algo=args.algo, overlap=not args.no_overlap,
+                          compute_derate=derate)
+        after = validate(g, tl, cal.system, cal.topology,
+                         n_ranks=args.ranks or None, algo=args.algo,
+                         overlap=not args.no_overlap,
+                         compute_derate=cal.compute_derate)
+        print(f"validation e2e error: {before.e2e_error * 100:.2f}% -> "
+              f"{after.e2e_error * 100:.2f}% after calibration")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.trace",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    ex = sub.add_parser("export", help="simulate a graph, emit Chrome trace")
+    ex.add_argument("graph", help="chakra graph JSON (Graph.save output)")
+    ex.add_argument("-o", "--out", required=True, help="trace JSON path")
+    _add_system_flags(ex)
+    ex.set_defaults(fn=_cmd_export)
+
+    va = sub.add_parser("validate", help="score graph vs measured trace")
+    va.add_argument("graph")
+    va.add_argument("trace", help="Chrome-trace JSON to validate against")
+    va.add_argument("--json", default=None, help="write full report JSON")
+    va.add_argument("--max-error", type=float, default=None,
+                    help="exit 1 if worst-rank e2e error exceeds this "
+                         "fraction (CI gate)")
+    _add_system_flags(va)
+    va.set_defaults(fn=_cmd_validate)
+
+    ca = sub.add_parser("calibrate", help="fit hardware params from trace")
+    ca.add_argument("graph")
+    ca.add_argument("trace")
+    ca.add_argument("-o", "--out", default=None,
+                    help="write calibrated system JSON")
+    ca.add_argument("--validate", action="store_true",
+                    help="print validation error before/after the fit")
+    _add_system_flags(ca)
+    ca.set_defaults(fn=_cmd_calibrate)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,141 @@
+"""Chrome-trace export: render simulated timelines as Chrome trace event
+format JSON (viewable in Perfetto / chrome://tracing).
+
+Layout: one *process* per rank, one *thread* per stream (0 = compute,
+1 = comm), complete events (``ph: "X"``, microsecond ``ts``/``dur``) per
+scheduled node, plus a per-rank ``exposed_comm`` counter track that is
+nonzero exactly while the comm stream is busy and the compute stream is
+idle — the visual form of ``SimResult.exposed_comm``.
+
+Event ``args`` carry the node id and its chakra fingerprint so
+``repro.trace.align`` can re-identify nodes exactly on round-trip; external
+consumers can ignore them.  ``simulate(..., keep_timeline=True)`` /
+``simulate_cluster(..., keep_timeline=True)`` produce the required spans.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import chakra
+from repro.core.costmodel.simulator import (ClusterSimResult, SimResult,
+                                            Span)
+
+TRACE_SCHEMA = "flint-trace-v1"
+_TID = {"comp": 0, "comm": 1}
+_THREAD_NAMES = {0: "compute", 1: "comm"}
+
+
+def _per_rank_spans(result) -> List[Tuple[int, List[Span]]]:
+    """[(rank, spans)] for either result flavor; classes are expanded so
+    every rank gets its own process in the trace."""
+    if isinstance(result, ClusterSimResult):
+        return [(r, result.rank_spans(r)) for r in range(result.n_ranks)]
+    if isinstance(result, SimResult):
+        return [(0, result.spans())]
+    raise TypeError(f"expected SimResult or ClusterSimResult, "
+                    f"got {type(result).__name__}")
+
+
+def _subtract(lo: float, hi: float,
+              intervals: List[Tuple[float, float]]) -> List[Tuple[float, float]]:
+    """[lo, hi) minus a sorted, disjoint interval list."""
+    out = []
+    cur = lo
+    for a, b in intervals:
+        if b <= cur:
+            continue
+        if a >= hi:
+            break
+        if a > cur:
+            out.append((cur, min(a, hi)))
+        cur = max(cur, b)
+        if cur >= hi:
+            break
+    if cur < hi:
+        out.append((cur, hi))
+    return out
+
+
+def _merged(intervals: List[Tuple[float, float]]) -> List[Tuple[float, float]]:
+    out: List[Tuple[float, float]] = []
+    for a, b in sorted(intervals):
+        if out and a <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], b))
+        else:
+            out.append((a, b))
+    return out
+
+
+def _exposed_counters(rank: int, spans: List[Span],
+                      graph: Optional[chakra.Graph],
+                      scale: float) -> List[Dict]:
+    """Counter events: comm-stream busy intervals not covered by compute."""
+    comp = _merged([(s.start, s.end) for s in spans
+                    if s.stream == "comp" and s.end > s.start])
+    events: List[Dict] = []
+    for s in sorted((s for s in spans if s.stream == "comm"),
+                    key=lambda s: s.start):
+        if s.end <= s.start:
+            continue
+        val = 1.0
+        if graph is not None:
+            val = graph.node(s.nid).attrs.get("comm_bytes", 0.0) or 1.0
+        for a, b in _subtract(s.start, s.end, comp):
+            events.append({"ph": "C", "pid": rank, "name": "exposed_comm",
+                           "ts": a * scale, "args": {"bytes": val}})
+            events.append({"ph": "C", "pid": rank, "name": "exposed_comm",
+                           "ts": b * scale, "args": {"bytes": 0.0}})
+    return events
+
+
+def to_chrome_trace(result, graph: Optional[chakra.Graph] = None,
+                    meta: Optional[Dict] = None) -> Dict:
+    """Render a timeline-carrying sim result as a Chrome-trace dict.
+
+    `graph` (the simulated workload graph) enriches event args with node
+    fingerprints, op classes and payload bytes — pass it whenever you have
+    it; round-trip validation relies on the fingerprints."""
+    scale = 1e6                        # seconds -> Chrome microseconds
+    events: List[Dict] = []
+    for rank, spans in _per_rank_spans(result):
+        events.append({"ph": "M", "pid": rank, "name": "process_name",
+                       "args": {"name": f"rank {rank}"}})
+        for tid, tname in _THREAD_NAMES.items():
+            events.append({"ph": "M", "pid": rank, "tid": tid,
+                           "name": "thread_name", "args": {"name": tname}})
+        for s in sorted(spans, key=lambda s: (s.start, _TID[s.stream])):
+            args: Dict = {"nid": s.nid}
+            cat = s.stream
+            if graph is not None:
+                n = graph.node(s.nid)
+                args["fingerprint"] = n.fingerprint()
+                cat = n.type
+                cb = n.attrs.get("comm_bytes", 0.0)
+                if cb:
+                    args["comm_bytes"] = cb
+            events.append({"ph": "X", "pid": rank, "tid": _TID[s.stream],
+                           "ts": s.start * scale,
+                           "dur": (s.end - s.start) * scale,
+                           "name": s.name, "cat": cat, "args": args})
+        events.extend(_exposed_counters(rank, spans, graph, scale))
+    md = {"schema": TRACE_SCHEMA, "time_unit": "us"}
+    if graph is not None:
+        md["n_nodes"] = len(graph)
+        md.update(graph.meta)
+    if meta:
+        md.update(meta)
+    return {"traceEvents": events, "displayTimeUnit": "ms", "metadata": md}
+
+
+def export_chrome_trace(result, path: str,
+                        graph: Optional[chakra.Graph] = None,
+                        meta: Optional[Dict] = None) -> Dict:
+    """Write the Chrome-trace JSON for `result` to `path`; returns the
+    trace dict.  Open the file in https://ui.perfetto.dev or
+    chrome://tracing to inspect the timeline."""
+    trace = to_chrome_trace(result, graph, meta)
+    with open(path, "w") as f:
+        json.dump(trace, f)
+        f.write("\n")
+    return trace

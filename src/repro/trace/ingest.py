@@ -1,0 +1,130 @@
+"""Measured-trace ingestion: parse Chrome trace event JSON — ours or an
+external profiler's — into a normalized per-rank timeline.
+
+Handles both container forms (``{"traceEvents": [...]}`` and a bare event
+list), complete events (``ph: "X"``) and begin/end pairs (``B``/``E``),
+process/thread ``M`` metadata, and ``C`` counter samples.  Timestamps are
+Chrome-convention microseconds unless ``time_unit`` says otherwise, and the
+whole timeline is shifted so the earliest event starts at t=0 (real traces
+carry epoch offsets).
+
+Stream classification (compute vs comm) prefers the thread_name metadata,
+falls back to the event category, then to the tid convention of our own
+exporter (0 = compute, 1 = comm).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    """One normalized timeline event (times in seconds, start-shifted)."""
+    name: str
+    rank: int
+    tid: int
+    stream: str                   # "comp" | "comm"
+    start: float
+    dur: float
+    cat: str = ""
+    args: Dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def end(self) -> float:
+        return self.start + self.dur
+
+
+@dataclasses.dataclass
+class Timeline:
+    """Normalized measured trace: events plus raw counter samples."""
+    events: List[TraceEvent]
+    counters: List[Dict] = dataclasses.field(default_factory=list)
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def ranks(self) -> List[int]:
+        return sorted({e.rank for e in self.events})
+
+    def rank_events(self, rank: int) -> List[TraceEvent]:
+        return sorted((e for e in self.events if e.rank == rank),
+                      key=lambda e: (e.start, e.tid, e.name))
+
+    def span(self, rank: Optional[int] = None) -> Tuple[float, float]:
+        evs = self.events if rank is None else \
+            [e for e in self.events if e.rank == rank]
+        if not evs:
+            return (0.0, 0.0)
+        return (min(e.start for e in evs), max(e.end for e in evs))
+
+    def total_time(self, rank: Optional[int] = None) -> float:
+        t0, t1 = self.span(rank)
+        return t1 - t0
+
+
+def _classify_stream(tname: str, cat: str, tid: int) -> str:
+    if tname:
+        return "comm" if "comm" in tname.lower() else "comp"
+    if cat and "COMM" in cat.upper():
+        return "comm"
+    return "comm" if tid == 1 else "comp"
+
+
+def ingest_chrome_trace(src, time_unit: float = 1e-6,
+                        normalize: bool = True) -> Timeline:
+    """Parse Chrome-trace JSON into a ``Timeline``.
+
+    `src` is a file path, an already-parsed trace dict, or a bare event
+    list; `time_unit` is seconds per timestamp unit (Chrome default: 1e-6).
+    """
+    if isinstance(src, str):
+        with open(src) as f:
+            obj = json.load(f)
+    else:
+        obj = src
+    if isinstance(obj, dict):
+        raw = obj.get("traceEvents", [])
+        meta = dict(obj.get("metadata", {}))
+    else:
+        raw, meta = obj, {}
+
+    thread_names: Dict[Tuple[int, int], str] = {}
+    open_begins: Dict[Tuple[int, int, str], List[float]] = {}
+    rows: List[Tuple] = []            # (name, pid, tid, ts, dur, cat, args)
+    counters: List[Dict] = []
+    for e in raw:
+        ph = e.get("ph", "X")
+        pid = int(e.get("pid", 0))
+        tid = int(e.get("tid", 0))
+        if ph == "M":
+            if e.get("name") == "thread_name":
+                thread_names[(pid, tid)] = e.get("args", {}).get("name", "")
+            continue
+        if ph == "C":
+            counters.append(dict(e))
+            continue
+        name = e.get("name", "")
+        ts = float(e.get("ts", 0.0))
+        if ph == "X":
+            rows.append((name, pid, tid, ts, float(e.get("dur", 0.0)),
+                         e.get("cat", ""), e.get("args", {}) or {}))
+        elif ph == "B":
+            open_begins.setdefault((pid, tid, name), []).append(ts)
+        elif ph == "E":
+            stack = open_begins.get((pid, tid, name))
+            if stack:
+                t0 = stack.pop()
+                rows.append((name, pid, tid, t0, ts - t0,
+                             e.get("cat", ""), e.get("args", {}) or {}))
+        # other phases (flow, instant, ...) carry no durations — skip
+
+    t0 = min((ts for _, _, _, ts, _, _, _ in rows), default=0.0) \
+        if normalize else 0.0
+    events = [TraceEvent(name=name, rank=pid, tid=tid,
+                         stream=_classify_stream(
+                             thread_names.get((pid, tid), ""), cat, tid),
+                         start=(ts - t0) * time_unit,
+                         dur=dur * time_unit, cat=cat, args=args)
+              for name, pid, tid, ts, dur, cat, args in rows]
+    events.sort(key=lambda e: (e.rank, e.start, e.tid, e.name))
+    return Timeline(events=events, counters=counters, meta=meta)

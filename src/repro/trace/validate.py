@@ -1,0 +1,204 @@
+"""Graph <-> trace validation: quantify how well the simulated workload
+graph predicts a measured (or re-ingested) timeline.
+
+``validate()`` simulates the graph under the given hardware model, aligns
+the measured timeline to the graph (``repro.trace.align``), and produces a
+``ValidationReport``:
+
+  * per-op-class duration error (COMP / COMM_COLL / ... mean + max relative)
+  * end-to-end step-time error, per rank and worst-rank overall
+  * critical-path overlap: how much of the *measured* critical path the
+    simulated critical path also covers (duration-weighted Jaccard-style)
+  * a worst-offenders table — the nodes contributing the largest absolute
+    prediction error, the starting point of any calibration session.
+
+The exact-round-trip property (export a simulated trace, re-ingest,
+validate => ~0 error, 100% match) is enforced by tests/test_trace.py and
+gated by benchmarks/trace_roundtrip.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core import chakra
+from repro.core.costmodel.simulator import simulate, simulate_cluster
+from repro.core.costmodel.topology import Topology, build_topology
+from repro.trace.align import align_rank
+from repro.trace.ingest import Timeline
+
+_EPS = 1e-12
+
+
+def _rel_err(sim: float, meas: float) -> float:
+    d = abs(sim - meas)
+    if d <= _EPS:
+        return 0.0
+    return d / max(meas, _EPS)
+
+
+def _critical_path(g: chakra.Graph, dur: Dict[int, float]) -> List[int]:
+    """Longest-duration dependency chain under the `dur` assignment."""
+    best: Dict[int, float] = {}
+    pred: Dict[int, Optional[int]] = {}
+    for nid in g.topo_order():
+        n = g.node(nid)
+        t0, p = 0.0, None
+        for d in set(n.all_deps):
+            if best[d] > t0:
+                t0, p = best[d], d
+        best[nid] = t0 + dur.get(nid, 0.0)
+        pred[nid] = p
+    if not best:
+        return []
+    end: Optional[int] = max(best, key=lambda i: best[i])
+    path: List[int] = []
+    while end is not None:
+        path.append(end)
+        end = pred[end]
+    return path
+
+
+@dataclasses.dataclass
+class ValidationReport:
+    n_ranks: int
+    n_nodes: int
+    n_matched: int
+    match_fraction: float
+    sim_total_s: float
+    trace_total_s: float
+    e2e_error: float                   # worst rank's relative step error
+    per_class: Dict[str, Dict]         # op class -> count/sim_s/trace_s/errs
+    critical_path_overlap: float       # duration-weighted, in [0, 1]
+    worst: List[Dict]                  # top offenders by absolute error
+    per_rank: List[Dict]
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def summary(self) -> str:
+        lines = [
+            f"trace validation: {self.n_ranks} rank(s), "
+            f"{self.n_matched}/{self.n_nodes * self.n_ranks} node spans "
+            f"matched ({self.match_fraction * 100:.1f}%)",
+            f"end-to-end: sim {self.sim_total_s * 1e3:.3f} ms vs trace "
+            f"{self.trace_total_s * 1e3:.3f} ms "
+            f"({self.e2e_error * 100:.2f}% worst-rank error); "
+            f"critical-path overlap {self.critical_path_overlap * 100:.1f}%",
+            "per-op-class:",
+        ]
+        for cls, row in sorted(self.per_class.items()):
+            lines.append(
+                f"  {cls:<10} {row['count']:>5} spans  "
+                f"sim {row['sim_s'] * 1e3:9.3f} ms  "
+                f"trace {row['trace_s'] * 1e3:9.3f} ms  "
+                f"mean|err| {row['mean_rel_err'] * 100:6.2f}%  "
+                f"max {row['max_rel_err'] * 100:6.2f}%")
+        if self.worst:
+            lines.append("worst offenders:")
+            for w in self.worst:
+                sign = "+" if w["sim_s"] >= w["trace_s"] else "-"
+                lines.append(
+                    f"  rank {w['rank']} {w['name']} ({w['type']}): "
+                    f"sim {w['sim_s'] * 1e6:.1f} us vs trace "
+                    f"{w['trace_s'] * 1e6:.1f} us "
+                    f"({sign}{w['rel_err'] * 100:.1f}%)")
+        return "\n".join(lines)
+
+
+def validate(g: chakra.Graph, tl: Timeline, system,
+             topo: Optional[Topology] = None, *,
+             n_ranks: Optional[int] = None, rank_profiles=None,
+             algo: str = "auto", overlap: bool = True,
+             compute_derate: float = 0.6, top_k: int = 8) -> ValidationReport:
+    """Validate graph `g` against measured timeline `tl` under a hardware
+    model (system/topo/derate — pass a calibrated set to measure the fit).
+
+    Multi-rank traces are simulated with ``simulate_cluster`` (pids map to
+    ranks in sorted order); single-process traces with ``simulate``."""
+    topo = topo or build_topology(system)
+    pids = tl.ranks()
+    K = int(n_ranks if n_ranks is not None else max(len(pids), 1))
+    if K > 1:
+        cr = simulate_cluster(g, system, topo, n_ranks=K,
+                              rank_profiles=rank_profiles, algo=algo,
+                              overlap=overlap, compute_derate=compute_derate,
+                              keep_timeline=True)
+        sim_total = cr.step_time
+        # a pid that is itself a valid rank id addresses that simulated
+        # rank (partial traces keep their identity); foreign pids (host
+        # process ids) map positionally
+        sim_ranks = [pid if 0 <= pid < K else i
+                     for i, pid in enumerate(pids[:K])]
+        rank_view = [(sr, pid, cr.rank_spans(sr),
+                      cr.rank_result(sr).total_time)
+                     for sr, pid in zip(sim_ranks, pids)]
+        cp_rank = sim_ranks[0] if sim_ranks \
+            and cr.slowest_rank not in sim_ranks else cr.slowest_rank
+    else:
+        res = simulate(g, system, topo, algo=algo, overlap=overlap,
+                       compute_derate=compute_derate, keep_timeline=True)
+        sim_total = res.total_time
+        rank_view = [(0, pids[0] if pids else 0, res.spans(),
+                      res.total_time)]
+        cp_rank = 0
+
+    per_class: Dict[str, Dict] = {}
+    worst: List[Dict] = []
+    per_rank: List[Dict] = []
+    n_matched = 0
+    e2e_error = 0.0
+    cp_meas: Dict[int, float] = {}
+    cp_sim: Dict[int, float] = {}
+
+    for sr, pid, spans, sim_rank_total in rank_view:
+        sim_dur = {sp.nid: sp.duration for sp in spans}
+        al = align_rank(g, tl, pid)
+        meas = al.measured()
+        n_matched += al.n_matched
+        for nid, m in meas.items():
+            n = g.node(nid)
+            s = sim_dur.get(nid, 0.0)
+            row = per_class.setdefault(
+                n.type, {"count": 0, "sim_s": 0.0, "trace_s": 0.0,
+                         "mean_rel_err": 0.0, "max_rel_err": 0.0})
+            err = _rel_err(s, m)
+            row["count"] += 1
+            row["sim_s"] += s
+            row["trace_s"] += m
+            row["mean_rel_err"] += err          # sum; normalized below
+            row["max_rel_err"] = max(row["max_rel_err"], err)
+            if abs(s - m) > _EPS:
+                worst.append({"rank": pid, "nid": nid, "name": n.name,
+                              "type": n.type, "sim_s": s, "trace_s": m,
+                              "abs_err": abs(s - m), "rel_err": err})
+        trace_total = tl.total_time(pid)
+        rank_err = _rel_err(sim_rank_total, trace_total)
+        e2e_error = max(e2e_error, rank_err)
+        per_rank.append({"rank": pid, "sim_s": sim_rank_total,
+                         "trace_s": trace_total, "e2e_error": rank_err,
+                         "match_fraction": al.match_fraction})
+        if sr == cp_rank:
+            cp_sim = sim_dur
+            # measured durations, sim fallback for unmatched nodes
+            cp_meas = dict(sim_dur)
+            cp_meas.update(meas)
+
+    for row in per_class.values():
+        row["mean_rel_err"] /= max(row["count"], 1)
+    worst.sort(key=lambda w: -w["abs_err"])
+
+    sim_path = set(_critical_path(g, cp_sim))
+    meas_path = _critical_path(g, cp_meas)
+    meas_total_cp = sum(cp_meas.get(n, 0.0) for n in meas_path)
+    shared = sum(cp_meas.get(n, 0.0) for n in meas_path if n in sim_path)
+    cp_overlap = shared / meas_total_cp if meas_total_cp > 0 else 1.0
+
+    n_traced = max(len(rank_view), 1)
+    return ValidationReport(
+        n_ranks=n_traced, n_nodes=len(g), n_matched=n_matched,
+        match_fraction=n_matched / max(len(g) * n_traced, 1),
+        sim_total_s=sim_total, trace_total_s=tl.total_time(),
+        e2e_error=e2e_error, per_class=per_class,
+        critical_path_overlap=cp_overlap, worst=worst[:top_k],
+        per_rank=per_rank)

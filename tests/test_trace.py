@@ -1,0 +1,477 @@
+"""Trace subsystem: Chrome-trace export/ingest round-trip (single-rank and
+cluster must re-validate at ~0% error with full node alignment), external
+B/E-pair ingestion, calibration recovery of perturbed hardware parameters,
+the CLI verbs, and the satellite behaviors (cluster result memoization,
+group-attr participant mapping, the DSE GIL warning)."""
+import json
+import random
+
+import pytest
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra, dse
+from repro.core.costmodel import (RankProfile, build_topology, compile_graph,
+                                  simulate, simulate_cluster)
+from repro.core.costmodel.simulator import Span, _group_instances
+from repro.trace import (align, align_rank, calibrate, export_chrome_trace,
+                         ingest_chrome_trace, to_chrome_trace, validate)
+from repro.trace.cli import main as trace_cli
+
+from test_compiled_sim import rand_graph
+
+SYS = SystemConfig(chips=8, topology="switch")
+TOPO = build_topology(SYS)
+
+
+def fsdp_stack(n_layers, ranks, with_membound=True):
+    """FSDP-ish layer stack; `with_membound` adds HBM-bound COMP nodes so
+    calibration can identify hbm_bw independently of compute_derate."""
+    g = chakra.Graph()
+    group = list(range(ranks))
+    prev = None
+    for i in range(n_layers):
+        ag = g.add(f"ag{i}", chakra.COMM_COLL, comm_kind="all-gather",
+                   comm_bytes=8e6, out_bytes=8e6, group=group,
+                   ctrl_deps=[prev] if prev is not None else [])
+        fwd = g.add(f"f{i}", chakra.COMP,
+                    deps=[ag] + ([prev] if prev is not None else []),
+                    flops=5e10, bytes=1e8, out_bytes=1e6)
+        bwd = g.add(f"b{i}", chakra.COMP, deps=[fwd], flops=1e11,
+                    bytes=2e8, out_bytes=1e6)
+        if with_membound:
+            g.add(f"mem{i}", chakra.COMP, deps=[fwd], flops=1e8, bytes=5e8)
+        g.add(f"ar{i}", chakra.COMM_COLL, deps=[bwd],
+              comm_kind="all-reduce", comm_bytes=4e6 * (1 + i % 3),
+              group=group)
+        prev = bwd
+    return g
+
+
+# ---------------------------------------------------------------------------
+# round-trip: export -> ingest -> align -> validate
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_single_rank_zero_error():
+    g = fsdp_stack(12, 8)
+    res = simulate(g, SYS, TOPO, keep_timeline=True)
+    tl = ingest_chrome_trace(to_chrome_trace(res, graph=g))
+    al = align_rank(g, tl, 0)
+    assert al.match_fraction == 1.0
+    assert not al.unmatched_nodes and not al.unmatched_events
+    rep = validate(g, tl, SYS, TOPO)
+    assert rep.n_ranks == 1
+    assert rep.match_fraction == 1.0
+    assert rep.e2e_error < 1e-9
+    assert rep.critical_path_overlap == 1.0
+    assert not rep.worst
+    for row in rep.per_class.values():
+        assert row["mean_rel_err"] < 1e-9 and row["max_rel_err"] < 1e-9
+
+
+def test_roundtrip_cluster_4rank_zero_error(tmp_path):
+    """4-rank cluster with a straggler profile: per-rank processes in the
+    trace, full alignment and ~0% error when validated under the same
+    profiles (file round-trip included)."""
+    g = fsdp_stack(10, 4)
+    profs = {3: RankProfile(compute_scale=0.7)}
+    cr = simulate_cluster(g, SYS, TOPO, n_ranks=4, rank_profiles=profs,
+                          keep_timeline=True)
+    path = str(tmp_path / "trace.json")
+    export_chrome_trace(cr, path, graph=g)
+    tl = ingest_chrome_trace(path)
+    assert tl.ranks() == [0, 1, 2, 3]
+    rep = validate(g, tl, SYS, TOPO, rank_profiles=profs)
+    assert rep.n_ranks == 4
+    assert rep.match_fraction == 1.0
+    assert rep.e2e_error < 1e-9
+    # the straggler actually skews the trace (rank 3 slower than rank 0)
+    assert tl.total_time(3) >= tl.total_time(0)
+
+
+def test_partial_cluster_trace_keeps_rank_identity():
+    """A trace covering only a subset of ranks must still score each pid
+    against *that* simulated rank — pid 3's straggler timeline validates
+    at ~0% error even when pids 0-1 are missing from the capture."""
+    import dataclasses as _dc
+
+    g = fsdp_stack(8, 4)
+    profs = {3: RankProfile(compute_scale=0.6)}
+    cr = simulate_cluster(g, SYS, TOPO, n_ranks=4, rank_profiles=profs,
+                          keep_timeline=True)
+    tl = ingest_chrome_trace(to_chrome_trace(cr, graph=g))
+    partial = _dc.replace(tl, events=[e for e in tl.events
+                                      if e.rank in (2, 3)])
+    rep = validate(g, partial, SYS, TOPO, n_ranks=4, rank_profiles=profs)
+    assert rep.match_fraction == 1.0
+    assert rep.e2e_error < 1e-9
+    assert {row["rank"] for row in rep.per_rank} == {2, 3}
+    # a trace with no duration events reports cleanly, not a crash
+    empty = _dc.replace(tl, events=[])
+    rep0 = validate(g, empty, SYS, TOPO, n_ranks=4, rank_profiles=profs)
+    assert rep0.n_matched == 0 and not rep0.per_rank
+
+
+def test_roundtrip_random_graphs():
+    for seed in (0, 7, 21):
+        g = rand_graph(random.Random(seed), 80)
+        res = simulate(g, SYS, TOPO, keep_timeline=True)
+        rep = validate(g, ingest_chrome_trace(to_chrome_trace(res, graph=g)),
+                       SYS, TOPO)
+        assert rep.match_fraction == 1.0, seed
+        assert rep.e2e_error < 1e-9, seed
+
+
+def test_export_trace_structure():
+    g = fsdp_stack(4, 4)
+    cr = simulate_cluster(g, SYS, TOPO, n_ranks=2, keep_timeline=True)
+    tr = to_chrome_trace(cr, graph=g)
+    evs = tr["traceEvents"]
+    assert tr["metadata"]["schema"] == "flint-trace-v1"
+    # one process_name per rank, compute+comm thread names each
+    pnames = [e for e in evs if e["ph"] == "M" and e["name"] == "process_name"]
+    assert {e["pid"] for e in pnames} == {0, 1}
+    tnames = [e["args"]["name"] for e in evs
+              if e["ph"] == "M" and e["name"] == "thread_name"]
+    assert tnames.count("compute") == 2 and tnames.count("comm") == 2
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert len(xs) == 2 * len(g)
+    assert all(e["tid"] in (0, 1) and "nid" in e["args"]
+               and "fingerprint" in e["args"] for e in xs)
+    # exposed-comm counter track present and returns to zero
+    cs = [e for e in evs if e["ph"] == "C"]
+    assert cs and all(e["name"] == "exposed_comm" for e in cs)
+    assert cs[-1]["args"]["bytes"] == 0.0
+
+
+def test_ingest_external_begin_end_pairs():
+    """A foreign trace (B/E pairs, epoch timestamps, no nid/fingerprint
+    args) still ingests, aligns by name, and validates."""
+    g = chakra.Graph()
+    a = g.add("matmul", chakra.COMP, flops=1e10)
+    g.add("allreduce", chakra.COMM_COLL, deps=[a], comm_kind="all-reduce",
+          comm_bytes=1e6, group=list(range(8)))
+    base = 1.7e15                           # epoch-like offset, us
+    t_mm = 90.0
+    t_ar = 50.0
+    raw = [
+        {"ph": "M", "pid": 7, "tid": 0, "name": "thread_name",
+         "args": {"name": "MainCompute"}},
+        {"ph": "M", "pid": 7, "tid": 9, "name": "thread_name",
+         "args": {"name": "CommStream"}},
+        {"ph": "B", "pid": 7, "tid": 0, "name": "matmul", "ts": base},
+        {"ph": "E", "pid": 7, "tid": 0, "name": "matmul", "ts": base + t_mm},
+        {"ph": "B", "pid": 7, "tid": 9, "name": "allreduce",
+         "ts": base + t_mm},
+        {"ph": "E", "pid": 7, "tid": 9, "name": "allreduce",
+         "ts": base + t_mm + t_ar},
+    ]
+    tl = ingest_chrome_trace(raw)
+    assert tl.ranks() == [7]
+    evs = tl.rank_events(7)
+    assert [e.name for e in evs] == ["matmul", "allreduce"]
+    assert evs[0].stream == "comp" and evs[1].stream == "comm"
+    assert evs[0].start == 0.0 and evs[0].dur == pytest.approx(t_mm * 1e-6)
+    al = align_rank(g, tl, 7)
+    assert al.match_fraction == 1.0
+    rep = validate(g, tl, SYS, TOPO)
+    assert rep.n_matched == 2
+    assert 0.0 <= rep.critical_path_overlap <= 1.0
+
+
+def test_validation_detects_perturbation():
+    """A trace measured on different hardware must show up as error, with
+    offenders attributed to the right op class."""
+    g = fsdp_stack(8, 8)
+    slow = SYS.replace(link_bw=SYS.link_bw * 0.4)
+    res = simulate(g, slow, build_topology(slow), keep_timeline=True)
+    tl = ingest_chrome_trace(to_chrome_trace(res, graph=g))
+    rep = validate(g, tl, SYS, TOPO)
+    assert rep.match_fraction == 1.0          # alignment is error-agnostic
+    assert rep.e2e_error > 0.02
+    assert rep.per_class["COMM_COLL"]["mean_rel_err"] > 0.1
+    assert rep.per_class["COMP"]["mean_rel_err"] < 1e-9
+    assert rep.worst and all(w["type"] == "COMM_COLL" for w in rep.worst)
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+def test_calibration_recovers_perturbed_params():
+    """Acceptance: trace generated under perturbed hbm_bw and link scale;
+    coordinate descent recovers both within 5%, and the calibrated model
+    validates strictly better than the nominal one."""
+    g = fsdp_stack(12, 8)
+    hbm_f, link_f = 0.65, 0.7
+    true_sys = SYS.replace(hbm_bw=SYS.hbm_bw * hbm_f,
+                           link_bw=SYS.link_bw * link_f)
+    res = simulate(g, true_sys, build_topology(true_sys), keep_timeline=True)
+    tl = ingest_chrome_trace(to_chrome_trace(res, graph=g))
+    cal = calibrate(g, tl, SYS, TOPO)
+    assert cal.params["hbm_bw"] == pytest.approx(SYS.hbm_bw * hbm_f,
+                                                 rel=0.05)
+    assert cal.params["link_bw_scale"] == pytest.approx(link_f, rel=0.05)
+    assert cal.fitted_error < cal.initial_error / 5
+    before = validate(g, tl, SYS, TOPO)
+    after = validate(g, tl, cal.system, cal.topology,
+                     compute_derate=cal.compute_derate)
+    assert after.e2e_error < before.e2e_error
+    assert after.e2e_error < 0.01
+
+
+def test_calibration_recovers_compute_derate():
+    g = fsdp_stack(10, 8)
+    res = simulate(g, SYS, TOPO, compute_derate=0.45, keep_timeline=True)
+    tl = ingest_chrome_trace(to_chrome_trace(res, graph=g))
+    cal = calibrate(g, tl, SYS, TOPO)          # starts from 0.6
+    assert cal.compute_derate == pytest.approx(0.45, rel=0.05)
+
+
+def test_calibrated_params_plug_into_dse():
+    """cal.system/.topology/.compute_derate feed dse.explore directly; on
+    an identical config the trial must reproduce the calibrated model's
+    prediction."""
+    g = fsdp_stack(6, 8)
+    true_sys = SYS.replace(hbm_bw=SYS.hbm_bw * 0.7)
+    res = simulate(g, true_sys, build_topology(true_sys), keep_timeline=True)
+    tl = ingest_chrome_trace(to_chrome_trace(res, graph=g))
+    cal = calibrate(g, tl, SYS, TOPO)
+    trials = dse.explore(lambda cfg: g, cal.system,
+                         [dse.Knob("prefetch", [None, 2])],
+                         compute_derate=cal.compute_derate,
+                         topo=cal.topology)
+    assert len(trials) == 2
+    direct = simulate(g, cal.system, cal.topology,
+                      compute_derate=cal.compute_derate).total_time
+    base = next(t for t in trials if t.config["prefetch"] is None)
+    assert base.result.total_time == direct
+    # a trial that sweeps a topology knob rebuilds the topology
+    sweep = dse.explore(lambda cfg: g, cal.system,
+                        [dse.Knob("link_bw", [cal.system.link_bw * 0.5],
+                                  layer="hardware")],
+                        compute_derate=cal.compute_derate,
+                        topo=cal.topology)
+    assert sweep[0].result.total_time > direct
+
+
+def test_calibrate_rejects_unalignable_trace():
+    g = fsdp_stack(2, 4)
+    with pytest.raises(ValueError):
+        calibrate(g, ingest_chrome_trace([]), SYS, TOPO)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_export_validate_calibrate_roundtrip(tmp_path, capsys):
+    g = fsdp_stack(6, 4)
+    gpath = str(tmp_path / "graph.json")
+    tpath = str(tmp_path / "trace.json")
+    cpath = str(tmp_path / "cal.json")
+    rpath = str(tmp_path / "report.json")
+    g.save(gpath)
+    common = ["--chips", "8", "--topology", "switch"]
+    assert trace_cli(["export", gpath, "-o", tpath, "--ranks", "4"]
+                     + common) == 0
+    assert trace_cli(["validate", gpath, tpath, "--json", rpath,
+                      "--max-error", "0.01"] + common) == 0
+    rep = json.load(open(rpath))
+    assert rep["match_fraction"] == 1.0 and rep["n_ranks"] == 4
+    assert trace_cli(["calibrate", gpath, tpath, "-o", cpath, "--validate"]
+                     + common) == 0
+    cal = json.load(open(cpath))
+    assert "system" in cal and "compute_derate" in cal
+    # calibrated-system file round-trips through --system
+    assert trace_cli(["validate", gpath, tpath, "--system", cpath,
+                      "--max-error", "0.01"]) == 0
+    # a wrong hardware model trips the --max-error gate
+    assert trace_cli(["validate", gpath, tpath, "--link-bw", "1e9",
+                      "--max-error", "0.01"] + common) == 1
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# satellites: cluster memoization, group-attr mapping, GIL warning
+# ---------------------------------------------------------------------------
+
+def test_simulate_cluster_result_memoized():
+    """Identical (config, profile-set) cluster calls must reuse the cached
+    result instead of re-running the K-rank engine, and the cached copy
+    must be isolated from caller mutation."""
+    g = rand_graph(random.Random(11), 60)
+    profs = {1: RankProfile(compute_scale=0.5)}
+    a = simulate_cluster(g, SYS, TOPO, n_ranks=4, rank_profiles=profs)
+    cg = compile_graph(g)
+    calls = []
+    orig = cg.run_cluster
+
+    def counting(*args, **kw):
+        calls.append(1)
+        return orig(*args, **kw)
+
+    cg.run_cluster = counting
+    try:
+        b = simulate_cluster(g, SYS, TOPO, n_ranks=4, rank_profiles=profs)
+        assert not calls                      # pure cache hit
+        # different profile set, K, or keep_timeline are distinct entries
+        simulate_cluster(g, SYS, TOPO, n_ranks=4)
+        assert len(calls) == 1
+        simulate_cluster(g, SYS, TOPO, n_ranks=8, rank_profiles=profs)
+        assert len(calls) == 2
+        simulate_cluster(g, SYS, TOPO, n_ranks=4, rank_profiles=profs,
+                         keep_timeline=True)
+        assert len(calls) == 3                # timelines are never cached
+    finally:
+        cg.run_cluster = orig
+    assert b.step_time == a.step_time
+    assert b.rank_times == a.rank_times
+    # mutating a returned result must not poison the cache
+    b.results[0].total_time = -1.0
+    c = simulate_cluster(g, SYS, TOPO, n_ranks=4, rank_profiles=profs)
+    assert c.step_time == a.step_time
+    assert c.results[0].total_time >= 0.0
+
+
+def test_straggler_sweep_reuses_cluster_cache():
+    """Repeating an identical hetero DSE config costs zero extra engine
+    runs (the ROADMAP open item this satellite closes)."""
+    g = fsdp_stack(6, 8)
+    cfg = {"degraded_fraction": 0.25, "degraded_link_scale": 0.5}
+    dse.evaluate(g, SYS, cfg)
+    cg = compile_graph(g)
+    calls = []
+    orig = cg.run_cluster
+    cg.run_cluster = lambda *a, **k: (calls.append(1), orig(*a, **k))[1]
+    try:
+        dse.evaluate(g, SYS, cfg)
+    finally:
+        cg.run_cluster = orig
+    assert not calls
+
+
+def test_group_instances_mapping():
+    # consecutive: historical block tiling
+    assert _group_instances([0, 1], 4) == [(0, 1), (0, 1), (2, 3), (2, 3)]
+    # whole world
+    assert _group_instances(list(range(8)), 4) == [tuple(range(4))] * 4
+    # strided: interleaved instances (cross-pod DP groups)
+    m = _group_instances([0, 2, 4, 6], 8)
+    assert m[0] == m[2] == m[4] == m[6] == (0, 2, 4, 6)
+    assert m[1] == m[3] == m[5] == m[7] == (1, 3, 5, 7)
+    # strided tiling beyond one span
+    m = _group_instances([0, 2], 8)
+    assert m[0] == m[2] == (0, 2) and m[1] == m[3] == (1, 3)
+    assert m[4] == m[6] == (4, 6) and m[5] == m[7] == (5, 7)
+    # stride lattice anchored at the listed group: [5, 9, 13] must form
+    # one instance even though 5 is not span-aligned
+    m = _group_instances([5, 9, 13], 24)
+    assert m[5] == m[9] == m[13] == (5, 9, 13)
+    assert m[17] == m[21] == (17, 21)             # partial tail translate
+    assert m[6] == m[10] == m[14] == (6, 10, 14)  # phase translate
+    assert m[1] is None and m[2] is None          # below the anchor
+    # arbitrary explicit list: translated by span; uncovered ranks solo
+    m = _group_instances([0, 1, 4], 10)
+    assert m[0] == m[1] == m[4] == (0, 1, 4)
+    assert m[5] == m[6] == m[9] == (5, 6, 9)
+    assert m[2] is m[3] is m[7] is m[8] is None
+    # degenerate
+    assert _group_instances([3], 4) == [None] * 4
+
+
+def test_strided_group_barrier_gates_only_its_instance():
+    """group=[0,2,4,6] on 8 ranks: a straggler on an odd rank gates only
+    the odd instance; even ranks stay nominal.  Coalesced == naive."""
+    K = 8
+    g = chakra.Graph()
+    a = g.add("a", chakra.COMP, flops=1.0)
+    c = g.add("c", chakra.COMM_COLL, deps=[a], comm_kind="all-gather",
+              comm_bytes=1e6, group=[0, 2, 4, 6])
+    g.add("b", chakra.COMP, deps=[c], flops=1.0)
+    sysc = SystemConfig(chips=K, topology="switch")
+    topo = build_topology(sysc, K)
+    nominal = simulate(g, sysc, topo).total_time
+    rd = {1: {a: 7e-3}}
+    cr = simulate_cluster(g, sysc, topo, n_ranks=K, rank_durations=rd)
+    for r in (0, 2, 4, 6):
+        assert cr.rank_result(r).total_time == nominal, r
+    for r in (1, 3, 5, 7):
+        assert cr.rank_result(r).total_time > nominal, r
+    assert cr.barrier_wait[3] > 0.0 and cr.barrier_wait[0] == 0.0
+    naive = simulate_cluster(g, sysc, topo, n_ranks=K, rank_durations=rd,
+                             coalesce=False)
+    assert cr.rank_times == naive.rank_times
+    assert cr.barrier_wait == naive.barrier_wait
+
+
+def test_explicit_group_barrier_and_uncovered_ranks():
+    """An arbitrary explicit group gates its translated instances; ranks
+    outside every translate never wait."""
+    K = 10
+    g = chakra.Graph()
+    a = g.add("a", chakra.COMP, flops=1.0)
+    c = g.add("c", chakra.COMM_COLL, deps=[a], comm_kind="all-reduce",
+              comm_bytes=1e6, group=[0, 1, 4])
+    g.add("b", chakra.COMP, deps=[c], flops=1.0)
+    sysc = SystemConfig(chips=K, topology="switch")
+    topo = build_topology(sysc, K)
+    nominal = simulate(g, sysc, topo).total_time
+    rd = {9: {a: 7e-3}}                       # straggler in instance {5,6,9}
+    cr = simulate_cluster(g, sysc, topo, n_ranks=K, rank_durations=rd)
+    for r in (0, 1, 2, 3, 4, 7, 8):
+        assert cr.rank_result(r).total_time == nominal, r
+    for r in (5, 6):
+        assert cr.rank_result(r).total_time > nominal, r
+    naive = simulate_cluster(g, sysc, topo, n_ranks=K, rank_durations=rd,
+                             coalesce=False)
+    assert cr.rank_times == naive.rank_times
+
+
+def test_strided_groups_roundtrip_through_trace():
+    """Cluster trace export keeps per-instance skew: the strided-group
+    barrier shows up in the ingested timeline's per-rank totals."""
+    K = 4
+    g = chakra.Graph()
+    a = g.add("a", chakra.COMP, flops=1e9)
+    g.add("c", chakra.COMM_COLL, deps=[a], comm_kind="all-reduce",
+          comm_bytes=1e6, group=[0, 2])
+    profs = {0: RankProfile(compute_scale=0.5)}
+    cr = simulate_cluster(g, SYS, TOPO, n_ranks=K, rank_profiles=profs,
+                          keep_timeline=True)
+    tl = ingest_chrome_trace(to_chrome_trace(cr, graph=g))
+    rep = validate(g, tl, SYS, TOPO, rank_profiles=profs)
+    assert rep.match_fraction == 1.0 and rep.e2e_error < 1e-9
+    assert tl.total_time(2) == tl.total_time(0)   # gated by rank 0
+    assert tl.total_time(1) < tl.total_time(0)    # odd instance unaffected
+
+
+def test_explore_parallel_warns_gil_once():
+    import warnings
+
+    g = rand_graph(random.Random(3), 30)
+    knobs = [dse.Knob("prefetch", [None, 2])]
+    dse._gil_pool_warned = False
+    try:
+        with pytest.warns(RuntimeWarning, match="GIL"):
+            dse.explore(lambda cfg: g, SYS, knobs, parallel=2)
+        with warnings.catch_warnings():        # second call stays silent
+            warnings.simplefilter("error")
+            dse.explore(lambda cfg: g, SYS, knobs, parallel=2)
+            dse.explore(lambda cfg: g, SYS, knobs)   # serial never warns
+    finally:
+        dse._gil_pool_warned = False
+
+
+def test_span_accessors():
+    g = fsdp_stack(3, 4)
+    res = simulate(g, SYS, TOPO, keep_timeline=True)
+    spans = res.spans()
+    assert all(isinstance(s, Span) for s in spans)
+    assert all(s.duration == s.end - s.start for s in spans)
+    with pytest.raises(ValueError):
+        simulate(g, SYS, TOPO).spans()
+    cr = simulate_cluster(g, SYS, TOPO, n_ranks=2, keep_timeline=True)
+    flat = cr.spans()
+    assert {r for r, _ in flat} == {0, 1}
+    assert len(flat) == 2 * len(g)
+    assert g.node(0).fingerprint() == f"{g.node(0).name}|{g.node(0).type}"
