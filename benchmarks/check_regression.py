@@ -1,24 +1,29 @@
-"""Benchmark regression gate: fail if BENCH_sim speedup ratios or the
-trace subsystem's round-trip/calibration figures fall below the floors
-recorded in benchmarks/thresholds.json.
+"""Benchmark regression gate: fail if BENCH_sim speedup ratios, the trace
+subsystem's round-trip/calibration figures or the search subsystem's
+sample-efficiency figures fall below the floors recorded in
+benchmarks/thresholds.json.
 
 Usage (the verify recipe's perf gate):
 
     PYTHONPATH=.:src python -m benchmarks.sim_bench --smoke
     PYTHONPATH=.:src python -m benchmarks.trace_roundtrip --smoke
+    PYTHONPATH=.:src python -m benchmarks.search_bench --smoke
     PYTHONPATH=.:src python -m benchmarks.check_regression
 
 or in one shot::
 
     PYTHONPATH=.:src python -m benchmarks.check_regression --run-smoke
 
-Reads artifacts/bench/BENCH_sim.json and BENCH_trace.json (``--bench`` /
-``--trace-bench`` to override).  The speedup floors are deliberately
-conservative — they hold for both the full and ``--smoke`` matrices on a
-loaded machine — so a failure means the engine actually regressed, not
-that the box was busy; the trace floors are correctness contracts
-(alignment, round-trip accuracy, calibration recovery).  Exit code 1 on
-regression, 2 on missing inputs.
+Reads artifacts/bench/BENCH_sim.json, BENCH_trace.json and
+BENCH_search.json (``--bench`` / ``--trace-bench`` / ``--search-bench`` to
+override).  The speedup floors are deliberately conservative — they hold
+for both the full and ``--smoke`` matrices on a loaded machine — so a
+failure means the engine actually regressed, not that the box was busy;
+the trace floors are correctness contracts (alignment, round-trip
+accuracy, calibration recovery) and the search floors are the ISSUE
+acceptance bound (bayesian/evolutionary within 2% of the exhaustive grid
+optimum on <= 25% of its trials).  Exit code 1 on regression, 2 on
+missing inputs.
 """
 from __future__ import annotations
 
@@ -32,6 +37,8 @@ DEFAULT_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
                              "BENCH_sim.json")
 DEFAULT_TRACE_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
                                    "BENCH_trace.json")
+DEFAULT_SEARCH_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
+                                    "BENCH_search.json")
 DEFAULT_THRESH = os.path.join(HERE, "thresholds.json")
 
 
@@ -49,7 +56,7 @@ def check(bench: dict, thresholds: dict) -> list:
     for size, row in sorted(bench.get("simulate", {}).items()):
         for key, floor in sim_floors.items():
             one(f"simulate.{size}", key, floor, row.get(key))
-    for section in ("straggler", "explore", "trace"):
+    for section in ("straggler", "explore", "trace", "search"):
         for key, floor in thresholds.get(section, {}).items():
             one(section, key, floor, bench.get(section, {}).get(key))
     return bad
@@ -61,30 +68,37 @@ def main(argv=None) -> int:
                     help="BENCH_sim.json path")
     ap.add_argument("--trace-bench", default=DEFAULT_TRACE_BENCH,
                     help="BENCH_trace.json path")
+    ap.add_argument("--search-bench", default=DEFAULT_SEARCH_BENCH,
+                    help="BENCH_search.json path")
     ap.add_argument("--thresholds", default=DEFAULT_THRESH)
     ap.add_argument("--run-smoke", action="store_true",
                     help="run `sim_bench --smoke` + `trace_roundtrip "
-                         "--smoke` first to produce the bench files")
+                         "--smoke` + `search_bench --smoke` first to "
+                         "produce the bench files")
     args = ap.parse_args(argv)
 
     if args.run_smoke:
-        from benchmarks import sim_bench, trace_roundtrip
+        from benchmarks import search_bench, sim_bench, trace_roundtrip
         sim_bench.main(["--smoke"])
         trace_roundtrip.main(["--smoke"])
+        search_bench.main(["--smoke"])
 
-    if not os.path.exists(args.bench):
-        print(f"check_regression: no bench file at {args.bench} "
-              "(run benchmarks.sim_bench first, or pass --run-smoke)")
-        return 2
-    with open(args.bench) as f:
-        bench = json.load(f)
-    if os.path.exists(args.trace_bench):
-        with open(args.trace_bench) as f:
-            bench["trace"] = json.load(f)
-    else:
-        print(f"check_regression: no trace bench at {args.trace_bench} "
-              "(run benchmarks.trace_roundtrip first, or pass --run-smoke)")
-        return 2
+    bench = {}
+    for path, key, producer in ((args.bench, None, "sim_bench"),
+                                (args.trace_bench, "trace",
+                                 "trace_roundtrip"),
+                                (args.search_bench, "search",
+                                 "search_bench")):
+        if not os.path.exists(path):
+            print(f"check_regression: no bench file at {path} "
+                  f"(run benchmarks.{producer} first, or pass --run-smoke)")
+            return 2
+        with open(path) as f:
+            payload = json.load(f)
+        if key is None:
+            bench.update(payload)
+        else:
+            bench[key] = payload
     with open(args.thresholds) as f:
         thresholds = {k: v for k, v in json.load(f).items()
                       if not k.startswith("_")}

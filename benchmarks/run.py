@@ -13,8 +13,11 @@
                            chip generations, degraded pods, coalescing
   trace_roundtrip  (ours)  trace subsystem: export->ingest->validate
                            round-trip exactness + calibration recovery
-  check_regression (gate)  fails if BENCH_sim speedups or BENCH_trace
-                           round-trip/calibration figures fall below
+  search_bench     (ours)  search strategies: trials-to-within-2%-of-grid
+                           sample efficiency per strategy
+  check_regression (gate)  fails if BENCH_sim speedups, BENCH_trace
+                           round-trip/calibration or BENCH_search
+                           sample-efficiency figures fall below
                            benchmarks/thresholds.json floors
 
 Each bench runs in its own subprocess so it controls its fake-device count
@@ -26,7 +29,8 @@ import time
 
 BENCHES = ["opcounts", "e2e_validation", "fsdp_reorder", "bandwidth_sweep",
            "wafer_tacos", "nic_degradation", "roofline", "sim_bench",
-           "hetero_cluster", "trace_roundtrip", "check_regression"]
+           "hetero_cluster", "trace_roundtrip", "search_bench",
+           "check_regression"]
 
 
 def main() -> None:

@@ -5,17 +5,18 @@ from repro.core.costmodel.collectives import (collective_time,
                                               synthesize_2d_time,
                                               synthesize_2d_p2p)
 from repro.core.costmodel.compiled import CompiledGraph, compile_graph
-from repro.core.costmodel.simulator import (simulate, simulate_batch,
-                                            simulate_cluster,
+from repro.core.costmodel.simulator import (simulate, simulate_analytic,
+                                            simulate_batch, simulate_cluster,
                                             straggler_analysis, SimResult,
-                                            ClusterSimResult, node_duration)
+                                            ClusterSimResult, node_duration,
+                                            peak_memory_proxy)
 from repro.core.costmodel.analytical import (roofline, RooflineTerms,
                                              model_flops_per_step)
 
 __all__ = ["Topology", "Switch", "Ring", "Torus2D", "Wafer2D", "MultiPod",
            "RankProfile", "build_topology", "collective_time",
            "synthesize_2d_time", "synthesize_2d_p2p", "CompiledGraph",
-           "compile_graph", "simulate", "simulate_batch", "simulate_cluster",
-           "straggler_analysis", "SimResult", "ClusterSimResult",
-           "node_duration", "roofline", "RooflineTerms",
-           "model_flops_per_step"]
+           "compile_graph", "simulate", "simulate_analytic", "simulate_batch",
+           "simulate_cluster", "straggler_analysis", "SimResult",
+           "ClusterSimResult", "node_duration", "peak_memory_proxy",
+           "roofline", "RooflineTerms", "model_flops_per_step"]

@@ -151,6 +151,7 @@ class CompiledGraph:
         self._dur_cache: Dict = {}
         self._result_cache: Dict = {}
         self._canon_cache: Dict = {}           # canonical collective order
+        self._mem_proxy: Optional[float] = None
 
     # -- CSR views -----------------------------------------------------------
     def csr(self, kind: str):
@@ -262,6 +263,51 @@ class CompiledGraph:
             dur_l[nid] = t
         self._dur_cache[key] = dur_l
         return dur_l
+
+    # -- analytical proxies (search subsystem's cheap fidelities) ------------
+    def peak_memory_proxy(self) -> float:
+        """Durations-free per-rank peak-memory estimate (bytes): the liveness
+        scan of ``run()`` (allocate ``out_bytes`` at the producer, free after
+        the last data consumer) replayed over the canonical topological order
+        instead of a scheduled timeline.  Independent of (system, topology),
+        so it prices the memory axis of a multi-objective search without an
+        event loop — graph passes that move allocations (prefetch hoisting,
+        bucketing) change it exactly as they change the scheduled peak.
+        Memoized per compiled graph."""
+        if self._mem_proxy is not None:
+            return self._mem_proxy
+        out_b = self._out_bytes
+        ddeps = self._ddeps
+        dcount = self._dcount0[:]
+        live = peak = 0.0
+        for nid in self._order:
+            ob = out_b[nid]
+            if ob:
+                live += ob
+                if live > peak:
+                    peak = live
+            for dd in ddeps[nid]:
+                r = dcount[dd] - 1
+                dcount[dd] = r
+                if r <= 0:
+                    ob = out_b[dd]
+                    if ob:
+                        live -= ob
+        self._mem_proxy = peak
+        return peak
+
+    def analytic_estimate(self, dur: List[float], overlap: bool = True):
+        """Roofline-style step-time bound from a duration vector, no event
+        loop: busy time per stream is a plain sum, the step can take no less
+        than the busier stream (overlap) or their sum (no overlap).  Returns
+        ``(total, compute_busy, comm_busy)`` — the proxy fidelity the search
+        subsystem's successive-halving rungs price candidates with before
+        promoting survivors to a full ``run()``."""
+        d = np.asarray(dur, dtype=np.float64)
+        comm = float(d[self.is_comm].sum())
+        comp = float(d.sum()) - comm
+        total = max(comp, comm) if overlap else comp + comm
+        return total, comp, comm
 
     # -- event loop ----------------------------------------------------------
     def run(self, dur: List[float], overlap: bool = True,

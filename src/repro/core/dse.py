@@ -19,6 +19,13 @@ explore() walks a knob grid; work is reused at every layer of the stack:
     concurrent.futures thread pool (trial evaluation releases no locks and
     the caches are GIL-safe dict ops; results are identical to serial).
 
+``explore(strategy=...)`` is a thin adapter over the search subsystem
+(``repro.search``): "grid" keeps the exhaustive walk above bit-identically,
+while "random" / "bayesian" / "evolutionary" / "halving" route through
+``SearchRun`` — model-guided, budgeted, seeded.  Multi-objective Pareto
+searches, wall-clock budgets and JSONL checkpoint/resume live on
+``SearchRun`` directly.
+
 Heterogeneous-cluster knobs (hardware layer): ``degraded_fraction`` /
 ``degraded_link_scale`` (a fraction of ranks with degraded NICs),
 ``slow_chip_ratio`` / ``slow_chip_scale`` (a fraction of ranks from an
@@ -32,7 +39,6 @@ partially-degraded clusters exactly like any other hardware knob.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import math
 import warnings
 from concurrent.futures import ThreadPoolExecutor
@@ -52,6 +58,28 @@ class Knob:
     layer: str = "software"       # workload | software | hardware
 
 
+def json_value(v):
+    """JSON-native view of a knob value: scalars (None/bool/int/float/str)
+    pass through unchanged (numpy scalars unwrap, non-finite floats
+    stringify), sequences recurse, anything else falls back to ``str`` —
+    so Trial/search-checkpoint artifacts round-trip through JSON without
+    the type loss the old ``str(v)`` blanket caused (``"None"``, ``"64000000.0"``)."""
+    item = getattr(v, "item", None)
+    if item is not None and callable(item) and not isinstance(
+            v, (bool, int, float, str)):
+        try:
+            v = item()                   # numpy scalar -> python scalar
+        except (TypeError, ValueError):
+            pass
+    if v is None or isinstance(v, (bool, int, str)):
+        return v
+    if isinstance(v, float):
+        return v if math.isfinite(v) else str(v)
+    if isinstance(v, (list, tuple)):
+        return [json_value(x) for x in v]
+    return str(v)
+
+
 @dataclasses.dataclass
 class Trial:
     config: Dict
@@ -59,7 +87,7 @@ class Trial:
     objective: float
 
     def as_dict(self):
-        return {"config": {k: str(v) for k, v in self.config.items()},
+        return {"config": {k: json_value(v) for k, v in self.config.items()},
                 "objective": self.objective, **self.result.as_dict()}
 
 
@@ -140,6 +168,35 @@ def _sw_key(cfg: Dict) -> tuple:
     return tuple((k, str(cfg.get(k))) for k in _SOFTWARE_KNOBS)
 
 
+class GraphMemo:
+    """Capture + software-pass memoization — THE shared evaluator plumbing
+    of ``explore``, ``greedy_descent`` and ``repro.search.SearchRun``: one
+    ``graph_for`` call per distinct workload-knob assignment, one pass
+    application per distinct (workload, software-knob) pair, so every
+    consumer prices identical configs against identical graphs."""
+
+    def __init__(self, graph_for: Callable[[Dict], chakra.Graph],
+                 wl_names) -> None:
+        self.graph_for = graph_for
+        self.wl_names = list(wl_names)
+        self._graphs: Dict = {}
+        self._transformed: Dict = {}
+
+    def wl_key(self, cfg: Dict) -> tuple:
+        return tuple(sorted((n, str(cfg.get(n))) for n in self.wl_names))
+
+    def transformed(self, cfg: Dict) -> chakra.Graph:
+        key = self.wl_key(cfg)
+        g = self._graphs.get(key)
+        if g is None:
+            g = self._graphs[key] = self.graph_for(cfg)
+        skey = (key, _sw_key(cfg))
+        g2 = self._transformed.get(skey)
+        if g2 is None:
+            g2 = self._transformed[skey] = apply_software_knobs(g, cfg)
+        return g2
+
+
 def _system_for(system, cfg: Dict):
     for k in _SYSTEM_KNOBS:
         if k in cfg:
@@ -188,15 +245,40 @@ def explore(graph_for: Callable[[Dict], chakra.Graph], system,
             strategy: str = "grid", budget: int = 256,
             parallel: Optional[int] = None,
             compute_derate: float = 0.6,
-            topo: Optional[Topology] = None) -> List[Trial]:
+            topo: Optional[Topology] = None, seed: int = 0) -> List[Trial]:
     """graph_for(workload_config) -> Chakra graph (cached by key).
 
-    `parallel=N` evaluates trials on N threads (identical results, sorted
-    the same; capture and pass application stay serial so graph mutation
-    never races).  `compute_derate`/`topo` accept trace-calibrated
-    parameters (repro.trace.calibrate): pass ``cal.compute_derate`` and
-    ``cal.topology`` so every trial prices against the fitted hardware.
-    Returns trials sorted by objective (ascending)."""
+    `strategy` names a registered search strategy (``repro.search``:
+    "grid", "random", "bayesian", "evolutionary", "halving"); an unknown
+    name raises listing the registry.  "grid" walks the exhaustive knob
+    grid in declaration order exactly as it always has; every other
+    strategy routes through ``repro.search.SearchRun`` with `seed` and
+    returns its full-fidelity trials, budgeted to `budget` evaluations.
+
+    `parallel=N` (grid only) evaluates trials on N threads (identical
+    results, sorted the same; capture and pass application stay serial so
+    graph mutation never races).  `compute_derate`/`topo` accept
+    trace-calibrated parameters (repro.trace.calibrate): pass
+    ``cal.compute_derate`` and ``cal.topology`` so every trial prices
+    against the fitted hardware.  Returns trials sorted by objective
+    (ascending)."""
+    from repro.search.space import SearchSpace
+    from repro.search.strategies import STRATEGIES, available_strategies
+    if strategy not in STRATEGIES:
+        raise ValueError(
+            f"unknown search strategy {strategy!r}: available strategies "
+            f"are {available_strategies()}")
+    if strategy != "grid":
+        from repro.search.run import SearchRun
+        run = SearchRun(graph_for, system, knobs, strategy=strategy,
+                        objectives=(objective,), budget=budget, seed=seed,
+                        compute_derate=compute_derate, topo=topo)
+        sr = run.run()
+        trials = [Trial(t.config, t.result, t.objectives[objective])
+                  for t in sr.full_trials]
+        trials.sort(key=lambda t: t.objective)
+        return trials
+
     global _gil_pool_warned
     if parallel and parallel > 1 and not _gil_pool_warned:
         warnings.warn(
@@ -206,30 +288,19 @@ def explore(graph_for: Callable[[Dict], chakra.Graph], system,
             "A process-pool path needs picklable graph_for callables.",
             RuntimeWarning, stacklevel=2)
         _gil_pool_warned = True
-    wl_knobs = [k for k in knobs if k.layer == "workload"]
-    graph_cache: Dict = {}
-    sw_cache: Dict = {}
-
-    def wl_key(cfg):
-        return tuple(sorted((k.name, str(cfg.get(k.name))) for k in wl_knobs))
-
-    combos = itertools.product(*[[(k.name, v) for v in k.values]
-                                 for k in knobs]) if knobs else [()]
-    cfgs = [dict(c) for c in itertools.islice(combos, budget)]
+    memo = GraphMemo(graph_for,
+                     [k.name for k in knobs if k.layer == "workload"])
+    cfgs = list(SearchSpace.from_knobs(knobs).grid_configs(limit=budget))
 
     # serial phase: capture per distinct workload, transform per distinct
-    # (workload, software) pair — both memoized
+    # (workload, software) pair — both memoized, so the thread pool below
+    # only ever reads the caches (graph mutation never races)
     for cfg in cfgs:
-        key = wl_key(cfg)
-        if key not in graph_cache:
-            graph_cache[key] = graph_for(cfg)  # recapture only on wl change
-        skey = (key, _sw_key(cfg))
-        if skey not in sw_cache:
-            sw_cache[skey] = apply_software_knobs(graph_cache[key], cfg)
+        memo.transformed(cfg)
 
     def run_trial(cfg: Dict) -> Trial:
-        g2 = sw_cache[(wl_key(cfg), _sw_key(cfg))]
-        res = _simulate_cfg(g2, system, cfg, compute_derate, topo)
+        res = _simulate_cfg(memo.transformed(cfg), system, cfg,
+                            compute_derate, topo)
         return Trial(cfg, res, getattr(res, objective))
 
     if parallel and parallel > 1:
@@ -250,27 +321,17 @@ def greedy_descent(graph_for, system, knobs: List[Knob],
     Captures, software-pass applications AND full-config evaluations are
     memoized, so revisiting a config while sweeping other knobs is free."""
     current = {k.name: k.values[0] for k in knobs}
-    graph_cache: Dict = {}
-    sw_cache: Dict = {}
+    memo = GraphMemo(graph_for,
+                     [k.name for k in knobs if k.layer == "workload"])
     trial_cache: Dict = {}
-
-    def wl_key(cfg):
-        return tuple(sorted((k.name, str(cfg.get(k.name))) for k in knobs
-                            if k.layer == "workload"))
 
     def eval_cfg(cfg):
         ckey = tuple(sorted((k, str(v)) for k, v in cfg.items()))
         hit = trial_cache.get(ckey)
         if hit is not None:
             return hit
-        key = wl_key(cfg)
-        if key not in graph_cache:
-            graph_cache[key] = graph_for(cfg)
-        skey = (key, _sw_key(cfg))
-        if skey not in sw_cache:
-            sw_cache[skey] = apply_software_knobs(graph_cache[key], cfg)
-        res = _simulate_cfg(sw_cache[skey], system, cfg, compute_derate,
-                            topo)
+        res = _simulate_cfg(memo.transformed(cfg), system, cfg,
+                            compute_derate, topo)
         t = Trial(dict(cfg), res, getattr(res, objective))
         trial_cache[ckey] = t
         return t

@@ -1,0 +1,37 @@
+"""Search subsystem: pluggable strategies over the joint DSE knob space.
+
+The layer that turns the fast simulator (compiled event-loop replay,
+per-config memoization, calibrated cost models) into an exploration engine:
+
+  * ``SearchSpace`` / ``Dim`` — encode categorical / ordinal / continuous
+    knobs across all three paper layers, hetero cluster knobs included
+    (``space``).
+  * ``Strategy`` protocol + registry — ``grid``, ``random``, ``bayesian``
+    (GP + expected improvement, pure numpy), ``evolutionary``, ``halving``
+    (successive halving over proxy fidelities) — ``strategies``.
+  * multi-objective support — step time / exposed comm / analytical
+    peak-memory proxy, scalarization + Pareto-front extraction
+    (``objectives``).
+  * ``SearchRun`` — trial + wall-clock budgets, JSONL checkpoint/resume
+    (``run``), and a ``python -m repro.search`` CLI (``cli``) that accepts
+    ``--system cal.json`` from the trace calibrator.
+
+``dse.explore(strategy=...)`` is a thin adapter over this package.
+"""
+from repro.search.objectives import (DEFAULT_OBJECTIVES, default_weights,
+                                     dominates, pareto_front, scalarize,
+                                     trial_objectives)
+from repro.search.run import SearchResult, SearchRun, SearchTrial
+from repro.search.space import (CATEGORICAL, CONTINUOUS, ORDINAL, Dim,
+                                SearchSpace)
+from repro.search.strategies import (FIDELITY_ANALYTIC, FIDELITY_FULL,
+                                     FIDELITY_SYMMETRIC, STRATEGIES,
+                                     Strategy, available_strategies,
+                                     get_strategy, register_strategy)
+
+__all__ = ["SearchSpace", "Dim", "ORDINAL", "CATEGORICAL", "CONTINUOUS",
+           "Strategy", "STRATEGIES", "register_strategy", "get_strategy",
+           "available_strategies", "FIDELITY_ANALYTIC", "FIDELITY_SYMMETRIC",
+           "FIDELITY_FULL", "SearchRun", "SearchResult", "SearchTrial",
+           "DEFAULT_OBJECTIVES", "trial_objectives", "scalarize",
+           "default_weights", "dominates", "pareto_front"]

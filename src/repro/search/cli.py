@@ -1,0 +1,210 @@
+"""``python -m repro.search`` — budgeted model-guided DSE from the shell.
+
+    # bayesian search over software + hardware knobs of a captured graph,
+    # checkpointed so a killed run resumes where it left off
+    python -m repro.search run graph.json --strategy bayesian --budget 64 \\
+        --knob "prefetch=0,2,4,8" --knob "bucket_bytes=null,64e6" \\
+        --knob "link_bw=12.5e9,50e9,100e9@hardware" \\
+        --checkpoint run.jsonl
+
+    # multi-objective Pareto search on a trace-calibrated cost model
+    python -m repro.search run graph.json --system calibrated.json \\
+        --objectives total_time,peak_memory_proxy \\
+        --knob "prefetch=0,1,2,4,8,16" --strategy random --budget 48
+
+    # inspect a finished / interrupted run
+    python -m repro.search front run.jsonl
+    python -m repro.search strategies
+
+Knob syntax: ``name=v1,v2,...[@layer]`` — values parse as JSON (``null``,
+``true``, numbers, strings), layer defaults to software; ``hardware``
+covers system + hetero cluster knobs.  ``workload`` knobs are rejected
+here: they need recapture per value, which only the Python API
+(``SearchRun`` with a ``graph_for`` callable) can do.
+``--system cal.json`` loads the output of ``python -m repro.trace
+calibrate -o cal.json`` so the search prices against fitted hardware.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core import chakra
+from repro.core.dse import Knob
+from repro.search.run import SearchRun
+from repro.search.strategies import available_strategies
+from repro.trace.calibrate import system_from_flags
+
+
+def _parse_value(tok: str):
+    try:
+        return json.loads(tok)
+    except json.JSONDecodeError:
+        try:
+            return float(tok)            # bare 64e6 etc.
+        except ValueError:
+            return tok
+
+
+def parse_knob(spec: str) -> Knob:
+    """``name=v1,v2,...[@layer]`` -> Knob."""
+    if "=" not in spec:
+        raise ValueError(f"bad --knob {spec!r}: expected name=v1,v2[@layer]")
+    name, rest = spec.split("=", 1)
+    layer = "software"
+    if "@" in rest:
+        rest, layer = rest.rsplit("@", 1)
+        if layer not in ("workload", "software", "hardware"):
+            raise ValueError(f"bad --knob layer {layer!r}")
+    values = [_parse_value(t) for t in rest.split(",") if t != ""]
+    if not values:
+        raise ValueError(f"bad --knob {spec!r}: no values")
+    return Knob(name.strip(), values, layer=layer)
+
+
+def _cmd_run(args) -> int:
+    try:
+        return _run_checked(args)
+    except ValueError as e:
+        # bad --knob specs, unknown strategies/objectives, checkpoint
+        # header mismatches: user errors, not tracebacks
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+
+def _run_checked(args) -> int:
+    g = chakra.Graph.load(args.graph)
+    sysc, derate = system_from_flags(
+        args, flags=("chips", "topology", "link_bw", "peak_flops",
+                     "hbm_bw"))
+    knobs = [parse_knob(s) for s in args.knob]
+    if not knobs:
+        print("error: need at least one --knob", file=sys.stderr)
+        return 2
+    wl = [k.name for k in knobs if k.layer == "workload"]
+    if wl:
+        # the CLI evaluates ONE pre-captured graph; a workload knob needs
+        # graph_for to recapture per value, which only the Python API
+        # (SearchRun(graph_for=...)) can do — searching it here would
+        # silently sweep a no-op axis
+        print(f"error: workload-layer knobs {wl} need recapture per value; "
+              "use the Python API (repro.search.SearchRun with a graph_for "
+              "callable) — the CLI searches one captured graph "
+              "(software/hardware layers only)", file=sys.stderr)
+        return 2
+    objectives = [o.strip() for o in args.objectives.split(",") if o.strip()]
+    weights = None
+    if args.weights:
+        weights = [float(w) for w in args.weights.split(",")]
+    run = SearchRun(lambda cfg: g, sysc, knobs, strategy=args.strategy,
+                    objectives=objectives, weights=weights,
+                    budget=args.budget, wall_clock=args.wall_clock,
+                    seed=args.seed, checkpoint=args.checkpoint,
+                    compute_derate=derate)
+    res = run.run()
+    print(res.summary())
+    if len(objectives) > 1:
+        for t in sorted(res.pareto_trials(), key=lambda t: t.objective):
+            obj = ", ".join(f"{k}={v:.4g}" for k, v in t.objectives.items())
+            print(f"  front #{t.index}: {t.config} -> {obj}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"strategy": res.strategy,
+                       "objectives": list(res.objective_names),
+                       "best": res.best.as_dict() if res.best else None,
+                       "pareto": [t.as_dict() for t in res.pareto_trials()],
+                       "trials": [t.as_dict() for t in res.trials]},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
+    return 0
+
+
+def _cmd_front(args) -> int:
+    """Best + Pareto front straight from a checkpoint JSONL (no re-run)."""
+    from repro.search.objectives import pareto_front
+    from repro.search.run import read_checkpoint
+    try:
+        head, trials, _ = read_checkpoint(args.checkpoint)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if head is None:
+        print(f"error: {args.checkpoint} is empty", file=sys.stderr)
+        return 2
+    names = head["objectives"]
+    full = [t for t in trials if t.get("fidelity", 1.0) >= 1.0]
+    print(f"{args.checkpoint}: strategy={head['strategy']} "
+          f"seed={head['seed']} trials={len(trials)} full={len(full)} "
+          f"objectives={names}")
+    if not full:
+        return 0
+    best = min(full, key=lambda t: t["objective"])
+    print(f"best #{best['index']}: {best['config']} -> {best['objectives']}")
+    for i in pareto_front([t["objectives"] for t in full], names):
+        t = full[i]
+        print(f"  front #{t['index']}: {t['config']} -> {t['objectives']}")
+    return 0
+
+
+def _cmd_strategies(args) -> int:
+    for name in available_strategies():
+        print(name)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.search", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    rn = sub.add_parser("run", help="search a knob space over a graph")
+    rn.add_argument("graph", help="chakra graph JSON (Graph.save output)")
+    rn.add_argument("--knob", action="append", default=[],
+                    metavar="NAME=V1,V2[@LAYER]",
+                    help="repeatable; JSON values, layer in "
+                         "workload|software|hardware")
+    rn.add_argument("--strategy", default="random",
+                    help=f"one of {available_strategies()}")
+    rn.add_argument("--budget", type=int, default=64,
+                    help="max evaluations, resumed trials included")
+    rn.add_argument("--wall-clock", type=float, default=None,
+                    help="max seconds of search time")
+    rn.add_argument("--objectives", default="total_time",
+                    help="comma-separated, minimized (SimResult fields "
+                         "or peak_memory_proxy)")
+    rn.add_argument("--weights", default=None,
+                    help="comma-separated scalarization weights")
+    rn.add_argument("--seed", type=int, default=0)
+    rn.add_argument("--checkpoint", default=None, metavar="JSONL",
+                    help="append trials here; an existing file resumes "
+                         "without re-evaluating (same strategy/seed/"
+                         "budget/knobs required)")
+    rn.add_argument("--out", default=None, help="write result JSON")
+    rn.add_argument("--system", default=None, metavar="JSON",
+                    help="calibrated system from `repro.trace calibrate -o`")
+    rn.add_argument("--chips", type=int, default=None)
+    rn.add_argument("--topology", default=None)
+    rn.add_argument("--link-bw", type=float, default=None, dest="link_bw")
+    rn.add_argument("--peak-flops", type=float, default=None,
+                    dest="peak_flops")
+    rn.add_argument("--hbm-bw", type=float, default=None, dest="hbm_bw")
+    rn.add_argument("--derate", type=float, default=None)
+    rn.set_defaults(fn=_cmd_run)
+
+    fr = sub.add_parser("front", help="print best + Pareto front of a "
+                                      "checkpoint")
+    fr.add_argument("checkpoint")
+    fr.set_defaults(fn=_cmd_front)
+
+    st = sub.add_parser("strategies", help="list registered strategies")
+    st.set_defaults(fn=_cmd_strategies)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

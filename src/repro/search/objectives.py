@@ -1,0 +1,97 @@
+"""Multi-objective support: metric extraction, scalarization, Pareto front.
+
+A search minimizes a tuple of named objectives per trial.  Objective names
+resolve against the ``SimResult`` / ``ClusterSimResult`` the cost model
+returned (``total_time``, ``exposed_comm``, ``comm_time``, ``peak_bytes``,
+``max_barrier_wait``, ...) plus ``peak_memory_proxy`` — the analytical
+per-rank liveness bound priced straight off the (transformed) graph, so the
+memory axis costs nothing even at proxy fidelities where no event loop ran.
+
+Strategies need one scalar to rank candidates, so multi-objective values are
+scalarized: a weighted sum of objectives normalized by a reference point
+(the first completed trial's values, recorded in the checkpoint header's
+position — deterministic and resume-stable).  The *report* keeps the full
+vectors: ``pareto_front`` extracts the non-dominated set, which is the
+artifact a step-time / exposed-comm / peak-memory DSE actually wants.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+DEFAULT_OBJECTIVES = ("total_time",)
+
+#: objective names that do not live on the sim result
+_GRAPH_METRICS = ("peak_memory_proxy",)
+
+
+def trial_objectives(result, names: Sequence[str], graph=None) -> Dict:
+    """Extract the named objective values for one evaluated trial.
+
+    `result` is whatever the simulator returned (SimResult /
+    ClusterSimResult duck-type the same scalar fields); `graph` is the
+    transformed graph the trial simulated — required only for
+    ``peak_memory_proxy``."""
+    out: Dict[str, float] = {}
+    for name in names:
+        if name == "peak_memory_proxy":
+            if graph is None:
+                raise ValueError("peak_memory_proxy objective needs the "
+                                 "transformed trial graph")
+            from repro.core.costmodel.simulator import peak_memory_proxy
+            out[name] = float(peak_memory_proxy(graph))
+        else:
+            try:
+                out[name] = float(getattr(result, name))
+            except AttributeError:
+                raise ValueError(
+                    f"unknown objective {name!r}: not a field of "
+                    f"{type(result).__name__} and not one of "
+                    f"{_GRAPH_METRICS}") from None
+    return out
+
+
+def scalarize(values: Dict, names: Sequence[str],
+              weights: Sequence[float], ref: Dict) -> float:
+    """Weighted sum of `values[name] / ref[name]` — minimized.
+
+    Normalizing by the reference point puts seconds and bytes on one scale;
+    a zero reference component falls back to 1.0 (the raw value)."""
+    total = 0.0
+    for name, w in zip(names, weights):
+        r = ref.get(name) or 1.0
+        total += w * values[name] / r
+    return total
+
+
+def default_weights(names: Sequence[str]) -> List[float]:
+    n = len(names)
+    return [1.0 / n] * n
+
+
+def dominates(a: Dict, b: Dict, names: Sequence[str]) -> bool:
+    """a dominates b: no worse on every objective, strictly better on one."""
+    better = False
+    for name in names:
+        av, bv = a[name], b[name]
+        if av > bv:
+            return False
+        if av < bv:
+            better = True
+    return better
+
+
+def pareto_front(values: Sequence[Dict], names: Sequence[str]) -> List[int]:
+    """Indices of the non-dominated entries of `values` (all objectives
+    minimized), in input order; duplicate points all survive."""
+    n = len(values)
+    keep = []
+    for i in range(n):
+        vi = values[i]
+        dominated = False
+        for j in range(n):
+            if j != i and dominates(values[j], vi, names):
+                dominated = True
+                break
+        if not dominated:
+            keep.append(i)
+    return keep

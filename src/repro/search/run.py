@@ -1,0 +1,364 @@
+"""``SearchRun``: the budgeted, resumable driver of one DSE search.
+
+Owns everything a strategy does not: evaluation (reusing the dse layer's
+capture / software-pass / compiled-simulator caching and its hetero-knob
+routing onto ``simulate_cluster``), proxy-fidelity routing for successive
+halving, multi-objective extraction + scalarization, trial and wall-clock
+budgets, and a JSONL checkpoint that makes a killed run resumable without
+re-evaluating completed trials.
+
+Checkpoint format (append-only JSONL)
+-------------------------------------
+Line 1 is a header binding the run's identity — strategy name, seed,
+budget, objective names + weights, and the space signature (budget included
+because it sizes init designs / populations / halving brackets, i.e. the
+ask sequence itself); every following line is
+one completed trial ``{index, config, objectives, objective, fidelity}``
+with JSON-native config values.  On resume the header must match and the
+trials are *replayed through the strategy*: the driver re-asks, checks each
+suggestion against the recorded config (asks are deterministic in seed +
+tell history, see ``strategies``), and tells the recorded result — landing
+the strategy in exactly the state an uninterrupted run would have reached,
+at zero simulation cost.  A partially-written last line (the kill case) is
+ignored.
+
+Fidelities (successive halving's cheap rungs):
+  1.0  full evaluation — hetero knobs route to ``simulate_cluster``
+  0.5  symmetric event loop — hetero knobs coalesced to the baseline rank
+  0.0  analytic roofline bound — no event loop at all
+Only full-fidelity trials compete for ``best`` and the Pareto front.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import chakra, dse
+from repro.core.costmodel.simulator import simulate, simulate_analytic
+from repro.core.costmodel.topology import Topology, build_topology
+from repro.search import objectives as objmod
+from repro.search.space import SearchSpace
+from repro.search.strategies import (FIDELITY_FULL, FIDELITY_SYMMETRIC,
+                                     get_strategy)
+
+CHECKPOINT_VERSION = 1
+
+
+@dataclasses.dataclass
+class SearchTrial:
+    """One evaluated configuration."""
+    index: int
+    config: Dict
+    objectives: Dict                 # name -> measured value
+    objective: float                 # scalarized (normalized weighted sum)
+    fidelity: float = FIDELITY_FULL
+    result: object = None            # SimResult/ClusterSimResult (not resumed)
+
+    @property
+    def is_full(self) -> bool:
+        return self.fidelity >= FIDELITY_FULL
+
+    def as_dict(self) -> Dict:
+        return {"index": self.index,
+                "config": {k: dse.json_value(v)
+                           for k, v in self.config.items()},
+                "objectives": self.objectives,
+                "objective": self.objective,
+                "fidelity": self.fidelity}
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Outcome of one ``SearchRun.run()`` call."""
+    trials: List[SearchTrial]
+    objective_names: Tuple[str, ...]
+    strategy: str
+    n_evaluated: int                 # simulated in THIS call
+    n_resumed: int                   # replayed from the checkpoint
+    elapsed: float
+
+    @property
+    def full_trials(self) -> List[SearchTrial]:
+        return [t for t in self.trials if t.is_full]
+
+    @property
+    def best(self) -> Optional[SearchTrial]:
+        full = self.full_trials
+        return min(full, key=lambda t: t.objective) if full else None
+
+    def pareto_trials(self) -> List[SearchTrial]:
+        """Non-dominated full-fidelity trials (all objectives minimized)."""
+        full = self.full_trials
+        idx = objmod.pareto_front([t.objectives for t in full],
+                                  self.objective_names)
+        return [full[i] for i in idx]
+
+    def best_curve(self) -> List[float]:
+        """Best-so-far scalarized objective after each full trial — the
+        sample-efficiency curve benchmarks compare strategies on."""
+        out, best = [], float("inf")
+        for t in self.full_trials:
+            if t.objective < best:
+                best = t.objective
+            out.append(best)
+        return out
+
+    def summary(self) -> str:
+        b = self.best
+        lines = [f"search[{self.strategy}]: {len(self.trials)} trials "
+                 f"({self.n_resumed} resumed, {self.n_evaluated} evaluated, "
+                 f"{len(self.full_trials)} full-fidelity) "
+                 f"in {self.elapsed:.2f}s"]
+        if b is not None:
+            obj = ", ".join(f"{k}={v:.4g}" for k, v in b.objectives.items())
+            lines.append(f"  best #{b.index}: {b.config} -> {obj}")
+        if len(self.objective_names) > 1:
+            front = self.pareto_trials()
+            lines.append(f"  pareto front: {len(front)} configs")
+        return "\n".join(lines)
+
+
+def _json_cfg(config: Dict) -> Dict:
+    return {k: dse.json_value(v) for k, v in config.items()}
+
+
+def read_checkpoint(path: str):
+    """Parse a checkpoint JSONL -> (header, trial records, dirty flag) —
+    the one reader shared by ``SearchRun`` resume and the CLI's ``front``.
+
+    A torn final line (killed mid-write) is dropped and reported dirty; a
+    corrupt interior line or an unsupported format version raises.  Header
+    is None for an empty/headerless file."""
+    with open(path) as f:
+        raw = f.read()
+    rows = raw.splitlines()
+    dirty = bool(raw) and not raw.endswith("\n")
+    lines = []
+    for i, ln in enumerate(rows):
+        if not ln.strip():
+            continue
+        try:
+            lines.append(json.loads(ln))
+        except json.JSONDecodeError:
+            if i == len(rows) - 1:
+                dirty = True
+                break                    # torn tail from a kill — drop it
+            raise ValueError(f"{path}:{i + 1}: corrupt checkpoint line")
+    if not lines:
+        return None, [], dirty
+    head = lines[0]
+    if not isinstance(head, dict) or "search" not in head:
+        raise ValueError(f"{path}: not a search checkpoint "
+                         "(missing header line)")
+    if head["search"] != CHECKPOINT_VERSION:
+        raise ValueError(f"{path}: checkpoint format version "
+                         f"{head['search']} != supported "
+                         f"{CHECKPOINT_VERSION}")
+    return head, lines[1:], dirty
+
+
+class SearchRun:
+    """Drive one strategy over one space against one workload.
+
+    `space` is a ``SearchSpace`` or a ``dse.Knob`` list; `graph_for(config)`
+    returns the captured workload graph (cached per distinct workload-knob
+    assignment, exactly like ``dse.explore``).  `objectives` are minimized;
+    with several, trials are scalarized for the strategy (weighted sum
+    normalized by the first trial's values) and the Pareto front is
+    extracted from the full vectors.  `budget` caps total evaluations
+    (any fidelity, resumed trials included), `wall_clock` caps seconds
+    spent in ``run()``.  `checkpoint` names a JSONL file to append trials
+    to and resume from.  `system`/`compute_derate`/`topo` accept a
+    trace-calibrated model (``repro.trace.calibrate`` /
+    ``load_system_json``) so searches price against fitted hardware."""
+
+    def __init__(self, graph_for: Callable[[Dict], chakra.Graph], system,
+                 space, strategy: str = "random",
+                 objectives: Sequence[str] = objmod.DEFAULT_OBJECTIVES,
+                 weights: Optional[Sequence[float]] = None,
+                 budget: Optional[int] = 64,
+                 wall_clock: Optional[float] = None,
+                 seed: int = 0, checkpoint: Optional[str] = None,
+                 compute_derate: float = 0.6,
+                 topo: Optional[Topology] = None,
+                 strategy_opts: Optional[Dict] = None):
+        self.graph_for = graph_for
+        self.system = system
+        self.space = space if isinstance(space, SearchSpace) \
+            else SearchSpace.from_knobs(space)
+        self.objective_names = tuple(objectives)
+        if not self.objective_names:
+            raise ValueError("need at least one objective")
+        self.weights = list(weights) if weights is not None \
+            else objmod.default_weights(self.objective_names)
+        if len(self.weights) != len(self.objective_names):
+            raise ValueError(f"{len(self.weights)} weights for "
+                             f"{len(self.objective_names)} objectives")
+        self.budget = budget
+        self.wall_clock = wall_clock
+        self.seed = int(seed)
+        self.checkpoint = checkpoint
+        self.compute_derate = compute_derate
+        self.topo = topo
+        self.strategy_name = strategy
+        self.strategy = get_strategy(strategy, self.space, seed=self.seed,
+                                     budget=budget, **(strategy_opts or {}))
+        # capture + software-pass memoization shared with dse.explore /
+        # greedy_descent — all strategies price identical configs against
+        # identical graphs
+        self._memo = dse.GraphMemo(graph_for,
+                                   [d.name for d in self.space.dims
+                                    if d.layer == "workload"])
+        self._ref: Optional[Dict] = None   # scalarization reference point
+
+    # -- evaluation ----------------------------------------------------------
+    def _evaluate(self, cfg: Dict, fidelity: float):
+        """(result, objective-values) for one config at one fidelity."""
+        g2 = self._memo.transformed(cfg)
+        if fidelity >= FIDELITY_FULL:
+            res = dse._simulate_cfg(g2, self.system, cfg,
+                                    self.compute_derate, self.topo)
+        else:
+            sys2 = dse._system_for(self.system, cfg)
+            topo = self.topo
+            if topo is None or any(k in cfg for k in dse._TOPO_KNOBS):
+                topo = build_topology(sys2)
+            sim = simulate if fidelity >= FIDELITY_SYMMETRIC \
+                else simulate_analytic
+            res = sim(g2, sys2, topo, algo=sys2.collective_algo,
+                      compute_derate=self.compute_derate)
+        vals = objmod.trial_objectives(res, self.objective_names, graph=g2)
+        return res, vals
+
+    def _scalarize(self, vals: Dict) -> float:
+        if self._ref is None:
+            self._ref = dict(vals)
+        return objmod.scalarize(vals, self.objective_names, self.weights,
+                                self._ref)
+
+    # -- checkpoint ----------------------------------------------------------
+    def _header(self) -> Dict:
+        # budget is part of the identity: it sizes bayesian init designs,
+        # evolutionary populations and halving brackets, so a different
+        # budget would change the ask sequence and break replay
+        return {"search": CHECKPOINT_VERSION,
+                "strategy": self.strategy_name, "seed": self.seed,
+                "budget": self.budget,
+                "objectives": list(self.objective_names),
+                "weights": self.weights,
+                "space": self.space.signature()}
+
+    def _load_checkpoint(self) -> Tuple[List[Dict], bool]:
+        """``read_checkpoint`` + header-identity validation.  The dirty flag
+        (torn final line from a kill) makes ``run()`` rewrite the file
+        before appending — otherwise the next trial would merge into the
+        torn fragment and corrupt the line for every later resume."""
+        head, records, dirty = read_checkpoint(self.checkpoint)
+        if head is None:
+            return [], dirty
+        mine = self._header()
+        for field in ("strategy", "seed", "budget", "objectives", "weights",
+                      "space"):
+            if head.get(field) != mine[field]:
+                raise ValueError(
+                    f"{self.checkpoint}: header {field!r} mismatch — "
+                    f"checkpoint has {head.get(field)!r}, this run has "
+                    f"{mine[field]!r}; refusing to resume a different "
+                    "search (resume needs the same strategy, seed, budget, "
+                    "objectives and space)")
+        return records, dirty
+
+    def _replay(self, records: List[Dict]) -> List[SearchTrial]:
+        """Re-ask the strategy through the recorded trials (no simulation):
+        determinism of ask() given the tell history makes this land in the
+        exact state an uninterrupted run would be in."""
+        out = []
+        for rec in records:
+            sug = self.strategy.ask()
+            if sug is None:
+                raise ValueError(
+                    f"{self.checkpoint}: strategy exhausted after "
+                    f"{len(out)} trials but checkpoint has "
+                    f"{len(records)} — space or strategy code changed?")
+            cfg, fid = sug
+            if _json_cfg(cfg) != rec["config"] or \
+                    abs(fid - rec.get("fidelity", FIDELITY_FULL)) > 1e-12:
+                raise ValueError(
+                    f"{self.checkpoint}: replay diverged at trial "
+                    f"{len(out)}: strategy proposed "
+                    f"{_json_cfg(cfg)}@{fid}, checkpoint recorded "
+                    f"{rec['config']}@{rec.get('fidelity')} — seed, space "
+                    "or strategy code changed since the checkpoint was "
+                    "written")
+            vals = rec["objectives"]
+            if self._ref is None:
+                self._ref = dict(vals)
+            self.strategy.tell(cfg, rec["objective"], vals, fid)
+            out.append(SearchTrial(index=len(out), config=dict(cfg),
+                                   objectives=dict(vals),
+                                   objective=rec["objective"],
+                                   fidelity=fid, result=None))
+        return out
+
+    # -- driver --------------------------------------------------------------
+    def run(self) -> SearchResult:
+        t0 = time.monotonic()
+        trials: List[SearchTrial] = []
+        dirty = False
+        if self.checkpoint and os.path.exists(self.checkpoint):
+            records, dirty = self._load_checkpoint()
+            trials = self._replay(records)
+        n_resumed = len(trials)
+
+        ckpt = None
+        if self.checkpoint:
+            if dirty:
+                # rewrite header + surviving trials so the torn fragment
+                # can't merge with the next appended line
+                with open(self.checkpoint, "w") as f:
+                    f.write(json.dumps(self._header(), sort_keys=True)
+                            + "\n")
+                    for t in trials:
+                        f.write(json.dumps(t.as_dict(), sort_keys=True)
+                                + "\n")
+            fresh = not (os.path.exists(self.checkpoint)
+                         and os.path.getsize(self.checkpoint) > 0)
+            ckpt = open(self.checkpoint, "a")
+            if fresh:
+                ckpt.write(json.dumps(self._header(), sort_keys=True) + "\n")
+                ckpt.flush()
+
+        n_new = 0
+        deadline = (t0 + self.wall_clock) if self.wall_clock is not None \
+            else None
+        try:
+            while self.budget is None or len(trials) < self.budget:
+                if deadline is not None and time.monotonic() >= deadline:
+                    break
+                sug = self.strategy.ask()
+                if sug is None:
+                    break
+                cfg, fid = sug
+                res, vals = self._evaluate(cfg, fid)
+                scal = self._scalarize(vals)
+                trial = SearchTrial(index=len(trials), config=dict(cfg),
+                                    objectives=vals, objective=scal,
+                                    fidelity=fid, result=res)
+                self.strategy.tell(cfg, scal, vals, fid)
+                trials.append(trial)
+                n_new += 1
+                if ckpt is not None:
+                    ckpt.write(json.dumps(trial.as_dict(), sort_keys=True)
+                               + "\n")
+                    ckpt.flush()
+        finally:
+            if ckpt is not None:
+                ckpt.close()
+        return SearchResult(trials=trials,
+                            objective_names=self.objective_names,
+                            strategy=self.strategy_name,
+                            n_evaluated=n_new, n_resumed=n_resumed,
+                            elapsed=time.monotonic() - t0)

@@ -1,0 +1,264 @@
+"""Search-space model: knobs across the paper's three layers, encodable.
+
+A ``SearchSpace`` is an ordered list of ``Dim``s.  Each dim covers one knob
+— workload (recapture on change), software (graph passes), or hardware
+(topology / bandwidths / hetero cluster shape) — and knows how to
+
+  * enumerate itself (finite dims) for grid search,
+  * sample a value from a seeded RNG,
+  * encode a value into [0, 1] (the coordinate the Gaussian-process
+    surrogate and distance-based operators see),
+  * mutate a value (the evolutionary strategy's unit move).
+
+``SearchSpace.from_knobs`` lifts the existing ``dse.Knob`` list unchanged:
+dim order and value order are preserved, so ``grid_configs()`` enumerates
+configs in exactly the order ``dse.explore(strategy="grid")`` always has
+(itertools.product over knobs in declaration order) — the bit-identity
+contract of the adapter.
+
+Kinds
+-----
+``ordinal``     values form a scale (all numeric): encoded by rank, mutation
+                prefers adjacent values — the common case for prefetch
+                depths, bucket sizes, bandwidths, degraded fractions.
+``categorical`` unordered values (strings, bools, mixed None): encoded by
+                index (a pragmatic 1-D embedding for the GP; fine at the
+                cardinalities DSE knobs have), mutation resamples uniformly.
+``continuous``  a [lo, hi] float interval (optionally log-scaled); has no
+                grid enumeration — grid search over a space containing one
+                raises, model-guided strategies handle it natively.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+ORDINAL = "ordinal"
+CATEGORICAL = "categorical"
+CONTINUOUS = "continuous"
+
+
+def _is_number(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+@dataclasses.dataclass(frozen=True)
+class Dim:
+    """One knob of the search space.  Finite dims carry ``values`` (order
+    preserved — it is the grid enumeration order); continuous dims carry
+    ``lo``/``hi`` bounds instead."""
+    name: str
+    kind: str
+    values: tuple = ()
+    layer: str = "software"          # workload | software | hardware
+    lo: float = 0.0
+    hi: float = 1.0
+    log: bool = False                # continuous: sample/encode in log space
+
+    def __post_init__(self):
+        if self.kind not in (ORDINAL, CATEGORICAL, CONTINUOUS):
+            raise ValueError(f"unknown dim kind {self.kind!r}")
+        if self.kind == CONTINUOUS:
+            if not self.hi > self.lo:
+                raise ValueError(f"{self.name}: need hi > lo, got "
+                                 f"[{self.lo}, {self.hi}]")
+            if self.log and self.lo <= 0:
+                raise ValueError(f"{self.name}: log scale needs lo > 0")
+        elif not self.values:
+            raise ValueError(f"{self.name}: finite dim needs values")
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def finite(cls, name: str, values: Sequence, layer: str = "software",
+               kind: Optional[str] = None) -> "Dim":
+        """Finite dim with kind inferred: all-numeric values are ordinal
+        (rank-encoded, adjacent-step mutation), anything else categorical."""
+        vals = tuple(values)
+        if kind is None:
+            kind = ORDINAL if vals and all(_is_number(v) for v in vals) \
+                else CATEGORICAL
+        return cls(name=name, kind=kind, values=vals, layer=layer)
+
+    @classmethod
+    def continuous(cls, name: str, lo: float, hi: float,
+                   layer: str = "software", log: bool = False) -> "Dim":
+        return cls(name=name, kind=CONTINUOUS, lo=float(lo), hi=float(hi),
+                   layer=layer, log=log)
+
+    # -- geometry ------------------------------------------------------------
+    @property
+    def n_choices(self) -> Optional[int]:
+        return None if self.kind == CONTINUOUS else len(self.values)
+
+    def _rank(self, v) -> int:
+        """Index of `v` in values (ordinal dims compare by rank order, so
+        encode() is monotone in the declared value order)."""
+        try:
+            return self.values.index(v)
+        except ValueError:
+            raise ValueError(f"{self.name}: value {v!r} not in "
+                             f"{self.values!r}") from None
+
+    def encode(self, v) -> float:
+        """Value -> [0, 1] coordinate."""
+        if self.kind == CONTINUOUS:
+            if self.log:
+                return (math.log(v) - math.log(self.lo)) \
+                    / (math.log(self.hi) - math.log(self.lo))
+            return (float(v) - self.lo) / (self.hi - self.lo)
+        k = len(self.values)
+        return self._rank(v) / (k - 1) if k > 1 else 0.5
+
+    def sample(self, rng: np.random.Generator):
+        if self.kind == CONTINUOUS:
+            u = float(rng.random())
+            if self.log:
+                return math.exp(math.log(self.lo)
+                                + u * (math.log(self.hi) - math.log(self.lo)))
+            return self.lo + u * (self.hi - self.lo)
+        return self.values[int(rng.integers(len(self.values)))]
+
+    def mutate(self, v, rng: np.random.Generator):
+        """One local move away from `v` (never returns `v` itself when the
+        dim has more than one choice)."""
+        if self.kind == CONTINUOUS:
+            x = self.encode(v)
+            x = min(1.0, max(0.0, x + float(rng.normal(0.0, 0.2))))
+            if self.log:
+                return math.exp(math.log(self.lo)
+                                + x * (math.log(self.hi) - math.log(self.lo)))
+            return self.lo + x * (self.hi - self.lo)
+        k = len(self.values)
+        if k <= 1:
+            return v
+        i = self._rank(v)
+        if self.kind == ORDINAL:
+            # prefer an adjacent rank; fall back over the boundary
+            step = 1 if rng.random() < 0.5 else -1
+            j = i + step
+            if not 0 <= j < k:
+                j = i - step
+            return self.values[j]
+        j = int(rng.integers(k - 1))
+        return self.values[j if j < i else j + 1]
+
+
+class SearchSpace:
+    """Ordered collection of ``Dim``s over the joint workload / software /
+    hardware knob space."""
+
+    def __init__(self, dims: Iterable[Dim]):
+        self.dims: List[Dim] = list(dims)
+        names = [d.name for d in self.dims]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate dim names in {names}")
+
+    @classmethod
+    def from_knobs(cls, knobs) -> "SearchSpace":
+        """Lift a ``dse.Knob`` list, preserving knob and value order."""
+        return cls(Dim.finite(k.name, k.values, layer=k.layer)
+                   for k in knobs)
+
+    def __len__(self) -> int:
+        return len(self.dims)
+
+    def __repr__(self) -> str:
+        return f"SearchSpace({[d.name for d in self.dims]})"
+
+    @property
+    def names(self) -> List[str]:
+        return [d.name for d in self.dims]
+
+    def dim(self, name: str) -> Dim:
+        for d in self.dims:
+            if d.name == name:
+                return d
+        raise KeyError(name)
+
+    # -- enumeration ---------------------------------------------------------
+    @property
+    def grid_size(self) -> Optional[int]:
+        """Number of grid configs, or None if any dim is continuous."""
+        n = 1
+        for d in self.dims:
+            if d.kind == CONTINUOUS:
+                return None
+            n *= len(d.values)
+        return n
+
+    def grid_configs(self, limit: Optional[int] = None) -> Iterator[Dict]:
+        """Enumerate the full cartesian grid in declaration order — the
+        exact historical ``dse.explore(strategy='grid')`` order
+        (itertools.product over knobs, value order preserved)."""
+        if any(d.kind == CONTINUOUS for d in self.dims):
+            cont = [d.name for d in self.dims if d.kind == CONTINUOUS]
+            raise ValueError(f"grid enumeration undefined over continuous "
+                             f"dims {cont}; use a sampling strategy")
+        combos = itertools.product(*[[(d.name, v) for v in d.values]
+                                     for d in self.dims]) \
+            if self.dims else iter([()])
+        if limit is not None:
+            combos = itertools.islice(combos, limit)
+        for c in combos:
+            yield dict(c)
+
+    # -- sampling / encoding -------------------------------------------------
+    def sample(self, rng: np.random.Generator) -> Dict:
+        return {d.name: d.sample(rng) for d in self.dims}
+
+    def encode(self, config: Dict) -> np.ndarray:
+        """Config -> point in [0, 1]^d (dims in declaration order)."""
+        return np.array([d.encode(config[d.name]) for d in self.dims],
+                        dtype=np.float64)
+
+    def config_key(self, config: Dict) -> tuple:
+        """Hashable identity of a config (dedup / memo key)."""
+        return tuple((d.name, repr(config.get(d.name))) for d in self.dims)
+
+    def mutate(self, config: Dict, rng: np.random.Generator,
+               rate: Optional[float] = None) -> Dict:
+        """Mutate each movable dim with probability `rate` (default
+        1/#movable); always mutates at least one, so the child differs from
+        the parent whenever any dim has > 1 choice.  Single-choice dims are
+        never picked — they can only return the parent value and would
+        silently burn the dedup retries of the strategies built on this."""
+        movable = [d for d in self.dims
+                   if d.kind == CONTINUOUS or len(d.values) > 1]
+        if not movable:
+            return dict(config)
+        rate = rate if rate is not None else 1.0 / len(movable)
+        out = dict(config)
+        hit = False
+        flips = rng.random(len(movable))
+        for dim, f in zip(movable, flips):
+            if f < rate:
+                out[dim.name] = dim.mutate(config[dim.name], rng)
+                hit = True
+        if not hit:
+            dim = movable[int(rng.integers(len(movable)))]
+            out[dim.name] = dim.mutate(config[dim.name], rng)
+        return out
+
+    def crossover(self, a: Dict, b: Dict,
+                  rng: np.random.Generator) -> Dict:
+        """Uniform crossover: each dim from either parent with p=0.5."""
+        picks = rng.random(len(self.dims))
+        return {d.name: (a if p < 0.5 else b)[d.name]
+                for d, p in zip(self.dims, picks)}
+
+    # -- (de)serialization (checkpoint header compatibility check) -----------
+    def signature(self) -> List:
+        """JSON-able identity: a resumed run must search the same space."""
+        out = []
+        for d in self.dims:
+            if d.kind == CONTINUOUS:
+                out.append([d.name, d.kind, d.layer,
+                            [d.lo, d.hi, bool(d.log)]])
+            else:
+                out.append([d.name, d.kind, d.layer,
+                            [repr(v) for v in d.values]])
+        return out

@@ -1,0 +1,429 @@
+"""Pluggable search strategies: protocol, registry, four built-in families.
+
+A strategy proposes configurations one at a time through an ask/tell loop:
+
+    s = get_strategy("bayesian", space, seed=0, budget=64)
+    while (sug := s.ask()) is not None:
+        config, fidelity = sug
+        objective, objectives = evaluate(config, fidelity)
+        s.tell(config, objective, objectives, fidelity)
+
+The driver (``repro.search.run.SearchRun``) owns evaluation, budgets and
+checkpointing; strategies own *which config next*.  Two contracts make
+budgeted + resumable runs work:
+
+  * **Synchronous**: exactly one ``tell`` follows each ``ask`` before the
+    next ``ask`` (the driver guarantees it).
+  * **Deterministic**: ``ask`` is a pure function of (space, seed, options,
+    tell-history).  All randomness flows through ``self._rng(*salt)`` —
+    ``np.random.default_rng`` seeded by (seed, salt), never global state —
+    so the same seed replays the same trial sequence, and a resumed run
+    re-asks its way through the checkpoint to land in exactly the state an
+    uninterrupted run would have reached.
+
+Built-ins (see ``available_strategies()``):
+
+``grid``          exhaustive enumeration in declaration order — bit-identical
+                  to the historical ``dse.explore`` walk.
+``random``        seeded uniform sampling, duplicate-free on finite spaces.
+``bayesian``      Gaussian-process surrogate (RBF kernel over the encoded
+                  [0,1]^d knob vectors, pure numpy) with expected-improvement
+                  acquisition over a sampled candidate pool + local mutations
+                  of the incumbent.
+``evolutionary``  tournament selection, uniform crossover, per-dim mutation
+                  over knob assignments.
+``halving``       successive halving: price a wide pool at cheap proxy
+                  fidelities (analytic roofline, then symmetric event loop)
+                  and promote the top 1/eta to full evaluation.
+
+Fidelity levels are floats the evaluator interprets (``run.SearchRun``):
+0.0 = analytic roofline bound (no event loop), 0.5 = full event loop but
+symmetric-cluster coalescing (hetero knobs priced at the baseline), 1.0 =
+full evaluation.  Only ``halving`` emits sub-1.0 fidelities.
+"""
+from __future__ import annotations
+
+import math
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.search.space import SearchSpace
+
+FIDELITY_ANALYTIC = 0.0
+FIDELITY_SYMMETRIC = 0.5
+FIDELITY_FULL = 1.0
+
+#: name -> Strategy subclass
+STRATEGIES: Dict[str, type] = {}
+
+
+def register_strategy(name: str):
+    def deco(cls):
+        cls.name = name
+        STRATEGIES[name] = cls
+        return cls
+    return deco
+
+
+def available_strategies() -> List[str]:
+    return sorted(STRATEGIES)
+
+
+def get_strategy(name: str, space: SearchSpace, seed: int = 0,
+                 budget: Optional[int] = None, **opts) -> "Strategy":
+    """Instantiate a registered strategy; unknown names list the registry."""
+    cls = STRATEGIES.get(name)
+    if cls is None:
+        raise ValueError(
+            f"unknown search strategy {name!r}: available strategies are "
+            f"{available_strategies()}")
+    return cls(space, seed=seed, budget=budget, **opts)
+
+
+class Strategy:
+    """Base class: seeded RNG streams, duplicate tracking, tell-history."""
+    name = "?"
+
+    def __init__(self, space: SearchSpace, seed: int = 0,
+                 budget: Optional[int] = None):
+        self.space = space
+        self.seed = int(seed)
+        self.budget = budget
+        self._told: List[Tuple[Dict, float, float]] = []  # (cfg, obj, fid)
+        self._seen: set = set()          # config keys this strategy proposed
+        self._n_asked = 0
+
+    # -- seeded randomness ---------------------------------------------------
+    def _rng(self, *salt) -> np.random.Generator:
+        """Deterministic RNG stream named by (seed, *salt); strings hash via
+        crc32 so stream names are stable across runs and platforms."""
+        parts = [self.seed & 0xFFFFFFFF]
+        for s in salt:
+            parts.append(zlib.crc32(str(s).encode()) if isinstance(s, str)
+                         else int(s) & 0xFFFFFFFF)
+        return np.random.default_rng(parts)
+
+    # -- protocol ------------------------------------------------------------
+    def ask(self) -> Optional[Tuple[Dict, float]]:
+        """Next (config, fidelity) suggestion, or None when exhausted."""
+        raise NotImplementedError
+
+    def tell(self, config: Dict, objective: float,
+             objectives: Optional[Dict] = None,
+             fidelity: float = FIDELITY_FULL) -> None:
+        """Report the evaluated (scalarized) objective for `config`."""
+        self._told.append((dict(config), float(objective), float(fidelity)))
+        self._seen.add(self.space.config_key(config))
+
+    # -- shared sampling helpers --------------------------------------------
+    def _mark(self, config: Dict) -> Dict:
+        self._seen.add(self.space.config_key(config))
+        return config
+
+    def _random_unseen(self, *salt) -> Optional[Dict]:
+        """A seeded uniform sample no previous ask proposed; falls back to a
+        grid scan on finite spaces, None once the space is exhausted."""
+        rng = self._rng("rand", *salt)
+        cfg = None
+        for _ in range(64):
+            cfg = self.space.sample(rng)
+            if self.space.config_key(cfg) not in self._seen:
+                return self._mark(cfg)
+        if self.space.grid_size is None:
+            return self._mark(cfg)       # continuous: collisions are measure-0
+        for gc in self.space.grid_configs():
+            if self.space.config_key(gc) not in self._seen:
+                return self._mark(gc)
+        return None
+
+    def _full_told(self) -> List[Tuple[Dict, float]]:
+        return [(c, o) for c, o, f in self._told if f >= FIDELITY_FULL]
+
+
+@register_strategy("grid")
+class GridStrategy(Strategy):
+    """Exhaustive cartesian enumeration in knob declaration order — the
+    executable spec the ``dse.explore`` adapter preserves bit-identically."""
+
+    def __init__(self, space, seed: int = 0, budget: Optional[int] = None):
+        super().__init__(space, seed=seed, budget=budget)
+        self._iter = space.grid_configs()
+
+    def ask(self):
+        for cfg in self._iter:
+            self._n_asked += 1
+            return self._mark(cfg), FIDELITY_FULL
+        return None
+
+
+@register_strategy("random")
+class RandomStrategy(Strategy):
+    """Seeded uniform sampling without replacement (on finite spaces)."""
+
+    def ask(self):
+        i = self._n_asked
+        self._n_asked += 1
+        cfg = self._random_unseen(i)
+        return None if cfg is None else (cfg, FIDELITY_FULL)
+
+
+def _norm_cdf(z: float) -> float:
+    return 0.5 * (1.0 + math.erf(z / math.sqrt(2.0)))
+
+
+def _norm_pdf(z: float) -> float:
+    return math.exp(-0.5 * z * z) / math.sqrt(2.0 * math.pi)
+
+
+@register_strategy("bayesian")
+class BayesianStrategy(Strategy):
+    """GP surrogate + expected improvement, pure numpy.
+
+    The surrogate is a zero-mean GP with an isotropic RBF kernel over the
+    space's [0,1]^d encoding (y standardized per fit).  Acquisition
+    maximizes EI over a seeded candidate pool — uniform samples plus local
+    mutations of the incumbent — restricted to configs not yet proposed.
+    The first ``init`` asks are random (seeded) design points."""
+
+    def __init__(self, space, seed: int = 0, budget: Optional[int] = None,
+                 init: Optional[int] = None, pool: int = 96,
+                 n_mutants: int = 8, length_scale: float = 0.35,
+                 noise: float = 1e-6):
+        super().__init__(space, seed=seed, budget=budget)
+        if init is None:
+            init = max(4, min(8, (budget or 32) // 4))
+        self.init = init
+        self.pool = pool
+        self.n_mutants = n_mutants
+        self.length_scale = length_scale
+        self.noise = noise
+
+    def _fit(self, X: np.ndarray, y: np.ndarray):
+        """Cholesky GP fit with jitter escalation; returns a predict(Xc)
+        closure yielding (mu, sigma) arrays."""
+        n, d = X.shape
+        ls = self.length_scale * math.sqrt(max(1, d))
+        d2 = ((X[:, None, :] - X[None, :, :]) ** 2).sum(-1)
+        K = np.exp(-0.5 * d2 / (ls * ls))
+        jitter = self.noise
+        for _ in range(8):
+            try:
+                L = np.linalg.cholesky(K + jitter * np.eye(n))
+                break
+            except np.linalg.LinAlgError:
+                jitter *= 10.0
+        else:                            # pathological: give up on the GP
+            return None
+        alpha = np.linalg.solve(L.T, np.linalg.solve(L, y))
+
+        def predict(Xc: np.ndarray):
+            d2c = ((Xc[:, None, :] - X[None, :, :]) ** 2).sum(-1)
+            Kc = np.exp(-0.5 * d2c / (ls * ls))
+            mu = Kc @ alpha
+            v = np.linalg.solve(L, Kc.T)
+            var = np.maximum(1e-12, 1.0 - (v * v).sum(0))
+            return mu, np.sqrt(var)
+
+        return predict
+
+    def ask(self):
+        i = self._n_asked
+        self._n_asked += 1
+        told = self._full_told()
+        if len(told) < self.init:
+            cfg = self._random_unseen(i)
+            return None if cfg is None else (cfg, FIDELITY_FULL)
+
+        y_raw = np.array([o for _, o in told], dtype=np.float64)
+        y_std = float(y_raw.std())
+        if y_std < 1e-15:                # flat landscape: nothing to model
+            cfg = self._random_unseen(i)
+            return None if cfg is None else (cfg, FIDELITY_FULL)
+        y = (y_raw - y_raw.mean()) / y_std
+        X = np.stack([self.space.encode(c) for c, _ in told])
+        predict = self._fit(X, y)
+        if predict is None:
+            cfg = self._random_unseen(i)
+            return None if cfg is None else (cfg, FIDELITY_FULL)
+
+        rng = self._rng("pool", len(told))
+        best_cfg = min(told, key=lambda t: t[1])[0]
+        cands, keys = [], set()
+        for _ in range(self.pool):
+            c = self.space.sample(rng)
+            k = self.space.config_key(c)
+            if k not in self._seen and k not in keys:
+                cands.append(c)
+                keys.add(k)
+        for _ in range(self.n_mutants):
+            c = self.space.mutate(best_cfg, rng)
+            k = self.space.config_key(c)
+            if k not in self._seen and k not in keys:
+                cands.append(c)
+                keys.add(k)
+        if not cands:
+            cfg = self._random_unseen(i)
+            return None if cfg is None else (cfg, FIDELITY_FULL)
+
+        Xc = np.stack([self.space.encode(c) for c in cands])
+        mu, sigma = predict(Xc)
+        y_best = float(y.min())
+        ei = np.empty(len(cands))
+        for j in range(len(cands)):
+            s = float(sigma[j])
+            z = (y_best - float(mu[j])) / s
+            ei[j] = s * (z * _norm_cdf(z) + _norm_pdf(z))
+        return self._mark(cands[int(np.argmax(ei))]), FIDELITY_FULL
+
+
+@register_strategy("evolutionary")
+class EvolutionaryStrategy(Strategy):
+    """(mu + lambda)-style evolution over knob assignments: seeded random
+    init population, then tournament-selected parents, uniform crossover and
+    per-dim mutation; children are duplicate-free on finite spaces."""
+
+    def __init__(self, space, seed: int = 0, budget: Optional[int] = None,
+                 population: Optional[int] = None, tournament: int = 3,
+                 crossover_prob: float = 0.6,
+                 mutation_rate: Optional[float] = None):
+        super().__init__(space, seed=seed, budget=budget)
+        if population is None:
+            population = max(4, min(16, (budget or 48) // 4))
+        self.population = population
+        self.tournament = tournament
+        self.crossover_prob = crossover_prob
+        self.mutation_rate = mutation_rate
+
+    def _tournament(self, pool, rng) -> Dict:
+        idx = rng.integers(len(pool), size=min(self.tournament, len(pool)))
+        return min((pool[int(j)] for j in idx), key=lambda t: t[1])[0]
+
+    def ask(self):
+        i = self._n_asked
+        self._n_asked += 1
+        pool = self._full_told()
+        if i < self.population or not pool:
+            cfg = self._random_unseen(i)
+            return None if cfg is None else (cfg, FIDELITY_FULL)
+        rng = self._rng("evo", len(self._told))
+        for _ in range(32):
+            p1 = self._tournament(pool, rng)
+            if rng.random() < self.crossover_prob and len(pool) > 1:
+                p2 = self._tournament(pool, rng)
+                child = self.space.crossover(p1, p2, rng)
+            else:
+                child = dict(p1)
+            child = self.space.mutate(child, rng, rate=self.mutation_rate)
+            if self.space.config_key(child) not in self._seen:
+                return self._mark(child), FIDELITY_FULL
+        cfg = self._random_unseen(i)
+        return None if cfg is None else (cfg, FIDELITY_FULL)
+
+
+@register_strategy("halving")
+class HalvingStrategy(Strategy):
+    """Successive halving over proxy fidelities.
+
+    Each bracket samples ``n0`` fresh configs and prices them at the
+    cheapest fidelity (analytic roofline — no event loop); the top
+    ``1/eta`` survive to the next fidelity (symmetric event loop, hetero
+    knobs coalesced to the baseline), and the top of *those* graduate to
+    full evaluation.  ``n0`` is sized so one bracket's total evaluation
+    count fits the remaining budget; brackets repeat while budget remains.
+    Only full-fidelity trials compete for best/Pareto in the driver."""
+
+    def __init__(self, space, seed: int = 0, budget: Optional[int] = None,
+                 eta: int = 4,
+                 fidelities: Tuple[float, ...] = (FIDELITY_ANALYTIC,
+                                                  FIDELITY_SYMMETRIC,
+                                                  FIDELITY_FULL)):
+        super().__init__(space, seed=seed, budget=budget)
+        if eta < 2:
+            raise ValueError(f"halving needs eta >= 2, got {eta}")
+        if not fidelities or list(fidelities) != sorted(fidelities):
+            raise ValueError("fidelities must be ascending and non-empty")
+        self.eta = eta
+        self.fidelities = tuple(fidelities)
+        self._bracket = 0
+        self._rung = 0
+        self._queue: List[Dict] = []     # configs awaiting ask at this rung
+        self._results: List[Tuple[float, int, Dict]] = []  # rung tells
+        self._rung_size = 0
+
+    def _bracket_cost(self, n0: int) -> int:
+        n, cost = n0, 0
+        for _ in self.fidelities:
+            cost += n
+            n = max(1, n // self.eta)
+        return cost
+
+    def _start_bracket(self) -> bool:
+        spent = len(self._told)
+        remaining = (self.budget - spent) if self.budget else None
+        if remaining is not None and remaining < 1:
+            return False
+        n0 = 1
+        if remaining is None:
+            n0 = self.eta ** (len(self.fidelities) - 1)
+        else:
+            while self._bracket_cost(n0 + 1) <= remaining:
+                n0 += 1
+        rng = self._rng("halving", self._bracket)
+        queue, keys = [], set()
+        for _ in range(64 * n0):
+            if len(queue) >= n0:
+                break
+            c = self.space.sample(rng)
+            k = self.space.config_key(c)
+            if k not in self._seen and k not in keys:
+                queue.append(c)
+                keys.add(k)
+        if len(queue) < n0 and self.space.grid_size is not None:
+            for gc in self.space.grid_configs():
+                if len(queue) >= n0:
+                    break
+                k = self.space.config_key(gc)
+                if k not in self._seen and k not in keys:
+                    queue.append(gc)
+                    keys.add(k)
+        if not queue:
+            return False
+        for c in queue:
+            self._mark(c)
+        self._bracket += 1
+        self._rung = 0
+        self._queue = queue
+        self._results = []
+        self._rung_size = len(queue)
+        return True
+
+    def _promote(self) -> bool:
+        """Current rung complete: queue the survivors at the next fidelity;
+        False when this was the top rung (bracket over)."""
+        if self._rung + 1 >= len(self.fidelities):
+            return False
+        self._results.sort(key=lambda t: (t[0], t[1]))
+        k = max(1, self._rung_size // self.eta)
+        self._queue = [cfg for _, _, cfg in self._results[:k]]
+        self._results = []
+        self._rung += 1
+        self._rung_size = len(self._queue)
+        return True
+
+    def ask(self):
+        if not self._queue and len(self._results) >= self._rung_size:
+            if not (self._rung_size and self._promote()):
+                if not self._start_bracket():
+                    return None
+        if not self._queue:
+            return None
+        self._n_asked += 1
+        return self._queue.pop(0), self.fidelities[self._rung]
+
+    def tell(self, config, objective, objectives=None,
+             fidelity: float = FIDELITY_FULL):
+        super().tell(config, objective, objectives, fidelity)
+        self._results.append((float(objective), len(self._results),
+                              dict(config)))

@@ -83,6 +83,44 @@ class CalibrationResult:
         return "\n".join(lines)
 
 
+def load_system_json(path: str):
+    """Load a ``calibrate -o`` JSON file -> (SystemConfig, compute_derate).
+
+    The hand-off format between the trace calibrator and every consumer of
+    a calibrated cost model: ``python -m repro.trace --system cal.json``,
+    ``python -m repro.search --system cal.json``, or directly in Python
+    before a ``dse.explore`` / ``SearchRun``."""
+    import json
+
+    from repro.configs.base import SystemConfig
+    with open(path) as f:
+        saved = json.load(f)
+    return (SystemConfig(**saved.get("system", {})),
+            float(saved.get("compute_derate", 0.6)))
+
+
+def system_from_flags(args, flags: Sequence[str] = (
+        "chips", "topology", "peak_flops", "hbm_bw", "link_bw",
+        "link_latency")):
+    """Assemble (SystemConfig, compute_derate) from CLI args: ``--system``
+    JSON (if given) overlaid with any explicitly-set hardware flags named
+    in `flags` (argparse dest names == SystemConfig fields), plus
+    ``--derate``.  Shared by the trace and search CLIs so their override
+    semantics can't drift."""
+    from repro.configs.base import SystemConfig
+    sysc, derate = SystemConfig(), 0.6
+    if getattr(args, "system", None):
+        sysc, derate = load_system_json(args.system)
+    over = {k: getattr(args, k) for k in flags
+            if getattr(args, k, None) is not None}
+    if over:
+        sysc = sysc.replace(**over)
+    d = getattr(args, "derate", None)
+    if d is not None:
+        derate = d
+    return sysc, derate
+
+
 def _measured_min(g: chakra.Graph, tl: Timeline) -> Dict[int, float]:
     """nid -> min measured duration across ranks (strips barrier wait)."""
     meas: Dict[int, float] = {}

@@ -20,11 +20,10 @@ import dataclasses
 import json
 import sys
 
-from repro.configs.base import SystemConfig
 from repro.core import chakra
 from repro.core.costmodel.simulator import simulate, simulate_cluster
 from repro.core.costmodel.topology import build_topology
-from repro.trace.calibrate import calibrate
+from repro.trace.calibrate import calibrate, system_from_flags
 from repro.trace.export import export_chrome_trace
 from repro.trace.ingest import ingest_chrome_trace
 from repro.trace.validate import validate
@@ -51,22 +50,7 @@ def _add_system_flags(ap: argparse.ArgumentParser) -> None:
 
 
 def _system_from_args(args):
-    sysc, derate = SystemConfig(), 0.6
-    if args.system:
-        with open(args.system) as f:
-            saved = json.load(f)
-        sysc = SystemConfig(**saved.get("system", {}))
-        derate = saved.get("compute_derate", derate)
-    over = {k: getattr(args, a) for k, a in
-            (("chips", "chips"), ("topology", "topology"),
-             ("peak_flops", "peak_flops"), ("hbm_bw", "hbm_bw"),
-             ("link_bw", "link_bw"), ("link_latency", "link_latency"))
-            if getattr(args, a) is not None}
-    if over:
-        sysc = sysc.replace(**over)
-    if args.derate is not None:
-        derate = args.derate
-    return sysc, derate
+    return system_from_flags(args)
 
 
 def _cmd_export(args) -> int:
@@ -130,7 +114,9 @@ def _cmd_calibrate(args) -> int:
                        "rms_rel_error": cal.fitted_error}, f,
                       indent=2, sort_keys=True)
             f.write("\n")
-        print(f"wrote {args.out} (reuse via --system {args.out})")
+        print(f"wrote {args.out} (reuse via --system {args.out}, here or "
+              f"in `python -m repro.search` to explore on the calibrated "
+              "cost model)")
     if args.validate:
         before = validate(g, tl, sysc,
                           build_topology(sysc, K if K > 1 else None),

@@ -67,3 +67,28 @@ def test_hardware_knob_changes_objective():
                      [Knob("link_bw", [10e9, 200e9], layer="hardware")])
     objs = {t.config["link_bw"]: t.objective for t in trials}
     assert objs[200e9] < objs[10e9]
+
+
+def test_unknown_strategy_raises_with_registry():
+    import pytest
+    with pytest.raises(ValueError) as ei:
+        explore(lambda cfg: _graph(4), SystemConfig(chips=16),
+                [Knob("prefetch", [0, 2])], strategy="simulated_annealing")
+    msg = str(ei.value)
+    assert "simulated_annealing" in msg
+    for name in ("grid", "random", "bayesian", "evolutionary", "halving"):
+        assert name in msg
+
+
+def test_trial_as_dict_json_native():
+    import json
+    trials = explore(lambda cfg: _graph(4), SystemConfig(chips=16),
+                     [Knob("fsdp_sync", [True]),
+                      Knob("bucket_bytes", [None, 64e6]),
+                      Knob("prefetch", [2])])
+    for t in trials:
+        d = json.loads(json.dumps(t.as_dict()))
+        assert d["config"]["fsdp_sync"] is True          # not "True"
+        assert d["config"]["prefetch"] == 2              # not "2"
+        bb = d["config"]["bucket_bytes"]
+        assert bb is None or bb == 64e6                  # not "None"/"64000000.0"

@@ -1,0 +1,586 @@
+"""Search subsystem: spaces, strategies, budgets, checkpoints, Pareto.
+
+Property-level contracts against grid ground truth:
+  * grid adapter bit-identity with the historical dse.explore walk,
+  * deterministic seeding (same seed => same trial sequence),
+  * bayesian/evolutionary within 2% of the exhaustive optimum at <= 25%
+    of grid's trial count (the ISSUE acceptance bound),
+  * checkpoint resume lands exactly where an uninterrupted run would,
+    without re-evaluating completed trials,
+  * hetero cluster-knob spaces route through simulate_cluster and beat
+    truncated grid at equal budget.
+"""
+import itertools
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.dse import Knob, apply_software_knobs, explore, json_value
+from repro.core.costmodel.simulator import (peak_memory_proxy, simulate,
+                                            simulate_analytic)
+from repro.search import (Dim, FIDELITY_FULL, SearchRun, SearchSpace,
+                          available_strategies, get_strategy, pareto_front)
+
+SYS = SystemConfig(chips=16, topology="switch")
+
+
+def _graph(n_layers=8, comm_mb=8.0, group=16):
+    g = chakra.Graph()
+    prev = None
+    for i in range(n_layers):
+        ag = g.add(f"ag{i}", chakra.COMM_COLL, comm_kind="all-gather",
+                   comm_bytes=comm_mb * 1e6, out_bytes=comm_mb * 1e6,
+                   group=list(range(group)))
+        deps = [ag] + ([prev] if prev is not None else [])
+        prev = g.add(f"comp{i}", chakra.COMP, deps=deps, flops=5e10,
+                     out_bytes=1e6)
+    return g
+
+
+def _fsdp_knobs():
+    """The FSDP-reorder benchmark space (96 configs) — imported from the
+    bench so the acceptance bound asserted here and the CI-gated
+    BENCH_search floors always validate the same space."""
+    from benchmarks.search_bench import fsdp_reorder_knobs
+    return fsdp_reorder_knobs()
+
+
+# ---------------------------------------------------------------------------
+# SearchSpace
+# ---------------------------------------------------------------------------
+
+def test_space_grid_matches_itertools_product_order():
+    knobs = _fsdp_knobs()
+    space = SearchSpace.from_knobs(knobs)
+    expect = [dict(c) for c in itertools.product(
+        *[[(k.name, v) for v in k.values] for k in knobs])]
+    assert list(space.grid_configs()) == expect
+    assert space.grid_size == len(expect) == 96
+    assert list(space.grid_configs(limit=7)) == expect[:7]
+
+
+def test_dim_kinds_and_encoding():
+    ordinal = Dim.finite("p", [0, 2, 8])
+    assert ordinal.kind == "ordinal"
+    assert ordinal.encode(0) == 0.0 and ordinal.encode(8) == 1.0
+    cat = Dim.finite("b", [None, 64e6])          # mixed -> categorical
+    assert cat.kind == "categorical"
+    boolean = Dim.finite("s", [True, False])     # bools are categorical
+    assert boolean.kind == "categorical"
+    cont = Dim.continuous("lr", 1e-4, 1e-1, log=True)
+    assert abs(cont.encode(1e-4)) < 1e-12 and abs(cont.encode(1e-1) - 1) < 1e-12
+
+    import numpy as np
+    rng = np.random.default_rng(0)
+    for d in (ordinal, cat, cont):
+        v = d.sample(rng)
+        assert 0.0 <= d.encode(v) <= 1.0
+    # mutation moves whenever there is anywhere to go
+    for _ in range(20):
+        assert ordinal.mutate(2, rng) != 2
+        assert cat.mutate(None, rng) is not None
+
+
+def test_space_mutate_always_differs_despite_single_choice_dims():
+    """A single-choice dim (fsdp_sync=[True]) must never absorb the forced
+    mutation — the child differs from the parent whenever any dim has > 1
+    choice."""
+    import numpy as np
+    space = SearchSpace.from_knobs(_fsdp_knobs())   # includes fsdp_sync=[True]
+    rng = np.random.default_rng(0)
+    parent = {"fsdp_sync": True, "prefetch": 2, "bucket_bytes": None,
+              "link_bw": 25e9}
+    for _ in range(50):
+        child = space.mutate(parent, rng)
+        assert child != parent
+    # a space of ONLY single-choice dims is the identity
+    solo = SearchSpace([Dim.finite("a", [1])])
+    assert solo.mutate({"a": 1}, rng) == {"a": 1}
+
+
+def test_grid_over_continuous_raises():
+    space = SearchSpace([Dim.continuous("x", 0.0, 1.0)])
+    with pytest.raises(ValueError, match="continuous"):
+        list(space.grid_configs())
+    assert space.grid_size is None
+
+
+# ---------------------------------------------------------------------------
+# strategy registry + explore adapter
+# ---------------------------------------------------------------------------
+
+def test_unknown_strategy_lists_registry():
+    space = SearchSpace.from_knobs(_fsdp_knobs())
+    with pytest.raises(ValueError) as ei:
+        get_strategy("annealing", space)
+    for name in available_strategies():
+        assert name in str(ei.value)
+
+    g = _graph()
+    with pytest.raises(ValueError) as ei:
+        explore(lambda cfg: g, SYS, _fsdp_knobs(), strategy="annealing")
+    assert "bayesian" in str(ei.value) and "grid" in str(ei.value)
+
+
+def test_grid_adapter_bit_identical_to_manual_walk():
+    """explore(strategy='grid') must reproduce the historical semantics
+    exactly: product order, budget truncation, simulate per config, sorted
+    by objective."""
+    g = _graph()
+    knobs = [Knob("fsdp_sync", [True]),
+             Knob("prefetch", [0, 2, 8]),
+             Knob("link_bw", [25e9, 100e9], layer="hardware")]
+    trials = explore(lambda cfg: g, SYS, knobs)
+
+    expect = []
+    for c in itertools.product(*[[(k.name, v) for v in k.values]
+                                 for k in knobs]):
+        cfg = dict(c)
+        g2 = apply_software_knobs(g, cfg)
+        res = simulate(g2, SYS.replace(link_bw=cfg["link_bw"]))
+        expect.append((cfg, res.total_time))
+    expect.sort(key=lambda t: t[1])
+    assert len(trials) == len(expect)
+    for t, (cfg, obj) in zip(trials, expect):
+        assert t.config == cfg
+        assert t.objective == obj        # bit-identical, not approx
+
+
+def test_explore_nongrid_returns_sorted_budgeted_trials():
+    g = _graph()
+    trials = explore(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+                     budget=12, seed=1)
+    assert len(trials) == 12
+    objs = [t.objective for t in trials]
+    assert objs == sorted(objs)
+    assert all(t.result is not None for t in trials)
+
+
+# ---------------------------------------------------------------------------
+# satellite: Trial.as_dict JSON-native round trip
+# ---------------------------------------------------------------------------
+
+def test_trial_as_dict_round_trips_types():
+    g = _graph()
+    trials = explore(lambda cfg: g, SYS,
+                     [Knob("fsdp_sync", [True]),
+                      Knob("bucket_bytes", [None, 64e6]),
+                      Knob("prefetch", [2])])
+    seen = {repr(t.config["bucket_bytes"]) for t in trials}
+    assert seen == {"None", "64000000.0"}
+    for t in trials:
+        d = json.loads(json.dumps(t.as_dict()))
+        assert d["config"]["fsdp_sync"] is True
+        assert d["config"]["prefetch"] == 2
+        bb = d["config"]["bucket_bytes"]
+        assert bb is None or isinstance(bb, float)
+
+
+def test_json_value_edge_cases():
+    import numpy as np
+    assert json_value(np.float64(2.5)) == 2.5
+    assert isinstance(json_value(np.int64(3)), int)
+    assert json_value(float("inf")) == "inf"
+    assert json_value((1, "a", None)) == [1, "a", None]
+    assert json_value(SYS) == str(SYS)
+
+
+# ---------------------------------------------------------------------------
+# satellite: deterministic seeding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["random", "bayesian", "evolutionary",
+                                      "halving"])
+def test_seed_determinism_property(strategy):
+    """Same seed + same space => identical trial sequence; different seeds
+    diverge."""
+    g = _graph()
+
+    def run(seed):
+        r = SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy=strategy,
+                      budget=16, seed=seed).run()
+        return [(t.config, t.fidelity) for t in r.trials]
+
+    runs = {}
+    for seed in (0, 1, 2):
+        runs[seed] = run(seed)
+        assert runs[seed] == run(seed)
+    assert runs[0] != runs[1] and runs[1] != runs[2] and runs[0] != runs[2]
+
+
+def test_random_is_duplicate_free_on_finite_space():
+    g = _graph()
+    r = SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+                  budget=96, seed=0).run()
+    space = SearchSpace.from_knobs(_fsdp_knobs())
+    keys = [space.config_key(t.config) for t in r.trials]
+    assert len(keys) == len(set(keys)) == 96   # exhausts without repeats
+
+
+# ---------------------------------------------------------------------------
+# acceptance: sample efficiency vs exhaustive grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["bayesian", "evolutionary"])
+def test_within_2pct_of_grid_optimum_at_quarter_budget(strategy):
+    g = _graph()
+    knobs = _fsdp_knobs()
+    grid = explore(lambda cfg: g, SYS, knobs)            # 96 configs
+    optimum = grid[0].objective
+    budget = len(grid) // 4                              # 24 trials
+    trials = explore(lambda cfg: g, SYS, knobs, strategy=strategy,
+                     budget=budget, seed=2)
+    assert len(trials) <= budget
+    best = trials[0].objective
+    assert best <= optimum * 1.02, \
+        f"{strategy}: {best} vs optimum {optimum} (> 2% off)"
+
+
+# ---------------------------------------------------------------------------
+# hetero cluster knob spaces
+# ---------------------------------------------------------------------------
+
+def _hetero_knobs():
+    # grid order deliberately worst-first: truncated grid never reaches the
+    # healthy-cluster corner
+    return [Knob("cluster_ranks", [8], layer="hardware"),
+            Knob("degraded_fraction", [0.5, 0.375, 0.25, 0.125, 0.0],
+                 layer="hardware"),
+            Knob("pod_link_scale", [0.4, 0.6, 0.8, 1.0], layer="hardware")]
+
+
+@pytest.mark.parametrize("strategy", ["random", "bayesian"])
+def test_hetero_space_beats_grid_at_equal_budget(strategy):
+    g = _graph(n_layers=6, group=8)
+    sysc = SystemConfig(chips=8, topology="switch")
+    knobs = _hetero_knobs()
+    budget = 8
+    grid_trunc = explore(lambda cfg: g, sysc, knobs, budget=budget)
+    trials = explore(lambda cfg: g, sysc, knobs, strategy=strategy,
+                     budget=budget, seed=0)
+    # exercises the cluster engine: results are per-rank ClusterSimResults
+    assert all(hasattr(t.result, "n_ranks") and t.result.n_ranks == 8
+               for t in trials)
+    assert trials[0].objective < grid_trunc[0].objective
+
+
+def test_hetero_search_degraded_knob_moves_objective():
+    g = _graph(n_layers=6, group=8)
+    sysc = SystemConfig(chips=8, topology="switch")
+    r = SearchRun(lambda cfg: g, sysc, _hetero_knobs(), strategy="random",
+                  budget=20, seed=0).run()
+    by_frac = {}
+    for t in r.trials:
+        if t.config["pod_link_scale"] == 1.0:
+            by_frac[t.config["degraded_fraction"]] = t.objectives["total_time"]
+    if 0.0 in by_frac and 0.5 in by_frac:
+        assert by_frac[0.0] < by_frac[0.5]
+
+
+# ---------------------------------------------------------------------------
+# multi-objective + Pareto
+# ---------------------------------------------------------------------------
+
+def test_pareto_front_extraction():
+    names = ("a", "b")
+    pts = [{"a": 1.0, "b": 5.0}, {"a": 2.0, "b": 2.0}, {"a": 5.0, "b": 1.0},
+           {"a": 3.0, "b": 3.0},                       # dominated by (2,2)
+           {"a": 2.0, "b": 2.0}]                       # duplicate survives
+    assert pareto_front(pts, names) == [0, 1, 2, 4]
+
+
+def test_multi_objective_time_memory_tradeoff():
+    """Prefetch trades step time against peak memory: the Pareto front over
+    (total_time, peak_bytes) keeps both ends of the knob."""
+    g = _graph()
+    knobs = [Knob("fsdp_sync", [True]),
+             Knob("prefetch", [0, 2, 16])]
+    r = SearchRun(lambda cfg: g, SYS, knobs, strategy="grid",
+                  objectives=("total_time", "peak_bytes"), budget=None).run()
+    assert len(r.full_trials) == 3
+    front = r.pareto_trials()
+    times = {t.config["prefetch"]: t.objectives["total_time"]
+             for t in r.full_trials}
+    mems = {t.config["prefetch"]: t.objectives["peak_bytes"]
+            for t in r.full_trials}
+    assert times[16] < times[0] and mems[16] > mems[0]  # a real tradeoff
+    # both extremes of the front survive: the fastest config and the
+    # leanest config (lexicographic argmins handle objective ties)
+    tmin = min(r.full_trials, key=lambda t: (t.objectives["total_time"],
+                                             t.objectives["peak_bytes"]))
+    mmin = min(r.full_trials, key=lambda t: (t.objectives["peak_bytes"],
+                                             t.objectives["total_time"]))
+    assert tmin in front and mmin in front
+    assert len(front) >= 2 and tmin is not mmin
+
+
+def test_peak_memory_proxy_objective_no_event_loop():
+    g = _graph()
+    knobs = [Knob("fsdp_sync", [True]), Knob("prefetch", [0, 8])]
+    r = SearchRun(lambda cfg: g, SYS, knobs, strategy="grid",
+                  objectives=("total_time", "peak_memory_proxy"),
+                  budget=None).run()
+    proxies = {t.config["prefetch"]: t.objectives["peak_memory_proxy"]
+               for t in r.full_trials}
+    assert proxies[8] > proxies[0] > 0   # prefetch hoists allocations
+
+
+# ---------------------------------------------------------------------------
+# proxy fidelities (halving's rungs)
+# ---------------------------------------------------------------------------
+
+def test_simulate_analytic_is_lower_bound():
+    g = _graph()
+    full = simulate(g, SYS)
+    lo = simulate_analytic(g, SYS)
+    assert lo.total_time <= full.total_time + 1e-15
+    assert lo.total_time == pytest.approx(
+        max(lo.compute_time, lo.comm_time))
+    assert lo.compute_time == pytest.approx(full.compute_time)
+    assert lo.comm_time == pytest.approx(full.comm_time)
+    assert lo.peak_bytes == peak_memory_proxy(g) > 0
+    # memoized: identical result object contents on repeat
+    again = simulate_analytic(g, SYS)
+    assert again.total_time == lo.total_time
+
+
+def test_halving_prices_proxies_then_promotes():
+    g = _graph()
+    r = SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="halving",
+                  budget=26, seed=0).run()
+    fids = [t.fidelity for t in r.trials]
+    assert 0.0 in fids and 1.0 in fids           # proxy rungs + full rung
+    assert len(r.full_trials) < len(r.trials) / 2
+    assert r.best is not None and r.best.is_full
+    # the driver priced sub-full fidelities without the cluster engine:
+    # analytic trials report the roofline bound (<= their symmetric sibling
+    # for the same config when both exist)
+    grid = explore(lambda cfg: g, SYS, _fsdp_knobs())
+    assert r.best.objectives["total_time"] <= grid[0].objective * 1.10
+
+
+# ---------------------------------------------------------------------------
+# budgets + checkpoint/resume
+# ---------------------------------------------------------------------------
+
+def test_wall_clock_budget_stops(tmp_path):
+    g = _graph()
+    r = SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+                  budget=10_000, wall_clock=0.0, seed=0).run()
+    assert len(r.trials) == 0            # deadline hit before first ask
+
+
+def _truncate_checkpoint(path: str, n_trials: int) -> None:
+    """Simulate a kill: keep the header and the first `n_trials` lines."""
+    with open(path) as f:
+        lines = f.read().splitlines()
+    with open(path, "w") as f:
+        f.write("\n".join(lines[:1 + n_trials]) + "\n")
+
+
+def test_checkpoint_resume_without_reevaluation(tmp_path, monkeypatch):
+    g = _graph()
+    knobs = _fsdp_knobs()
+
+    ref = SearchRun(lambda cfg: g, SYS, knobs, strategy="bayesian",
+                    budget=14, seed=7).run()
+    ref_seq = [t.config for t in ref.trials]
+
+    ck = str(tmp_path / "run.jsonl")
+    r1 = SearchRun(lambda cfg: g, SYS, knobs, strategy="bayesian",
+                   budget=14, seed=7, checkpoint=ck).run()
+    assert (r1.n_evaluated, r1.n_resumed) == (14, 0)
+    _truncate_checkpoint(ck, 5)          # killed after 5 trials
+
+    evals = []
+    orig = SearchRun._evaluate
+
+    def counting(self, cfg, fid):
+        evals.append(dict(cfg))
+        return orig(self, cfg, fid)
+
+    monkeypatch.setattr(SearchRun, "_evaluate", counting)
+    r2 = SearchRun(lambda cfg: g, SYS, knobs, strategy="bayesian",
+                   budget=14, seed=7, checkpoint=ck).run()
+    assert (r2.n_evaluated, r2.n_resumed) == (9, 5)
+    assert len(evals) == 9               # completed trials NOT re-simulated
+    assert [t.config for t in r2.trials] == ref_seq  # == uninterrupted run
+
+    # a third run is a no-op
+    r3 = SearchRun(lambda cfg: g, SYS, knobs, strategy="bayesian",
+                   budget=14, seed=7, checkpoint=ck).run()
+    assert (r3.n_evaluated, r3.n_resumed) == (0, 14)
+
+
+def test_checkpoint_torn_tail_tolerated_and_repaired(tmp_path):
+    g = _graph()
+    ck = str(tmp_path / "run.jsonl")
+    SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+              budget=8, seed=0, checkpoint=ck).run()
+    _truncate_checkpoint(ck, 6)
+    with open(ck, "a") as f:
+        f.write('{"index": 99, "config": {"pref')   # killed mid-write
+    r = SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+                  budget=8, seed=0, checkpoint=ck).run()
+    assert (r.n_resumed, r.n_evaluated) == (6, 2)
+    # the torn fragment was repaired, not appended onto: the file is clean
+    # JSONL again and a further resume replays all 8 trials
+    with open(ck) as f:
+        lines = [json.loads(ln) for ln in f.read().splitlines() if ln]
+    assert len(lines) == 1 + 8
+    r2 = SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+                   budget=8, seed=0, checkpoint=ck).run()
+    assert (r2.n_resumed, r2.n_evaluated) == (8, 0)
+
+
+def test_checkpoint_header_mismatch_refuses(tmp_path):
+    g = _graph()
+    ck = str(tmp_path / "run.jsonl")
+    SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+              budget=8, seed=0, checkpoint=ck).run()
+    with pytest.raises(ValueError, match="seed"):
+        SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+                  budget=8, seed=1, checkpoint=ck).run()
+    with pytest.raises(ValueError, match="strategy"):
+        SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="evolutionary",
+                  budget=8, seed=0, checkpoint=ck).run()
+    # budget shapes the ask sequence (init designs, populations, brackets)
+    # so resuming under a different budget is refused, not silently wrong
+    with pytest.raises(ValueError, match="budget"):
+        SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+                  budget=16, seed=0, checkpoint=ck).run()
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_run_resume_front(tmp_path, capsys):
+    from repro.search.cli import main
+    gpath = str(tmp_path / "g.json")
+    _graph().save(gpath)
+    ck = str(tmp_path / "ck.jsonl")
+    args = ["run", gpath, "--knob", "prefetch=0,2,4,8",
+            "--knob", "bucket_bytes=null,64e6",
+            "--knob", "link_bw=12.5e9,50e9@hardware",
+            "--strategy", "bayesian", "--seed", "3", "--budget", "9",
+            "--objectives", "total_time,peak_memory_proxy",
+            "--checkpoint", ck]
+    assert main(args) == 0
+    out1 = capsys.readouterr().out
+    assert "9 trials" in out1 and "best" in out1
+
+    _truncate_checkpoint(ck, 5)          # simulate a kill after 5 trials
+    assert main(args) == 0
+    out2 = capsys.readouterr().out
+    assert "5 resumed, 4 evaluated" in out2
+
+    assert main(["front", ck]) == 0
+    out3 = capsys.readouterr().out
+    assert "strategy=bayesian" in out3 and "front #" in out3
+
+    # knob values arrived typed, not stringified
+    with open(ck) as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    for t in lines[1:]:
+        bb = t["config"]["bucket_bytes"]
+        assert bb is None or isinstance(bb, float)
+
+
+def test_cli_system_handoff(tmp_path, capsys):
+    """--system cal.json (the trace calibrator's output format) prices the
+    search on the calibrated model."""
+    from repro.search.cli import main
+    gpath = str(tmp_path / "g.json")
+    _graph().save(gpath)
+    cal = {"system": {"link_bw": 5e9, "chips": 16, "topology": "switch"},
+           "compute_derate": 0.3}
+    cpath = str(tmp_path / "cal.json")
+    with open(cpath, "w") as f:
+        json.dump(cal, f)
+    base = ["run", gpath, "--knob", "prefetch=0,4", "--strategy", "grid",
+            "--budget", "4", "--out"]
+    assert main(base + [str(tmp_path / "a.json")]) == 0
+    assert main(base + [str(tmp_path / "b.json"), "--system", cpath]) == 0
+    a = json.load(open(tmp_path / "a.json"))
+    b = json.load(open(tmp_path / "b.json"))
+    # derated compute + slower links => strictly slower best step
+    assert b["best"]["objectives"]["total_time"] > \
+        a["best"]["objectives"]["total_time"]
+
+
+def test_cli_front_tolerates_torn_tail(tmp_path, capsys):
+    from repro.search.cli import main
+    gpath = str(tmp_path / "g.json")
+    _graph().save(gpath)
+    ck = str(tmp_path / "ck.jsonl")
+    assert main(["run", gpath, "--knob", "prefetch=0,2,4",
+                 "--strategy", "random", "--budget", "3",
+                 "--checkpoint", ck]) == 0
+    capsys.readouterr()
+    with open(ck, "a") as f:
+        f.write('{"index": 99, "config": {"pref')     # killed mid-write
+    assert main(["front", ck]) == 0
+    out = capsys.readouterr().out
+    assert "trials=3" in out and "best" in out
+
+
+def test_cli_rejects_workload_knobs(tmp_path, capsys):
+    from repro.search.cli import main
+    gpath = str(tmp_path / "g.json")
+    _graph().save(gpath)
+    rc = main(["run", gpath, "--knob", "n_layers=8,16@workload",
+               "--knob", "prefetch=0,2", "--budget", "4"])
+    assert rc == 2
+    assert "workload" in capsys.readouterr().err
+
+
+def test_checkpoint_version_mismatch_refuses(tmp_path):
+    g = _graph()
+    ck = str(tmp_path / "run.jsonl")
+    SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+              budget=4, seed=0, checkpoint=ck).run()
+    with open(ck) as f:
+        lines = f.read().splitlines()
+    head = json.loads(lines[0])
+    head["search"] = 99
+    with open(ck, "w") as f:
+        f.write("\n".join([json.dumps(head, sort_keys=True)] + lines[1:])
+                + "\n")
+    with pytest.raises(ValueError, match="version"):
+        SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+                  budget=4, seed=0, checkpoint=ck).run()
+
+
+def test_cli_user_errors_exit_2_not_traceback(tmp_path, capsys):
+    from repro.search.cli import main
+    gpath = str(tmp_path / "g.json")
+    _graph().save(gpath)
+    assert main(["run", gpath, "--knob", "noequals"]) == 2
+    assert "error" in capsys.readouterr().err
+    ck = str(tmp_path / "ck.jsonl")
+    base = ["run", gpath, "--knob", "prefetch=0,2", "--budget", "2",
+            "--checkpoint", ck]
+    assert main(base + ["--seed", "0"]) == 0
+    capsys.readouterr()
+    assert main(base + ["--seed", "1"]) == 2     # header mismatch, no traceback
+    assert "mismatch" in capsys.readouterr().err
+
+
+def test_cli_parse_knob():
+    from repro.search.cli import parse_knob
+    k = parse_knob("bucket_bytes=null,64e6,1.5@hardware")
+    assert k.name == "bucket_bytes" and k.layer == "hardware"
+    assert k.values == [None, 64e6, 1.5]
+    k2 = parse_knob("algo=ring,hd")
+    assert k2.values == ["ring", "hd"] and k2.layer == "software"
+    with pytest.raises(ValueError):
+        parse_knob("noequals")
+    with pytest.raises(ValueError):
+        parse_knob("a=1@badlayer")
