@@ -1,0 +1,145 @@
+"""MPMD cluster-engine benchmark -> BENCH_mpmd.json (gated by
+benchmarks/check_regression.py "mpmd" floors).
+
+Three figures:
+
+  identity          1.0 iff K identical graphs under the MPMD engine are
+                    bit-identical to single-graph ``simulate_cluster`` and
+                    to ``simulate()`` (the PR's acceptance contract — an
+                    exactness gate, not a speedup).
+  split_ratio_S     pipeline-split step time vs the 1-stage baseline for
+                    S in {2, 4}: the same chips repartitioned into S
+                    stages x (ranks/S) DP replicas via
+                    ``convert.split_pipeline_stages`` (recorded for the
+                    EXPERIMENTS narrative; workload-dependent, no floor).
+  coalesce_speedup  wall-time speedup of graph+profile rank coalescing on
+                    a 64-rank two-pool MPMD program (32 training ranks +
+                    32 serving ranks stitched by a cluster-wide sync
+                    collective) vs the naive one-row-per-rank engine.
+
+Usage: python -m benchmarks.mpmd_pipeline [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import emit, write_json
+
+
+def fsdp_stack(n_layers: int, group, flops: float = 5e10):
+    """FSDP-style layer stack whose collectives span `group` (literal rank
+    ids — the MPMD reading)."""
+    from repro.core import chakra
+
+    g = chakra.Graph()
+    group = list(group)
+    prev = None
+    for i in range(n_layers):
+        ag = g.add(f"ag{i}", chakra.COMM_COLL, comm_kind="all-gather",
+                   comm_bytes=8e6, out_bytes=8e6, group=group,
+                   ctrl_deps=[prev] if prev is not None else [])
+        fwd = g.add(f"f{i}", chakra.COMP,
+                    deps=[ag] + ([prev] if prev is not None else []),
+                    flops=flops, bytes=1e8, out_bytes=1e6)
+        bwd = g.add(f"b{i}", chakra.COMP, deps=[fwd], flops=2 * flops,
+                    bytes=2e8, out_bytes=1e6)
+        g.add(f"ar{i}", chakra.COMM_COLL, deps=[bwd],
+              comm_kind="all-reduce", comm_bytes=4e6, group=group)
+        prev = bwd
+    return g
+
+
+def two_pool_program(n_layers: int, K: int):
+    """Ranks [0, K/2) train, ranks [K/2, K) serve a lighter stack; one
+    cluster-wide all-reduce per program stitches the pools (weight sync)."""
+    from repro.core import chakra
+    from repro.core.costmodel import MPMDProgram
+
+    half = K // 2
+    g_train = fsdp_stack(n_layers, range(half))
+    g_serve = fsdp_stack(n_layers, range(half, K), flops=5e8)
+    for g in (g_train, g_serve):
+        last = len(g.nodes) - 1
+        g.add("pool_sync", chakra.COMM_COLL, deps=[last],
+              comm_kind="all-reduce", comm_bytes=1e6, group=list(range(K)))
+    return MPMDProgram([g_train] * half + [g_serve] * (K - half))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for the CI gate")
+    args = ap.parse_args(argv)
+
+    from repro.configs.base import SystemConfig
+    from repro.core.convert import split_pipeline_stages
+    from repro.core.costmodel import build_topology, simulate, simulate_cluster
+
+    n_layers = 8 if args.smoke else 24
+    reps = 3 if args.smoke else 5
+    ranks = 8
+    sysc = SystemConfig(chips=ranks, topology="switch")
+    topo = build_topology(sysc, ranks)
+    payload = {"smoke": bool(args.smoke)}
+
+    # -- identity: K identical graphs == SPMD engine == simulate() ---------
+    g = fsdp_stack(n_layers, range(ranks))
+    ref = simulate(g, sysc, topo, keep_timeline=True)
+    identical = 1.0
+    for K in (2, 4):
+        mp = simulate_cluster([g] * K, sysc, topo, keep_timeline=True)
+        sp = simulate_cluster(g, sysc, topo, n_ranks=K, keep_timeline=True)
+        for r in range(K):
+            mr = mp.rank_result(r)
+            ok = (mr.total_time == ref.total_time == sp.step_time
+                  and mr.timeline == ref.timeline
+                  and mp.step_time == sp.step_time)
+            if not ok:
+                identical = 0.0
+    payload["identity"] = identical
+    emit("mpmd.identity", 0.0, f"{identical:.0f}")
+
+    # -- pipeline split ratio vs 1-stage baseline --------------------------
+    base = simulate(g, sysc, topo).total_time
+    for S in (2, 4):
+        t0 = time.perf_counter()
+        prog = split_pipeline_stages(g, S, replicas=ranks // S)
+        cr = simulate_cluster(prog, sysc, topo)
+        dt = (time.perf_counter() - t0) * 1e6
+        ratio = cr.step_time / base
+        payload[f"split_ratio_{S}"] = ratio
+        payload[f"split_step_ms_{S}"] = cr.step_time * 1e3
+        emit(f"mpmd.pipeline_{S}stage", dt,
+             f"step={cr.step_time * 1e3:.3f}ms ratio={ratio:.3f}")
+    payload["baseline_step_ms"] = base * 1e3
+
+    # -- coalescing speedup on a 64-rank two-pool MPMD program -------------
+    K = 64
+    prog = two_pool_program(n_layers, K)
+    simulate_cluster(prog, sysc, topo)         # warm compile/duration caches
+
+    def timed(coalesce):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            cr = simulate_cluster(prog, sysc, topo, coalesce=coalesce)
+        return (time.perf_counter() - t0) / reps, cr
+
+    t_co, cr_co = timed(True)
+    t_naive, cr_naive = timed(False)
+    assert cr_co.rank_times == cr_naive.rank_times, "coalesce != naive!"
+    speedup = t_naive / t_co if t_co > 0 else 0.0
+    payload["coalesce_speedup"] = speedup
+    payload["coalesce_n_classes"] = cr_co.n_classes
+    payload["coalesce_ms"] = t_co * 1e3
+    payload["naive_ms"] = t_naive * 1e3
+    emit("mpmd.coalescing_64rank", t_co * 1e6,
+         f"{speedup:.1f}x_vs_naive_classes={cr_co.n_classes}")
+
+    path = write_json("BENCH_mpmd.json", payload)
+    emit("mpmd.bench_file", 0.0, path)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

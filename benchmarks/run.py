@@ -15,9 +15,13 @@
                            round-trip exactness + calibration recovery
   search_bench     (ours)  search strategies: trials-to-within-2%-of-grid
                            sample efficiency per strategy
+  mpmd_pipeline    (ours)  true-MPMD cluster engine: K-identical-graph
+                           exactness, pipeline-split step ratios,
+                           64-rank two-pool coalescing speedup
   check_regression (gate)  fails if BENCH_sim speedups, BENCH_trace
-                           round-trip/calibration or BENCH_search
-                           sample-efficiency figures fall below
+                           round-trip/calibration, BENCH_search
+                           sample-efficiency or BENCH_mpmd
+                           exactness/coalescing figures fall below
                            benchmarks/thresholds.json floors
 
 Each bench runs in its own subprocess so it controls its fake-device count
@@ -30,7 +34,7 @@ import time
 BENCHES = ["opcounts", "e2e_validation", "fsdp_reorder", "bandwidth_sweep",
            "wafer_tacos", "nic_degradation", "roofline", "sim_bench",
            "hetero_cluster", "trace_roundtrip", "search_bench",
-           "check_regression"]
+           "mpmd_pipeline", "check_regression"]
 
 
 def main() -> None:

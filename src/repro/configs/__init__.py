@@ -1,9 +1,10 @@
 from repro.configs.base import (ModelConfig, ShapeConfig, ParallelConfig,
                                 SystemConfig, SHAPES, ALL_SHAPES, TRAIN_4K,
                                 PREFILL_32K, DECODE_32K, LONG_500K)
+from repro.configs.workload import workload_graph
 
 __all__ = [
     "ModelConfig", "ShapeConfig", "ParallelConfig", "SystemConfig",
     "SHAPES", "ALL_SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
-    "LONG_500K",
+    "LONG_500K", "workload_graph",
 ]

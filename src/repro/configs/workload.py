@@ -1,0 +1,81 @@
+"""Analytic workload-zoo graph builder: ``ModelConfig`` -> Chakra graph.
+
+The capture pipeline (``repro.core.capture``) produces exact graphs but
+needs jax + fake devices; the zoo conformance suite and the MPMD pipeline
+machinery need *a* faithful graph for every registry arch without either.
+``workload_graph`` emits the standard FSDP train-step skeleton straight
+from the config's analytic dimensions:
+
+  per layer:  all-gather(weights)  ->  fwd COMP  [-> all-to-all for MoE
+              layers]  ->  bwd COMP  ->  all-reduce(grads)
+
+with flops from the 6·N·D rule split 2·N·D forward / 4·N·D backward (plus
+the quadratic attention term for attention layers), per-layer parameter
+bytes as the collective payloads, and activation ``out_bytes`` so memory
+liveness and the pipeline splitter's P2P payloads are meaningful.  The
+resulting graph exercises every node type the cost model prices and splits
+cleanly into 2–8 pipeline stages (``convert.split_pipeline_stages``).
+"""
+from __future__ import annotations
+
+from repro.configs.base import ATTENTION_KINDS, ModelConfig
+from repro.core import chakra
+
+_BF16 = 2.0
+
+
+def workload_graph(cfg: ModelConfig, batch_tokens: int = 2048,
+                   ranks: int = 8, with_backward: bool = True) -> chakra.Graph:
+    """FSDP train-step (or forward-only) graph for one registry arch.
+
+    `ranks` is the data-parallel group the collectives span; the graph is
+    the rank-symmetric SPMD view (feed it to ``simulate``/
+    ``simulate_cluster`` directly, or through ``split_pipeline_stages`` for
+    an MPMD pipeline program).
+    """
+    if ranks < 1:
+        raise ValueError(f"ranks must be >= 1, got {ranks}")
+    g = chakra.Graph(meta={"source": "configs.workload", "arch": cfg.name,
+                           "ranks": ranks, "batch_tokens": batch_tokens})
+    group = list(range(ranks))
+    kinds = cfg.layer_kinds or ("global",)
+    L = len(kinds)
+    params_layer = cfg.param_count() / max(L, 1)
+    pbytes = _BF16 * params_layer
+    act = _BF16 * batch_tokens * cfg.d_model
+    prev = None
+    for i, kind in enumerate(kinds):
+        ag = g.add(f"ag{i}_{kind}", chakra.COMM_COLL,
+                   ctrl_deps=[prev] if prev is not None else [],
+                   comm_kind="all-gather", comm_bytes=pbytes,
+                   out_bytes=pbytes, group=group, group_size=ranks)
+        f_flops = 2.0 * params_layer * batch_tokens
+        if kind in ATTENTION_KINDS:
+            # QK^T and PV matmuls: 2 * 2 * T^2 * n_heads * head_dim
+            f_flops += 4.0 * float(batch_tokens) ** 2 \
+                * cfg.num_heads * cfg.head_dim
+        fwd = g.add(f"f{i}_{kind}", chakra.COMP,
+                    deps=[ag] + ([prev] if prev is not None else []),
+                    flops=f_flops, bytes=pbytes + act, out_bytes=act)
+        last = fwd
+        if cfg.num_experts:
+            # expert-parallel dispatch: tokens cross the group twice; one
+            # all-to-all stands in for dispatch+combine payload-wise
+            last = g.add(f"a2a{i}", chakra.COMM_COLL, deps=[fwd],
+                         comm_kind="all-to-all", comm_bytes=2.0 * act,
+                         out_bytes=act, group=group, group_size=ranks)
+        if with_backward:
+            bwd = g.add(f"b{i}_{kind}", chakra.COMP, deps=[last],
+                        flops=2.0 * f_flops, bytes=pbytes + 2.0 * act,
+                        out_bytes=act)
+            g.add(f"ar{i}_{kind}", chakra.COMM_COLL, deps=[bwd],
+                  comm_kind="all-reduce", comm_bytes=pbytes, group=group,
+                  group_size=ranks)
+            prev = bwd
+        else:
+            prev = last
+    g.add("logits", chakra.COMP, deps=[prev],
+          flops=2.0 * batch_tokens * cfg.d_model * cfg.vocab_size,
+          bytes=act + _BF16 * cfg.d_model * cfg.vocab_size,
+          out_bytes=_BF16 * batch_tokens * min(cfg.vocab_size, 4096))
+    return g

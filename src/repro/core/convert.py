@@ -221,6 +221,180 @@ def hlo_to_chakra(mod: HloModule, meta: Optional[dict] = None) -> chakra.Graph:
     return g
 
 
+def _stage_assignment(g: chakra.Graph, order: List[int], num_stages: int,
+                      assignment) -> List[int]:
+    """nid -> stage index.  ``assignment`` is a balancing policy ("flops":
+    contiguous topo segments balanced by compute flops; "nodes": balanced by
+    node count) or an explicit per-node map (list/dict nid -> stage).
+    Explicit maps are validated: every stage non-empty, every dependency
+    pointing to the same or an earlier stage (a pipeline never sends
+    activations backwards inside one step's dataflow)."""
+    n = len(g.nodes)
+    S = num_stages
+    if not isinstance(assignment, str):
+        if not isinstance(assignment, dict) and len(assignment) != n:
+            raise ValueError(f"stage_assignment covers {len(assignment)} "
+                             f"nodes, graph has {n}")
+        get = (assignment.get if isinstance(assignment, dict)
+               else lambda nid: assignment[nid])
+        stage_of = []
+        for nid in range(n):
+            s = get(nid)
+            if s is None:
+                raise ValueError(f"stage_assignment omits node {nid} "
+                                 f"({g.node(nid).name!r}) — explicit maps "
+                                 "must cover every node")
+            stage_of.append(int(s))
+        for nid, s in enumerate(stage_of):
+            if not 0 <= s < S:
+                raise ValueError(f"stage_assignment maps node {nid} to "
+                                 f"stage {s} outside 0..{S - 1}")
+        missing = set(range(S)) - set(stage_of)
+        if missing:
+            raise ValueError(f"stage_assignment leaves stage(s) "
+                             f"{sorted(missing)} empty")
+        for node in g.nodes:
+            for d in node.all_deps:
+                if stage_of[d] > stage_of[node.id]:
+                    raise ValueError(
+                        f"stage_assignment creates a backward cross-stage "
+                        f"dependency: node {node.id} (stage "
+                        f"{stage_of[node.id]}) depends on node {d} (stage "
+                        f"{stage_of[d]})")
+        return stage_of
+    if assignment not in ("flops", "nodes"):
+        raise ValueError(f"unknown stage assignment policy {assignment!r}: "
+                         "expected 'flops', 'nodes' or an explicit map")
+    if assignment == "flops":
+        # +1 keeps zero-flops (comm/mem) nodes from collapsing a stage
+        w = [g.node(nid).attrs.get("flops", 0.0) + 1.0 for nid in range(n)]
+    else:
+        w = [1.0] * n
+    total = sum(w)
+    stage_of = [0] * n
+    s = 0
+    cum = 0.0
+    for idx, nid in enumerate(order):
+        stage_of[nid] = s
+        cum += w[nid]
+        left = n - idx - 1
+        if s < S - 1 and (cum >= total * (s + 1) / S
+                          or left == S - 1 - s):
+            s += 1
+    return stage_of
+
+
+def split_pipeline_stages(g: chakra.Graph, num_stages: int,
+                          assignment="flops", replicas: int = 1):
+    """Split one workload graph into an S-stage pipeline ``MPMDProgram``.
+
+    The graph is partitioned into `num_stages` contiguous topological
+    segments (see ``_stage_assignment``); each cross-stage dependency
+    u(stage i) -> v(stage j) becomes a matched **send/recv P2P-collective
+    pair**: a ``COMM_COLL`` node of ``comm_kind="p2p"`` with
+    ``group=[rank(i), rank(j)]`` on each side, so the MPMD engine's
+    (group, program-order) barrier keying synchronizes the stages exactly
+    like a FIFO channel (one pair per (producer, destination stage); the
+    recv materializes the producer's ``out_bytes`` on the consumer stage).
+
+    `replicas` data-parallel replicas of the pipeline run side by side:
+    rank = stage * replicas + replica (stage-major), and every original
+    collective's group is rewritten to its stage's rank set — the DP
+    all-reduce of a stage spans that stage's replicas (with ``replicas=1``
+    collectives become stage-local and free, modeling the repartition of
+    the cluster into stages).  Returns an ``MPMDProgram`` over
+    ``num_stages * replicas`` ranks whose meta records the split
+    (``stage_of``, ``p2p_pairs``, ``num_stages``, ``replicas``).
+    """
+    from repro.core.costmodel.mpmd import MPMDProgram
+
+    S = int(num_stages)
+    R = int(replicas)
+    n = len(g.nodes)
+    if S < 1 or R < 1:
+        raise ValueError(f"num_stages={S} / replicas={R} must be >= 1")
+    if n == 0 or S > n:
+        raise ValueError(f"cannot split a {n}-node graph into {S} stages")
+    order = g.topo_order()
+    stage_of = _stage_assignment(g, order, S, assignment)
+    stage_ranks = {s: list(range(s * R, (s + 1) * R)) for s in range(S)}
+
+    rank_graphs: List[Optional[chakra.Graph]] = [None] * (S * R)
+    n_pairs = 0
+    for d in range(R):
+        sgs = [chakra.Graph(meta={**g.meta, "pipeline_stage": s,
+                                  "num_stages": S, "pipeline_replica": d})
+               for s in range(S)]
+        local: Dict[int, tuple] = {}       # orig nid -> (stage, local nid)
+        xfer: Dict[tuple, int] = {}        # (orig nid, dst stage) -> recv id
+        chan: Dict[tuple, tuple] = {}      # (src, dst) -> (last send, last recv)
+
+        def cross(dd: int, dst: int) -> int:
+            key = (dd, dst)
+            rv = xfer.get(key)
+            if rv is None:
+                src, lsrc = local[dd]
+                name = g.node(dd).name
+                payload = float(g.node(dd).attrs.get("out_bytes", 0.0))
+                pg = [src * R + d, dst * R + d]
+                # FIFO channel discipline: chain same-channel sends (and
+                # recvs) with ctrl edges so both sides commit their p2p
+                # collectives in creation order — the MPMD engine pairs the
+                # k-th send with the k-th recv of a group, and without the
+                # chain a cheap late-created send could overtake an
+                # expensive earlier one and cross the wires (a consumer
+                # would start before its real producer finished).  A real
+                # single-channel p2p stream serializes exactly like this.
+                prev_s, prev_r = chan.get((src, dst), (None, None))
+                snid = sgs[src].add(
+                    f"send[{name}>s{dst}]", chakra.COMM_COLL,
+                    deps=[lsrc],
+                    ctrl_deps=[prev_s] if prev_s is not None else [],
+                    comm_kind="p2p", comm_bytes=payload, out_bytes=0.0,
+                    group=pg, group_size=2, p2p_src_stage=src,
+                    p2p_dst_stage=dst)
+                rv = xfer[key] = sgs[dst].add(
+                    f"recv[{name}<s{src}]", chakra.COMM_COLL,
+                    ctrl_deps=[prev_r] if prev_r is not None else [],
+                    comm_kind="p2p", comm_bytes=payload, out_bytes=payload,
+                    group=pg, group_size=2, p2p_src_stage=src,
+                    p2p_dst_stage=dst)
+                chan[(src, dst)] = (snid, rv)
+            return rv
+
+        for nid in order:
+            node = g.node(nid)
+            s = stage_of[nid]
+            deps_l: List[int] = []
+            ctrl_l: List[int] = []
+            for src_deps, out in ((node.deps, deps_l),
+                                  (node.ctrl_deps, ctrl_l)):
+                for dd in src_deps:
+                    ds, dl = local[dd]
+                    out.append(dl if ds == s else cross(dd, s))
+            attrs = dict(node.attrs)
+            if node.type == chakra.COMM_COLL:
+                # the collective now spans this stage's replica pool
+                attrs["group"] = list(stage_ranks[s])
+                attrs["group_size"] = R
+            local[nid] = (s, sgs[s].add(node.name, node.type,
+                                        deps=list(dict.fromkeys(deps_l)),
+                                        ctrl_deps=list(dict.fromkeys(ctrl_l)),
+                                        **attrs))
+        if d == 0:
+            n_pairs = len(xfer)
+        for s in range(S):
+            rank_graphs[s * R + d] = sgs[s]
+
+    return MPMDProgram(rank_graphs,
+                       meta={"num_stages": S, "replicas": R,
+                             "assignment": (assignment if isinstance(
+                                 assignment, str) else "explicit"),
+                             "stage_of": list(stage_of),
+                             "p2p_pairs": n_pairs,
+                             "source_nodes": n})
+
+
 def expand_collective_p2p(kind: str, payload: int, group: List[int],
                           algo: str = "ring"):
     """Expand one collective into point-to-point (src, dst, bytes, round)

@@ -10,6 +10,8 @@ from repro.core.costmodel.simulator import (simulate, simulate_analytic,
                                             straggler_analysis, SimResult,
                                             ClusterSimResult, node_duration,
                                             peak_memory_proxy)
+from repro.core.costmodel.mpmd import (MPMDProgram, ClusterProgramError,
+                                       simulate_mpmd, collective_fingerprint)
 from repro.core.costmodel.analytical import (roofline, RooflineTerms,
                                              model_flops_per_step)
 
@@ -19,4 +21,6 @@ __all__ = ["Topology", "Switch", "Ring", "Torus2D", "Wafer2D", "MultiPod",
            "compile_graph", "simulate", "simulate_analytic", "simulate_batch",
            "simulate_cluster", "straggler_analysis", "SimResult",
            "ClusterSimResult", "node_duration", "peak_memory_proxy",
+           "MPMDProgram", "ClusterProgramError", "simulate_mpmd",
+           "collective_fingerprint",
            "roofline", "RooflineTerms", "model_flops_per_step"]

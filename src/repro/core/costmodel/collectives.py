@@ -69,6 +69,16 @@ def collective_time(kind: str, payload: float, group: List[int],
                     zip(group, group[1:] + group[:1])), default=1)
         return payload / link_bw + hops * alpha
 
+    if kind in ("p2p", "send-recv"):
+        # pipeline send/recv-as-collective (convert.split_pipeline_stages):
+        # the full payload crosses one link between the two group members
+        link_bw = topo.link_bw
+        if bw_scale != 1.0:
+            link_bw *= bw_scale
+        hops = max((topo.hop_distance(a, b)
+                    for a, b in zip(group, group[1:])), default=1)
+        return payload / link_bw + hops * alpha
+
     if kind == "all-to-all":
         # bisection-limited
         bis = topo.bisection_bw()

@@ -50,6 +50,13 @@ equivalence classes (profile + collective-group environment) so a
 symmetric 1024-rank cluster still costs one event loop, and only distinct
 rank behaviors pay for extra rows.
 
+The engine itself lives in the module-level ``run_rows``: each ``RowSpec``
+carries its *own* compiled graph, so rows need not share a program —
+``costmodel.mpmd`` builds per-rank-graph (true MPMD) clusters on the same
+loop, with barriers carrying per-row node ids.  ``run_cluster`` is the
+K-rows-over-one-graph wrapper and stays bit-identical to its historical
+behavior.
+
 Use ``compile_graph(g)`` to get the per-Graph cached instance; the cache key
 is the Graph's edit token (see chakra.Graph docstring for the invalidation
 contract).
@@ -470,13 +477,14 @@ class CompiledGraph:
 
         `dur_rows[j]` is row j's full per-node duration list; `barrier_map[j]`
         maps a COMM_COLL node id to the shared mutable barrier
-        ``[remaining, max_arrival, rows_tuple, cost, arrivals_dict]`` that row
-        participates in (only collectives whose participant set spans >= 2
-        rows appear — a single-row collective runs on the plain ``run()``
-        path, which is what keeps the symmetric/coalesced case bit-identical).
-        The barrier's `cost` is fixed up front as the max over member rows'
-        own durations for that node: each row prices the collective at its
-        own link speed, so the max IS the weakest-member price.
+        ``[remaining, max_arrival, rows_tuple, cost, arrivals_dict,
+        nid_by_row]`` that row participates in (only collectives whose
+        participant set spans >= 2 rows appear — a single-row collective runs
+        on the plain ``run()`` path, which is what keeps the
+        symmetric/coalesced case bit-identical).  The barrier's `cost` is
+        fixed up front as the max over member rows' own durations for that
+        node: each row prices the collective at its own link speed, so the
+        max IS the weakest-member price.
 
         `coll_order` (required when any barrier exists) is the canonical
         program order of collectives: each row issues its barrier'd
@@ -488,310 +496,23 @@ class CompiledGraph:
         already commit in canonical order, so the discipline never fires and
         the per-row loop stays bit-identical to ``run()``.
 
+        All K rows replay the *same* compiled graph here; the engine itself
+        (``run_rows``) also accepts one graph per row — the true-MPMD mode
+        ``costmodel.mpmd`` builds rows for (per-rank graphs, shared
+        collective barriers keyed by group + per-group program order).
+
         Returns ``(results, waits)``: per-row ``SimResult`` plus per-row
         total comm-stream barrier-wait seconds (time between a row's arrival
         at a collective and the slowest member's arrival).
         """
-        from repro.core.costmodel.simulator import SimResult, Span
-
-        n_total = self.n
-        pos = self._pos
-        order = self._order
-        ddeps = self._ddeps
-        cons = self._cons
-        out_b = self._out_bytes
-        is_comm = self._is_comm
-        names = self._names
-        scode = is_comm if overlap else self._zeros
-        is_coll = self._is_coll
-        push, pop = heapq.heappush, heapq.heappop
-        J = len(dur_rows)
-
-        if coll_order is None and any(barrier_map):
-            raise ValueError("run_cluster needs coll_order when barriers "
-                             "are present (see canonical_coll_order)")
-
-        class _Row:
-            __slots__ = ("remaining", "dcount", "dmax", "sf0", "sf1",
-                         "busy0", "busy1", "total", "wait", "avail0",
-                         "avail1", "future0", "future1", "mem_events",
-                         "timeline", "scheduled", "done",
-                         "exp_list", "exp_i", "deferred")
-
-        states = []
-        for j in range(J):
-            st = _Row()
-            st.remaining = self._indeg0[:]
-            st.dcount = self._dcount0[:]
-            st.dmax = [0.0] * n_total
-            st.sf0 = st.sf1 = 0.0
-            st.busy0 = st.busy1 = 0.0
-            st.total = 0.0
-            st.wait = 0.0
-            st.avail0, st.avail1 = [], []
-            for nid in self._roots:
-                (st.avail1 if scode[nid] else st.avail0).append(pos[nid])
-            heapq.heapify(st.avail0)
-            heapq.heapify(st.avail1)
-            st.future0, st.future1 = [], []
-            st.mem_events = []
-            st.timeline = [] if keep_timeline else None
-            st.scheduled = 0
-            st.done = False
-            # program-order discipline covers EVERY collective (not just
-            # barrier'd ones) so commit order — and float accumulation
-            # order — is identical whatever the rank coalescing chose
-            st.exp_list = coll_order or ()
-            st.exp_i = 0
-            st.deferred = {}
-            states.append(st)
-
-        def _deliver(st, nid, end):
-            """Post-duration commit tail shared by barrier resolution and the
-            normal path of a suspended row: consumer wakeups + ddep frees,
-            identical bookkeeping to run()."""
-            for c in cons[nid]:
-                r = st.remaining[c] - 1
-                st.remaining[c] = r
-                dep_t = st.dmax[c]
-                if end > dep_t:
-                    st.dmax[c] = dep_t = end
-                if r == 0:
-                    pc = pos[c]
-                    if scode[c]:
-                        if dep_t <= st.sf1:
-                            push(st.avail1, pc)
-                        else:
-                            push(st.future1, (dep_t, pc))
-                    else:
-                        if dep_t <= st.sf0:
-                            push(st.avail0, pc)
-                        else:
-                            push(st.future0, (dep_t, pc))
-            for dd in ddeps[nid]:
-                r = st.dcount[dd] - 1
-                st.dcount[dd] = r
-                if r <= 0:
-                    ob = out_b[dd]
-                    if ob:
-                        st.mem_events.append((end, -ob))
-
-        def _complete_suspended(w, nid, b, end):
-            """Finish the commit a suspended row w started when it arrived at
-            barrier b: charge cost from its own arrival, attribute the wait,
-            then release it."""
-            st = states[w]
-            arr, sw = b[4][w]
-            cost = b[3]
-            if sw:
-                st.sf1 = end
-            else:                      # overlap=False: comm runs on stream 0
-                st.sf0 = end
-            st.busy1 += cost           # busy accounting is by node *type*
-            st.wait += b[1] - arr
-            if end > st.total:
-                st.total = end
-            st.scheduled += 1
-            if st.timeline is not None:
-                st.timeline.append(Span(nid, names[nid],
-                                        "comm" if sw else "comp", arr, end))
-            ob = out_b[nid]
-            if ob:
-                st.mem_events.append((arr, ob))
-            _deliver(st, nid, end)
-
-        ready = list(range(J))
-        finished = 0
-
-        def advance(j):
-            """Run row j until it finishes the graph (returns 1) or suspends
-            on a collective barrier (returns 0).  Body replicates run()."""
-            st = states[j]
-            dur = dur_rows[j]
-            bmap = barrier_map[j]
-            remaining = st.remaining
-            dcount = st.dcount
-            dmax = st.dmax
-            sf0, sf1 = st.sf0, st.sf1
-            busy0, busy1 = st.busy0, st.busy1
-            total = st.total
-            avail0, avail1 = st.avail0, st.avail1
-            future0, future1 = st.future0, st.future1
-            mem_events = st.mem_events
-            timeline = st.timeline
-            scheduled = st.scheduled
-
-            while scheduled < n_total:
-                while future0 and future0[0][0] <= sf0:
-                    push(avail0, pop(future0)[1])
-                while future1 and future1[0][0] <= sf1:
-                    push(avail1, pop(future1)[1])
-                if avail0:
-                    est0, p0, a0 = sf0, avail0[0], True
-                elif future0:
-                    dt, p0 = future0[0]
-                    est0, a0 = (dt if dt > sf0 else sf0), False
-                else:
-                    p0 = -1
-                if avail1:
-                    est1, p1, a1 = sf1, avail1[0], True
-                elif future1:
-                    dt, p1 = future1[0]
-                    est1, a1 = (dt if dt > sf1 else sf1), False
-                else:
-                    p1 = -1
-                if p0 >= 0 and (p1 < 0 or est0 < est1
-                                or (est0 == est1 and p0 < p1)):
-                    s = 0
-                    p = pop(avail0) if a0 else pop(future0)[1]
-                    start = est0
-                elif p1 >= 0:
-                    s = 1
-                    p = pop(avail1) if a1 else pop(future1)[1]
-                    start = est1
-                else:
-                    raise ValueError("deadlock: no ready nodes but graph "
-                                     "unfinished")
-                nid = order[p]
-                if is_coll[nid] and st.exp_list:
-                    if nid != st.exp_list[st.exp_i]:
-                        # program-order discipline: this collective's turn
-                        # hasn't come — park it and pick again
-                        st.deferred[nid] = dmax[nid]
-                        continue
-                    st.exp_i += 1
-                    if st.exp_i < len(st.exp_list):
-                        dt = st.deferred.pop(st.exp_list[st.exp_i], None)
-                        if dt is not None:
-                            nxt = st.exp_list[st.exp_i]
-                            if scode[nxt]:
-                                push(future1, (dt, pos[nxt]))
-                            else:
-                                push(future0, (dt, pos[nxt]))
-                    b = bmap.get(nid)
-                    if b is not None:
-                        # barrier'd collective: record arrival (+ committing
-                        # stream); resolve if we are the last member to
-                        # arrive in driver order, else suspend
-                        b[0] -= 1
-                        b[4][j] = (start, s)
-                        if start > b[1]:
-                            b[1] = start
-                        if b[0]:
-                            st.sf0, st.sf1 = sf0, sf1
-                            st.busy0, st.busy1 = busy0, busy1
-                            st.total = total
-                            st.scheduled = scheduled
-                            return 0
-                        cost = b[3]
-                        end = b[1] + cost
-                        for w in b[2]:
-                            if w != j:
-                                _complete_suspended(w, nid, b, end)
-                                ready.append(w)
-                        if s:
-                            sf1 = end
-                        else:          # overlap=False: comm on stream 0
-                            sf0 = end
-                        busy1 += cost  # busy accounting is by node *type*
-                        st.wait += b[1] - start
-                        if end > total:
-                            total = end
-                        scheduled += 1
-                        if timeline is not None:
-                            timeline.append(Span(nid, names[nid],
-                                                 "comm" if s else "comp",
-                                                 start, end))
-                        ob = out_b[nid]
-                        if ob:
-                            mem_events.append((start, ob))
-                        # consumer/ddep bookkeeping reads the stream clocks
-                        st.sf0, st.sf1 = sf0, sf1
-                        _deliver(st, nid, end)
-                        continue
-                d = dur[nid]
-                end = start + d
-                if s:
-                    sf1 = end
-                else:
-                    sf0 = end
-                if is_comm[nid]:
-                    busy1 += d
-                else:
-                    busy0 += d
-                if end > total:
-                    total = end
-                scheduled += 1
-                if timeline is not None:
-                    timeline.append(Span(nid, names[nid],
-                                         "comm" if s else "comp", start, end))
-                ob = out_b[nid]
-                if ob:
-                    mem_events.append((start, ob))
-                for c in cons[nid]:
-                    r = remaining[c] - 1
-                    remaining[c] = r
-                    dep_t = dmax[c]
-                    if end > dep_t:
-                        dmax[c] = dep_t = end
-                    if r == 0:
-                        pc = pos[c]
-                        if scode[c]:
-                            if dep_t <= sf1:
-                                push(avail1, pc)
-                            else:
-                                push(future1, (dep_t, pc))
-                        else:
-                            if dep_t <= sf0:
-                                push(avail0, pc)
-                            else:
-                                push(future0, (dep_t, pc))
-                for dd in ddeps[nid]:
-                    r = dcount[dd] - 1
-                    dcount[dd] = r
-                    if r <= 0:
-                        ob = out_b[dd]
-                        if ob:
-                            mem_events.append((end, -ob))
-
-            st.sf0, st.sf1 = sf0, sf1
-            st.busy0, st.busy1 = busy0, busy1
-            st.total = total
-            st.scheduled = scheduled
-            st.done = True
-            return 1
-
-        while finished < J:
-            if not ready:
-                pend = [(j, nid) for j, bm in enumerate(barrier_map)
-                        for nid, b in bm.items()
-                        if b[0] and j in b[4]]
-                raise ValueError(
-                    "cluster deadlock: ranks issued collectives in "
-                    f"conflicting orders (pending arrivals: {pend[:8]}) — "
-                    "a real SPMD program would hang here")
-            j = ready.pop()
-            st = states[j]
-            if st.done:
-                continue
-            finished += advance(j)
-
-        out, waits = [], []
-        for st in states:
-            live = peak = 0.0
-            for _, delta in sorted(st.mem_events):
-                live += delta
-                if live > peak:
-                    peak = live
-            exposed = st.total - st.busy0
-            if exposed < 0.0:
-                exposed = 0.0
-            out.append(SimResult(total_time=st.total, compute_time=st.busy0,
-                                 comm_time=st.busy1, exposed_comm=exposed,
-                                 peak_bytes=peak, n_nodes=n_total,
-                                 timeline=st.timeline))
-            waits.append(st.wait)
-        return out, waits
+        rows = []
+        for j, (dur, bmap) in enumerate(zip(dur_rows, barrier_map)):
+            for nid, b in bmap.items():
+                if len(b) == 5:        # legacy 5-slot barrier: add nid map
+                    b.append({})
+                b[5][j] = nid
+            rows.append(RowSpec(self, dur, bmap, coll_order))
+        return run_rows(rows, overlap=overlap, keep_timeline=keep_timeline)
 
     # -- duration-override helpers ------------------------------------------
     def comm_overrides(self, system, topo, bw_scale: float,
@@ -807,6 +528,356 @@ class CompiledGraph:
                               | (self.type_code == 3))[0]:
             out[int(nid)] = (float(cb[nid]) / link_bw + topo.link_latency)
         return out
+
+
+class RowSpec:
+    """One rank-class row of a (possibly MPMD) cluster run: the compiled
+    graph the row executes, its full per-node duration list, its barrier map
+    ``{nid: barrier}`` and its collective program order (``None`` when the
+    row has no barriers).  ``CompiledGraph.run_cluster`` builds K rows over
+    one graph; ``costmodel.mpmd`` builds one row per rank equivalence class,
+    each over its own graph."""
+    __slots__ = ("cg", "dur", "bmap", "coll_order")
+
+    def __init__(self, cg: "CompiledGraph", dur: List[float],
+                 bmap: Optional[Dict[int, list]] = None,
+                 coll_order: Optional[List[int]] = None):
+        self.cg = cg
+        self.dur = dur
+        self.bmap = bmap if bmap is not None else {}
+        self.coll_order = coll_order
+
+
+def run_rows(rows: List[RowSpec], overlap: bool = True,
+             keep_timeline: bool = False):
+    """Multi-row cluster event loop: each row replays ``run()`` over its own
+    compiled graph, suspending on shared cross-row collective barriers.
+
+    This is ``CompiledGraph.run_cluster`` generalized from "K duration rows
+    over one graph" to "K (graph, durations) programs" — the MPMD substrate.
+    A barrier is the shared mutable list ``[remaining, max_arrival,
+    rows_tuple, cost, arrivals_dict, nid_by_row]``; because node ids are
+    row-local in the multi-graph case, the barrier carries each member row's
+    own node id (``nid_by_row``).  Rows whose graphs are the same object are
+    bit-identical to the historical single-graph engine (the delegation is
+    exercised by every existing cluster test).
+
+    Returns ``(results, waits)`` exactly like ``run_cluster``.
+    """
+    from repro.core.costmodel.simulator import SimResult, Span
+
+    push, pop = heapq.heappush, heapq.heappop
+    J = len(rows)
+
+    for spec in rows:
+        if spec.bmap and spec.coll_order is None:
+            raise ValueError("run_rows needs coll_order when barriers "
+                             "are present (see canonical_coll_order)")
+
+    class _Row:
+        __slots__ = ("remaining", "dcount", "dmax", "sf0", "sf1",
+                     "busy0", "busy1", "total", "wait", "avail0",
+                     "avail1", "future0", "future1", "mem_events",
+                     "timeline", "scheduled", "done",
+                     "exp_list", "exp_i", "deferred")
+
+    states = []
+    for spec in rows:
+        cg = spec.cg
+        scode = cg._is_comm if overlap else cg._zeros
+        pos = cg._pos
+        st = _Row()
+        st.remaining = cg._indeg0[:]
+        st.dcount = cg._dcount0[:]
+        st.dmax = [0.0] * cg.n
+        st.sf0 = st.sf1 = 0.0
+        st.busy0 = st.busy1 = 0.0
+        st.total = 0.0
+        st.wait = 0.0
+        st.avail0, st.avail1 = [], []
+        for nid in cg._roots:
+            (st.avail1 if scode[nid] else st.avail0).append(pos[nid])
+        heapq.heapify(st.avail0)
+        heapq.heapify(st.avail1)
+        st.future0, st.future1 = [], []
+        st.mem_events = []
+        st.timeline = [] if keep_timeline else None
+        st.scheduled = 0
+        st.done = False
+        # program-order discipline covers EVERY collective (not just
+        # barrier'd ones) so commit order — and float accumulation
+        # order — is identical whatever the rank coalescing chose
+        st.exp_list = spec.coll_order or ()
+        st.exp_i = 0
+        st.deferred = {}
+        states.append(st)
+
+    def _deliver(st, spec, nid, end):
+        """Post-duration commit tail shared by barrier resolution and the
+        normal path of a suspended row: consumer wakeups + ddep frees,
+        identical bookkeeping to run()."""
+        cg = spec.cg
+        cons = cg._cons
+        ddeps = cg._ddeps
+        out_b = cg._out_bytes
+        pos = cg._pos
+        scode = cg._is_comm if overlap else cg._zeros
+        for c in cons[nid]:
+            r = st.remaining[c] - 1
+            st.remaining[c] = r
+            dep_t = st.dmax[c]
+            if end > dep_t:
+                st.dmax[c] = dep_t = end
+            if r == 0:
+                pc = pos[c]
+                if scode[c]:
+                    if dep_t <= st.sf1:
+                        push(st.avail1, pc)
+                    else:
+                        push(st.future1, (dep_t, pc))
+                else:
+                    if dep_t <= st.sf0:
+                        push(st.avail0, pc)
+                    else:
+                        push(st.future0, (dep_t, pc))
+        for dd in ddeps[nid]:
+            r = st.dcount[dd] - 1
+            st.dcount[dd] = r
+            if r <= 0:
+                ob = out_b[dd]
+                if ob:
+                    st.mem_events.append((end, -ob))
+
+    def _complete_suspended(w, b, end):
+        """Finish the commit a suspended row w started when it arrived at
+        barrier b: charge cost from its own arrival, attribute the wait,
+        then release it."""
+        st = states[w]
+        spec = rows[w]
+        nid = b[5][w]                  # node ids are row-local (MPMD)
+        arr, sw = b[4][w]
+        cost = b[3]
+        if sw:
+            st.sf1 = end
+        else:                      # overlap=False: comm runs on stream 0
+            st.sf0 = end
+        st.busy1 += cost           # busy accounting is by node *type*
+        st.wait += b[1] - arr
+        if end > st.total:
+            st.total = end
+        st.scheduled += 1
+        if st.timeline is not None:
+            st.timeline.append(Span(nid, spec.cg._names[nid],
+                                    "comm" if sw else "comp", arr, end))
+        ob = spec.cg._out_bytes[nid]
+        if ob:
+            st.mem_events.append((arr, ob))
+        _deliver(st, spec, nid, end)
+
+    ready = list(range(J))
+    finished = 0
+
+    def advance(j):
+        """Run row j until it finishes the graph (returns 1) or suspends
+        on a collective barrier (returns 0).  Body replicates run()."""
+        st = states[j]
+        spec = rows[j]
+        cg = spec.cg
+        n_total = cg.n
+        pos = cg._pos
+        order = cg._order
+        ddeps = cg._ddeps
+        cons = cg._cons
+        out_b = cg._out_bytes
+        is_comm = cg._is_comm
+        names = cg._names
+        scode = is_comm if overlap else cg._zeros
+        is_coll = cg._is_coll
+        dur = spec.dur
+        bmap = spec.bmap
+        remaining = st.remaining
+        dcount = st.dcount
+        dmax = st.dmax
+        sf0, sf1 = st.sf0, st.sf1
+        busy0, busy1 = st.busy0, st.busy1
+        total = st.total
+        avail0, avail1 = st.avail0, st.avail1
+        future0, future1 = st.future0, st.future1
+        mem_events = st.mem_events
+        timeline = st.timeline
+        scheduled = st.scheduled
+
+        while scheduled < n_total:
+            while future0 and future0[0][0] <= sf0:
+                push(avail0, pop(future0)[1])
+            while future1 and future1[0][0] <= sf1:
+                push(avail1, pop(future1)[1])
+            if avail0:
+                est0, p0, a0 = sf0, avail0[0], True
+            elif future0:
+                dt, p0 = future0[0]
+                est0, a0 = (dt if dt > sf0 else sf0), False
+            else:
+                p0 = -1
+            if avail1:
+                est1, p1, a1 = sf1, avail1[0], True
+            elif future1:
+                dt, p1 = future1[0]
+                est1, a1 = (dt if dt > sf1 else sf1), False
+            else:
+                p1 = -1
+            if p0 >= 0 and (p1 < 0 or est0 < est1
+                            or (est0 == est1 and p0 < p1)):
+                s = 0
+                p = pop(avail0) if a0 else pop(future0)[1]
+                start = est0
+            elif p1 >= 0:
+                s = 1
+                p = pop(avail1) if a1 else pop(future1)[1]
+                start = est1
+            else:
+                raise ValueError("deadlock: no ready nodes but graph "
+                                 "unfinished")
+            nid = order[p]
+            if is_coll[nid] and st.exp_list:
+                if nid != st.exp_list[st.exp_i]:
+                    # program-order discipline: this collective's turn
+                    # hasn't come — park it and pick again
+                    st.deferred[nid] = dmax[nid]
+                    continue
+                st.exp_i += 1
+                if st.exp_i < len(st.exp_list):
+                    dt = st.deferred.pop(st.exp_list[st.exp_i], None)
+                    if dt is not None:
+                        nxt = st.exp_list[st.exp_i]
+                        if scode[nxt]:
+                            push(future1, (dt, pos[nxt]))
+                        else:
+                            push(future0, (dt, pos[nxt]))
+                b = bmap.get(nid)
+                if b is not None:
+                    # barrier'd collective: record arrival (+ committing
+                    # stream); resolve if we are the last member to
+                    # arrive in driver order, else suspend
+                    b[0] -= 1
+                    b[4][j] = (start, s)
+                    if start > b[1]:
+                        b[1] = start
+                    if b[0]:
+                        st.sf0, st.sf1 = sf0, sf1
+                        st.busy0, st.busy1 = busy0, busy1
+                        st.total = total
+                        st.scheduled = scheduled
+                        return 0
+                    cost = b[3]
+                    end = b[1] + cost
+                    for w in b[2]:
+                        if w != j:
+                            _complete_suspended(w, b, end)
+                            ready.append(w)
+                    if s:
+                        sf1 = end
+                    else:          # overlap=False: comm on stream 0
+                        sf0 = end
+                    busy1 += cost  # busy accounting is by node *type*
+                    st.wait += b[1] - start
+                    if end > total:
+                        total = end
+                    scheduled += 1
+                    if timeline is not None:
+                        timeline.append(Span(nid, names[nid],
+                                             "comm" if s else "comp",
+                                             start, end))
+                    ob = out_b[nid]
+                    if ob:
+                        mem_events.append((start, ob))
+                    # consumer/ddep bookkeeping reads the stream clocks
+                    st.sf0, st.sf1 = sf0, sf1
+                    _deliver(st, spec, nid, end)
+                    continue
+            d = dur[nid]
+            end = start + d
+            if s:
+                sf1 = end
+            else:
+                sf0 = end
+            if is_comm[nid]:
+                busy1 += d
+            else:
+                busy0 += d
+            if end > total:
+                total = end
+            scheduled += 1
+            if timeline is not None:
+                timeline.append(Span(nid, names[nid],
+                                     "comm" if s else "comp", start, end))
+            ob = out_b[nid]
+            if ob:
+                mem_events.append((start, ob))
+            for c in cons[nid]:
+                r = remaining[c] - 1
+                remaining[c] = r
+                dep_t = dmax[c]
+                if end > dep_t:
+                    dmax[c] = dep_t = end
+                if r == 0:
+                    pc = pos[c]
+                    if scode[c]:
+                        if dep_t <= sf1:
+                            push(avail1, pc)
+                        else:
+                            push(future1, (dep_t, pc))
+                    else:
+                        if dep_t <= sf0:
+                            push(avail0, pc)
+                        else:
+                            push(future0, (dep_t, pc))
+            for dd in ddeps[nid]:
+                r = dcount[dd] - 1
+                dcount[dd] = r
+                if r <= 0:
+                    ob = out_b[dd]
+                    if ob:
+                        mem_events.append((end, -ob))
+
+        st.sf0, st.sf1 = sf0, sf1
+        st.busy0, st.busy1 = busy0, busy1
+        st.total = total
+        st.scheduled = scheduled
+        st.done = True
+        return 1
+
+    while finished < J:
+        if not ready:
+            pend = [(j, nid) for j, spec in enumerate(rows)
+                    for nid, b in spec.bmap.items()
+                    if b[0] and j in b[4]]
+            raise ValueError(
+                "cluster deadlock: ranks issued collectives in "
+                f"conflicting orders (pending arrivals: {pend[:8]}) — "
+                "a real SPMD/MPMD program would hang here")
+        j = ready.pop()
+        st = states[j]
+        if st.done:
+            continue
+        finished += advance(j)
+
+    out, waits = [], []
+    for spec, st in zip(rows, states):
+        live = peak = 0.0
+        for _, delta in sorted(st.mem_events):
+            live += delta
+            if live > peak:
+                peak = live
+        exposed = st.total - st.busy0
+        if exposed < 0.0:
+            exposed = 0.0
+        out.append(SimResult(total_time=st.total, compute_time=st.busy0,
+                             comm_time=st.busy1, exposed_comm=exposed,
+                             peak_bytes=peak, n_nodes=spec.cg.n,
+                             timeline=st.timeline))
+        waits.append(st.wait)
+    return out, waits
 
 
 def compile_graph(g: chakra.Graph) -> CompiledGraph:

@@ -1,0 +1,303 @@
+"""True MPMD cluster model: per-rank workload *graphs* under shared
+collective barriers.
+
+The SPMD engine (``simulator.simulate_cluster`` on one graph) models a
+cluster as "one graph, K duration rows" — every rank runs the same program.
+Pipeline stages, expert-parallel MoE ranks and asymmetric training/serving
+colocations break that assumption: each rank (or pool of ranks) runs its
+*own* graph, and only the collectives stitch the timelines together.  This
+module supplies the missing substrate:
+
+  * ``MPMDProgram`` — rank -> Graph mapping (a dense list or ``{rank: g}``
+    dict).  Graphs shared by several ranks (by object identity) are stored
+    once; "ranks sharing a graph and profile" is the unit the coalescer
+    works at, so a 64-rank program made of two 32-rank pools costs two
+    event loops.
+  * ``simulate_mpmd`` — the K-graph cluster engine, built on
+    ``compiled.run_rows``.  Group attrs are read *literally*: a collective
+    with ``group=[2, 5]`` synchronizes cluster ranks 2 and 5, full stop
+    (no SPMD instance tiling).  A collective whose group omits a rank
+    never blocks that rank (ragged participation); a rank outside a
+    collective's group that still carries the node runs it locally.
+    Group members outside 0..K-1 are clipped to the cluster — the SPMD
+    whole-world idiom (a graph captured for a larger cluster still runs
+    on a prefix; this is what keeps K identical ``group=range(16)``
+    graphs bit-identical to ``simulate()`` on 4 ranks).  A group left
+    with fewer than two in-cluster members is barrier-free.
+  * ``ClusterProgramError`` — raised when per-rank programs disagree about
+    a shared collective: a member rank whose graph omits an instance its
+    group claims, or ranks issuing different collective kinds at the same
+    per-group program index.  Both are real-cluster hangs; the error names
+    the rank, the collective fingerprint and the program index instead of
+    deadlocking silently.
+
+Barrier identity
+----------------
+Node ids are rank-local in MPMD, so cross-rank barriers cannot key on them.
+Instead a barrier is keyed by ``(group, k)``: the k-th collective with that
+participant group in each member rank's *canonical program order* (the
+commit order of the rank's nominal schedule, ``canonical_coll_order`` — the
+same order the engine's program-order discipline enforces, so barriers
+always resolve in issue order and the engine is deadlock-free by
+construction).  Kinds are validated pairwise across members at each index;
+payloads may differ and the barrier is priced at the weakest member
+(max over member rows' own durations), exactly like the SPMD engine.
+
+Equivalence contracts (property-tested by tests/test_mpmd_properties.py):
+identical graphs on every rank are bit-identical to the single-graph
+``simulate_cluster`` *and* to ``simulate()``; coalesced == naive
+(``coalesce=False``) per-rank results; a barrier never starts before its
+slowest participant arrives.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import chakra
+from repro.core.costmodel.compiled import RowSpec, compile_graph, run_rows
+from repro.core.costmodel.simulator import (ClusterSimResult,
+                                            _assemble_cluster_result,
+                                            _override, _parse_rank_durations,
+                                            _parse_rank_profiles, _rank_row)
+from repro.core.costmodel.topology import RankProfile, Topology, build_topology
+
+
+class ClusterProgramError(ValueError):
+    """Per-rank programs disagree about a shared collective — a mismatch
+    that would hang a real cluster.  Carries the offending ``rank``, the
+    collective ``fingerprint`` (``kind|r0,r1,...``) and the per-group
+    program ``index`` for tooling."""
+
+    def __init__(self, msg: str, rank: Optional[int] = None,
+                 fingerprint: Optional[str] = None,
+                 index: Optional[int] = None):
+        super().__init__(msg)
+        self.rank = rank
+        self.fingerprint = fingerprint
+        self.index = index
+
+
+def collective_fingerprint(kind: str, group: Sequence[int]) -> str:
+    """Stable cross-rank identity of a collective: kind + sorted member
+    ranks.  Node ids and names are rank-local in MPMD; this string is what
+    diagnostics (and the barrier planner conceptually) key on."""
+    return f"{kind}|{','.join(str(r) for r in sorted({int(x) for x in group}))}"
+
+
+class MPMDProgram:
+    """A cluster-wide MPMD workload: rank r runs ``graph_for(r)``.
+
+    Accepts a dense sequence of Graphs (rank = position) or a ``{rank:
+    Graph}`` dict covering ranks 0..K-1.  Graphs repeated across ranks (by
+    object identity) are deduplicated — pass the *same* Graph object for
+    every rank of a symmetric pool so the engine can coalesce the pool into
+    one event-loop row.
+    """
+
+    def __init__(self, rank_graphs, meta: Optional[Dict] = None):
+        if isinstance(rank_graphs, dict):
+            K = len(rank_graphs)
+            if sorted(rank_graphs) != list(range(K)):
+                raise ValueError(
+                    "rank->graph mapping must cover ranks 0..K-1 densely; "
+                    f"got ranks {sorted(rank_graphs)[:8]}...")
+            seq = [rank_graphs[r] for r in range(K)]
+        else:
+            seq = list(rank_graphs)
+        if not seq:
+            raise ValueError("MPMDProgram needs >= 1 rank")
+        self.graphs: List[chakra.Graph] = []
+        self.graph_of: List[int] = []
+        index: Dict[int, int] = {}
+        for g in seq:
+            if not isinstance(g, chakra.Graph):
+                raise TypeError(f"MPMDProgram wants chakra.Graph per rank, "
+                                f"got {type(g).__name__}")
+            gi = index.get(id(g))
+            if gi is None:
+                gi = index[id(g)] = len(self.graphs)
+                self.graphs.append(g)
+            self.graph_of.append(gi)
+        self.meta: Dict = dict(meta or {})
+
+    @property
+    def n_ranks(self) -> int:
+        return len(self.graph_of)
+
+    @property
+    def n_graphs(self) -> int:
+        return len(self.graphs)
+
+    def graph_for(self, rank: int) -> chakra.Graph:
+        return self.graphs[self.graph_of[rank]]
+
+    def __repr__(self) -> str:
+        return (f"MPMDProgram(n_ranks={self.n_ranks}, "
+                f"n_graphs={self.n_graphs})")
+
+
+def _group_key(group) -> tuple:
+    return tuple(sorted({int(x) for x in group}))
+
+
+def simulate_mpmd(prog: MPMDProgram, system,
+                  topo: Optional[Topology] = None,
+                  n_ranks: Optional[int] = None,
+                  rank_profiles=None, rank_durations: Optional[Dict] = None,
+                  algo: str = "auto", overlap: bool = True,
+                  compute_derate: float = 0.6,
+                  keep_timeline: bool = False,
+                  coalesce: bool = True) -> ClusterSimResult:
+    """Simulate one step of an MPMD program on a K-rank cluster.
+
+    Same contract as ``simulator.simulate_cluster`` (which dispatches here
+    for non-Graph workloads): `rank_profiles`/`rank_durations` skew
+    individual ranks, per-link overrides come from ``topo.link_scales``,
+    `coalesce=False` runs one row per rank as the executable spec of the
+    class coalescing.  `n_ranks`, when given, must agree with the
+    program's rank count.  Results are not memoized (the cache would have
+    to span several graphs); coalescing keeps symmetric pools cheap
+    instead.
+
+    Raises ``ClusterProgramError`` for mismatched per-rank collective
+    sequences (see module docstring) rather than hanging.
+    """
+    topo = topo or build_topology(system)
+    K = prog.n_ranks
+    if n_ranks is not None and int(n_ranks) != K:
+        raise ValueError(f"n_ranks={n_ranks} disagrees with the MPMD "
+                         f"program's {K} ranks")
+    cgs = [compile_graph(g) for g in prog.graphs]
+    bases = [cg.durations(system, topo, algo, compute_derate) for cg in cgs]
+
+    default_prof = RankProfile()
+    profs = _parse_rank_profiles(rank_profiles, K)
+    rdur = _parse_rank_durations(rank_durations, K)
+    tls = getattr(topo, "link_scales", None) or {}
+
+    # canonical per-graph collective program: (nid, kind, group-key) in the
+    # order the rank issues them (= the nominal schedule's commit order,
+    # which the engine's program-order discipline also enforces)
+    orders = [cg.canonical_coll_order(base, overlap=overlap)
+              for cg, base in zip(cgs, bases)]
+    colls: List[List[tuple]] = []
+    for cg, order in zip(cgs, orders):
+        meta = {nid: m for nid, m in zip(cg._coll_ids, cg._coll_meta)}
+        colls.append([(nid, meta[nid][0], _group_key(meta[nid][1]))
+                      for nid in order])
+
+    # rank equivalence classes: ranks sharing (graph, hardware behavior,
+    # collective membership) are one behavioral class.  Groups are literal,
+    # so two same-class ranks sit in the *same* barrier instance and a
+    # class row's arrival represents all of its members at once — no
+    # partition-refinement fixpoint needed (unlike the SPMD tiling).
+    init_keys = []
+    for r in range(K):
+        gi = prog.graph_of[r]
+        od = rdur.get(r)
+        okey = tuple(sorted(od.items())) if od else None
+        mem = tuple(sorted({gkey for (_, _, gkey) in colls[gi]
+                            if r in gkey}))
+        init_keys.append((gi, profs.get(r, default_prof),
+                          tls.get(r, 1.0), okey, mem))
+    if coalesce:
+        seen: Dict = {}
+        colors = [seen.setdefault(k, len(seen)) for k in init_keys]
+    else:
+        colors = list(range(K))
+    n_classes = max(colors) + 1
+    reps: List[Optional[int]] = [None] * n_classes
+    for r in range(K):
+        if reps[colors[r]] is None:
+            reps[colors[r]] = r
+    class_graph = [prog.graph_of[rep] for rep in reps]
+
+    # per-class duration rows (shared across classes with the same
+    # (graph, hardware) key; rank_durations overrides applied on a copy)
+    reprice = bool(tls)
+    row_memo: Dict = {}
+    rows_dur: List[List[float]] = []
+    for rep in reps:
+        gi = prog.graph_of[rep]
+        p = profs.get(rep, default_prof)
+        ls = p.link_scale * tls.get(rep, 1.0)
+        rkey = (gi, p, ls)
+        row = row_memo.get(rkey)
+        if row is None:
+            row = _rank_row(cgs[gi], system, topo, algo, compute_derate,
+                            bases[gi], p, ls, reprice)
+            row_memo[rkey] = row
+        od = rdur.get(rep)
+        if od:
+            row = _override(row, od)
+        rows_dur.append(row)
+
+    # per-graph, per-group collective sequences (canonical order), the
+    # substrate of barrier keying AND of the ragged-sequence validation
+    gseq: List[Dict[tuple, List[tuple]]] = []
+    for seq in colls:
+        d: Dict[tuple, List[tuple]] = {}
+        for nid, kind, gkey in seq:
+            if len(gkey) >= 2:
+                d.setdefault(gkey, []).append((nid, kind))
+        gseq.append(d)
+
+    barrier_maps: List[Dict[int, list]] = [dict() for _ in range(n_classes)]
+    any_barrier = False
+    for gkey in sorted({g for d in gseq for g in d}):
+        members = [r for r in gkey if 0 <= r < K]
+        if len(members) < 2:
+            continue
+        mclasses: List[int] = []
+        for r in members:
+            c = colors[r]
+            if c not in mclasses:
+                mclasses.append(c)
+        seqs = {c: gseq[class_graph[c]].get(gkey, []) for c in mclasses}
+        want = max(len(s) for s in seqs.values())
+        for k in range(want):
+            kinds: Dict[int, str] = {}
+            for c in mclasses:
+                s = seqs[c]
+                if len(s) <= k:
+                    r_bad = next(r for r in members if colors[r] == c)
+                    c_ok = next(c2 for c2 in mclasses if len(seqs[c2]) > k)
+                    fp = collective_fingerprint(seqs[c_ok][k][1], gkey)
+                    raise ClusterProgramError(
+                        f"rank {r_bad}'s graph omits instance {k} of "
+                        f"collective {fp}: the group claims its "
+                        f"participation but the rank's program only issues "
+                        f"{len(s)} instance(s) — a real cluster would hang "
+                        f"at this barrier", rank=r_bad, fingerprint=fp,
+                        index=k)
+                kinds[c] = s[k][1]
+            if len(set(kinds.values())) > 1:
+                c_a = mclasses[0]
+                c_b = next(c for c in mclasses if kinds[c] != kinds[c_a])
+                r_bad = next(r for r in members if colors[r] == c_b)
+                fp = collective_fingerprint(kinds[c_b], gkey)
+                raise ClusterProgramError(
+                    f"mismatched collective sequences: at group program "
+                    f"index {k} rank {r_bad} issues {fp} where its peers "
+                    f"issue {collective_fingerprint(kinds[c_a], gkey)}",
+                    rank=r_bad, fingerprint=fp, index=k)
+        if len(mclasses) < 2:
+            continue           # one behavioral class: resolves at arrival
+        W = tuple(sorted(mclasses))
+        for k in range(want):
+            nid_by_row = {c: seqs[c][k][0] for c in mclasses}
+            b = [len(W), 0.0, W,
+                 max(rows_dur[c][nid_by_row[c]] for c in mclasses),
+                 {}, nid_by_row]
+            for c in mclasses:
+                barrier_maps[c][nid_by_row[c]] = b
+            any_barrier = True
+
+    specs = []
+    for c in range(n_classes):
+        gi = class_graph[c]
+        specs.append(RowSpec(cgs[gi], rows_dur[c], barrier_maps[c],
+                             orders[gi] if any_barrier else None))
+    results, waits = run_rows(specs, overlap=overlap,
+                              keep_timeline=keep_timeline)
+    return _assemble_cluster_result(K, colors, reps, results, waits)

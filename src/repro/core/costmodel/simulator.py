@@ -551,6 +551,52 @@ def _refine_colors(K: int, inst_maps: Sequence[List],
         colors, n_colors = new, len(seen)
 
 
+def _parse_rank_profiles(rank_profiles, K: int) -> Dict[int, RankProfile]:
+    """{rank: non-default RankProfile} from a dict or length-K sequence,
+    range-checked — shared by the SPMD and MPMD cluster engines."""
+    profs: Dict[int, RankProfile] = {}
+    if rank_profiles:
+        items = (rank_profiles.items() if isinstance(rank_profiles, dict)
+                 else enumerate(rank_profiles))
+        for r, p in items:
+            if p is None or p.is_default():
+                continue
+            if not 0 <= r < K:
+                raise ValueError(f"rank_profiles rank {r} outside "
+                                 f"cluster of {K}")
+            profs[int(r)] = p
+    return profs
+
+
+def _parse_rank_durations(rank_durations, K: int) -> Dict[int, Dict]:
+    """{rank: {nid: seconds}} non-empty per-rank overrides, range-checked —
+    shared by the SPMD and MPMD cluster engines."""
+    rdur: Dict[int, Dict] = {}
+    if rank_durations:
+        for r, od in rank_durations.items():
+            if not od:
+                continue
+            if not 0 <= r < K:
+                raise ValueError(f"rank_durations rank {r} outside "
+                                 f"cluster of {K}")
+            rdur[int(r)] = od
+    return rdur
+
+
+def _assemble_cluster_result(K: int, colors: List[int], reps: List[int],
+                             results: List[SimResult],
+                             waits: List[float]) -> ClusterSimResult:
+    """Step time + slowest-rank attribution over per-class engine rows —
+    shared tail of both cluster engines (ties break to the lowest rank)."""
+    step = max(r.total_time for r in results)
+    slowest = next(r for r in range(K)
+                   if results[colors[r]].total_time == step)
+    return ClusterSimResult(n_ranks=K, class_of_rank=colors,
+                            class_reps=[int(r) for r in reps],
+                            results=results, class_barrier_wait=waits,
+                            step_time=step, slowest_rank=slowest)
+
+
 def _rank_row(cg: CompiledGraph, system, topo, algo: str,
               compute_derate: float, base: List[float], prof: RankProfile,
               lscale: float, reprice_colls: bool) -> List[float]:
@@ -604,7 +650,23 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
     case).  `coalesce=False` simulates every rank individually; both paths
     produce identical results (property-tested) — the naive path exists as
     the executable spec for the coalescing.
+
+    `g` may also be a per-rank workload — an ``MPMDProgram``, a dense list
+    of Graphs, or a ``{rank: Graph}`` dict — in which case the call routes
+    to the true-MPMD engine (``costmodel.mpmd.simulate_mpmd``): group attrs
+    are read literally, barriers are keyed by (group, per-group program
+    order), and mismatched per-rank collective sequences raise
+    ``ClusterProgramError``.  K identical graphs are bit-identical to this
+    single-graph path (property-tested).
     """
+    if not isinstance(g, chakra.Graph):
+        from repro.core.costmodel import mpmd as _mpmd
+        prog = g if isinstance(g, _mpmd.MPMDProgram) else _mpmd.MPMDProgram(g)
+        return _mpmd.simulate_mpmd(
+            prog, system, topo=topo, n_ranks=n_ranks,
+            rank_profiles=rank_profiles, rank_durations=rank_durations,
+            algo=algo, overlap=overlap, compute_derate=compute_derate,
+            keep_timeline=keep_timeline, coalesce=coalesce)
     topo = topo or build_topology(system)
     K = int(n_ranks if n_ranks is not None else topo.n_ranks)
     if K < 1:
@@ -613,26 +675,8 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
     base = cg.durations(system, topo, algo, compute_derate)
 
     default_prof = RankProfile()
-    profs: Dict[int, RankProfile] = {}
-    if rank_profiles:
-        items = (rank_profiles.items() if isinstance(rank_profiles, dict)
-                 else enumerate(rank_profiles))
-        for r, p in items:
-            if p is None or p.is_default():
-                continue
-            if not 0 <= r < K:
-                raise ValueError(f"rank_profiles rank {r} outside "
-                                 f"cluster of {K}")
-            profs[int(r)] = p
-    rdur: Dict[int, Dict] = {}
-    if rank_durations:
-        for r, od in rank_durations.items():
-            if not od:
-                continue
-            if not 0 <= r < K:
-                raise ValueError(f"rank_durations rank {r} outside "
-                                 f"cluster of {K}")
-            rdur[int(r)] = od
+    profs = _parse_rank_profiles(rank_profiles, K)
+    rdur = _parse_rank_durations(rank_durations, K)
     tls = getattr(topo, "link_scales", None) or {}
 
     # per-(config, profile-set) memo on the compiled graph, mirroring
@@ -719,13 +763,7 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
                                     overlap=overlap,
                                     keep_timeline=keep_timeline)
 
-    step = max(r.total_time for r in results)
-    slowest = next(r for r in range(K)
-                   if results[colors[r]].total_time == step)
-    res = ClusterSimResult(n_ranks=K, class_of_rank=colors,
-                           class_reps=[int(r) for r in reps],
-                           results=results, class_barrier_wait=waits,
-                           step_time=step, slowest_rank=slowest)
+    res = _assemble_cluster_result(K, colors, reps, results, waits)
     if ckey is not None:
         # fresh copies both ways: callers may post-process in place
         cg._result_cache[ckey] = _copy_cluster_result(res)

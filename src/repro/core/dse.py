@@ -35,6 +35,13 @@ them switches the trial onto ``simulate_cluster``: the knob values build
 per-rank ``RankProfile``s and the objective reads the slowest rank's step
 time, so ``explore``/``greedy_descent`` sweep mixed-generation or
 partially-degraded clusters exactly like any other hardware knob.
+
+Pipeline knobs: ``num_stages`` / ``stage_assignment`` split the
+software-transformed graph into an S-stage MPMD pipeline program
+(``convert.split_pipeline_stages``, memoized per graph) with
+``ranks // num_stages`` data-parallel replicas per stage, evaluated on the
+true-MPMD cluster engine — so stage count and stage balancing are just
+more knobs on the grid, composable with the hetero hardware knobs above.
 """
 from __future__ import annotations
 
@@ -92,6 +99,11 @@ class Trial:
 
 
 _SOFTWARE_KNOBS = ("fsdp_sync", "prefetch", "bucket_bytes")
+# pipeline knobs route the trial through the MPMD cluster engine: the
+# transformed graph is split into num_stages stages (stage_assignment
+# picks the balancing policy, see convert.split_pipeline_stages) with the
+# cluster's ranks divided into num_stages * (ranks // num_stages)
+_PIPELINE_KNOBS = ("num_stages", "stage_assignment")
 _SYSTEM_KNOBS = ("topology", "collective_algo", "link_bw", "dcn_bw", "chips")
 # knobs that change the Topology object itself — a trial sweeping one of
 # these must rebuild it even when the caller passed a calibrated instance
@@ -219,6 +231,30 @@ def _simulate_cfg(g2: chakra.Graph, system, config: Dict,
     sys2 = _system_for(system, config)
     if topo is None or any(k in config for k in _TOPO_KNOBS):
         topo = build_topology(sys2)
+    ns = config.get("num_stages")
+    if ns is not None and int(ns) > 1:
+        from repro.core.convert import split_pipeline_stages
+        S = int(ns)
+        assign = config.get("stage_assignment") or "flops"
+        T = int(config.get("cluster_ranks") or topo.n_ranks)
+        if S > T:
+            # a 16-stage pipeline on 4 chips would be priced as 16 ranks —
+            # phantom hardware that would unfairly win any sweep
+            raise ValueError(
+                f"num_stages={S} exceeds the cluster's {T} ranks; cap the "
+                "knob's values at cluster_ranks (or chips)")
+        # floor division: T % S leftover ranks idle (documented; an uneven
+        # split never inflates the modeled hardware)
+        replicas = max(1, T // S)
+        key = ("pipeline", S, str(assign), replicas)
+        prog = g2._cached(key, lambda: split_pipeline_stages(
+            g2, S, assignment=assign, replicas=replicas))
+        n_ranks = prog.n_ranks
+        return simulate_cluster(prog, sys2, topo, n_ranks=n_ranks,
+                                rank_profiles=rank_profiles_for(n_ranks,
+                                                                config),
+                                algo=sys2.collective_algo,
+                                compute_derate=compute_derate)
     if _is_hetero(config):
         n_ranks = int(config.get("cluster_ranks") or topo.n_ranks)
         return simulate_cluster(g2, sys2, topo, n_ranks=n_ranks,

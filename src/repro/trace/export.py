@@ -26,6 +26,19 @@ _TID = {"comp": 0, "comm": 1}
 _THREAD_NAMES = {0: "compute", 1: "comm"}
 
 
+def graph_for_rank(graph, rank: int) -> Optional[chakra.Graph]:
+    """Resolve the workload graph of one rank: a plain ``chakra.Graph``
+    (SPMD — every rank shares it), an ``MPMDProgram`` (anything with a
+    ``graph_for`` method) or a ``{rank: Graph}`` dict (per-rank distinct
+    graphs).  Shared by the exporter and the validator."""
+    if graph is None or isinstance(graph, chakra.Graph):
+        return graph
+    gf = getattr(graph, "graph_for", None)
+    if gf is not None:
+        return gf(rank)
+    return graph.get(rank)
+
+
 def _per_rank_spans(result) -> List[Tuple[int, List[Span]]]:
     """[(rank, spans)] for either result flavor; classes are expanded so
     every rank gets its own process in the trace."""
@@ -95,10 +108,13 @@ def to_chrome_trace(result, graph: Optional[chakra.Graph] = None,
 
     `graph` (the simulated workload graph) enriches event args with node
     fingerprints, op classes and payload bytes — pass it whenever you have
-    it; round-trip validation relies on the fingerprints."""
+    it; round-trip validation relies on the fingerprints.  For MPMD runs
+    pass the ``MPMDProgram`` (or a ``{rank: Graph}`` dict) and each rank's
+    process is annotated from its *own* graph."""
     scale = 1e6                        # seconds -> Chrome microseconds
     events: List[Dict] = []
     for rank, spans in _per_rank_spans(result):
+        g_r = graph_for_rank(graph, rank)
         events.append({"ph": "M", "pid": rank, "name": "process_name",
                        "args": {"name": f"rank {rank}"}})
         for tid, tname in _THREAD_NAMES.items():
@@ -107,8 +123,8 @@ def to_chrome_trace(result, graph: Optional[chakra.Graph] = None,
         for s in sorted(spans, key=lambda s: (s.start, _TID[s.stream])):
             args: Dict = {"nid": s.nid}
             cat = s.stream
-            if graph is not None:
-                n = graph.node(s.nid)
+            if g_r is not None:
+                n = g_r.node(s.nid)
                 args["fingerprint"] = n.fingerprint()
                 cat = n.type
                 cb = n.attrs.get("comm_bytes", 0.0)
@@ -118,11 +134,14 @@ def to_chrome_trace(result, graph: Optional[chakra.Graph] = None,
                            "ts": s.start * scale,
                            "dur": (s.end - s.start) * scale,
                            "name": s.name, "cat": cat, "args": args})
-        events.extend(_exposed_counters(rank, spans, graph, scale))
+        events.extend(_exposed_counters(rank, spans, g_r, scale))
     md = {"schema": TRACE_SCHEMA, "time_unit": "us"}
-    if graph is not None:
+    if isinstance(graph, chakra.Graph):
         md["n_nodes"] = len(graph)
         md.update(graph.meta)
+    elif graph is not None:            # MPMD program / per-rank dict
+        md["mpmd"] = True
+        md.update(getattr(graph, "meta", None) or {})
     if meta:
         md.update(meta)
     return {"traceEvents": events, "displayTimeUnit": "ms", "metadata": md}

@@ -62,7 +62,8 @@ def _critical_path(g: chakra.Graph, dur: Dict[int, float]) -> List[int]:
 @dataclasses.dataclass
 class ValidationReport:
     n_ranks: int
-    n_nodes: int
+    n_nodes: int                       # critical-path rank's graph size
+    n_node_spans: int                  # sum of graph sizes over traced ranks
     n_matched: int
     match_fraction: float
     sim_total_s: float
@@ -79,7 +80,7 @@ class ValidationReport:
     def summary(self) -> str:
         lines = [
             f"trace validation: {self.n_ranks} rank(s), "
-            f"{self.n_matched}/{self.n_nodes * self.n_ranks} node spans "
+            f"{self.n_matched}/{self.n_node_spans} node spans "
             f"matched ({self.match_fraction * 100:.1f}%)",
             f"end-to-end: sim {self.sim_total_s * 1e3:.3f} ms vs trace "
             f"{self.trace_total_s * 1e3:.3f} ms "
@@ -106,20 +107,29 @@ class ValidationReport:
         return "\n".join(lines)
 
 
-def validate(g: chakra.Graph, tl: Timeline, system,
+def validate(g, tl: Timeline, system,
              topo: Optional[Topology] = None, *,
              n_ranks: Optional[int] = None, rank_profiles=None,
              algo: str = "auto", overlap: bool = True,
              compute_derate: float = 0.6, top_k: int = 8) -> ValidationReport:
-    """Validate graph `g` against measured timeline `tl` under a hardware
+    """Validate workload `g` against measured timeline `tl` under a hardware
     model (system/topo/derate — pass a calibrated set to measure the fit).
 
+    `g` is a ``chakra.Graph`` (rank-symmetric SPMD view) or a per-rank
+    workload — ``MPMDProgram`` / ``{rank: Graph}`` dict — in which case
+    every traced pid is aligned and scored against *that* rank's own graph.
     Multi-rank traces are simulated with ``simulate_cluster`` (pids map to
-    ranks in sorted order); single-process traces with ``simulate``."""
+    ranks in sorted order); single-process SPMD traces with ``simulate``."""
+    from repro.trace.export import graph_for_rank
+
     topo = topo or build_topology(system)
     pids = tl.ranks()
-    K = int(n_ranks if n_ranks is not None else max(len(pids), 1))
-    if K > 1:
+    is_program = not isinstance(g, chakra.Graph)
+    if is_program:
+        K = int(getattr(g, "n_ranks", None) or len(g))
+    else:
+        K = int(n_ranks if n_ranks is not None else max(len(pids), 1))
+    if K > 1 or is_program:
         cr = simulate_cluster(g, system, topo, n_ranks=K,
                               rank_profiles=rank_profiles, algo=algo,
                               overlap=overlap, compute_derate=compute_derate,
@@ -147,17 +157,21 @@ def validate(g: chakra.Graph, tl: Timeline, system,
     worst: List[Dict] = []
     per_rank: List[Dict] = []
     n_matched = 0
+    n_nodes_total = 0
     e2e_error = 0.0
     cp_meas: Dict[int, float] = {}
     cp_sim: Dict[int, float] = {}
+    cp_g = graph_for_rank(g, cp_rank)
 
     for sr, pid, spans, sim_rank_total in rank_view:
+        g_r = graph_for_rank(g, sr)
         sim_dur = {sp.nid: sp.duration for sp in spans}
-        al = align_rank(g, tl, pid)
+        al = align_rank(g_r, tl, pid)
         meas = al.measured()
         n_matched += al.n_matched
+        n_nodes_total += len(g_r)
         for nid, m in meas.items():
-            n = g.node(nid)
+            n = g_r.node(nid)
             s = sim_dur.get(nid, 0.0)
             row = per_class.setdefault(
                 n.type, {"count": 0, "sim_s": 0.0, "trace_s": 0.0,
@@ -188,16 +202,17 @@ def validate(g: chakra.Graph, tl: Timeline, system,
         row["mean_rel_err"] /= max(row["count"], 1)
     worst.sort(key=lambda w: -w["abs_err"])
 
-    sim_path = set(_critical_path(g, cp_sim))
-    meas_path = _critical_path(g, cp_meas)
+    sim_path = set(_critical_path(cp_g, cp_sim))
+    meas_path = _critical_path(cp_g, cp_meas)
     meas_total_cp = sum(cp_meas.get(n, 0.0) for n in meas_path)
     shared = sum(cp_meas.get(n, 0.0) for n in meas_path if n in sim_path)
     cp_overlap = shared / meas_total_cp if meas_total_cp > 0 else 1.0
 
     n_traced = max(len(rank_view), 1)
     return ValidationReport(
-        n_ranks=n_traced, n_nodes=len(g), n_matched=n_matched,
-        match_fraction=n_matched / max(len(g) * n_traced, 1),
+        n_ranks=n_traced, n_nodes=len(cp_g),
+        n_node_spans=(n_nodes_total or len(cp_g)), n_matched=n_matched,
+        match_fraction=n_matched / max(n_nodes_total, 1),
         sim_total_s=sim_total, trace_total_s=tl.total_time(),
         e2e_error=e2e_error, per_class=per_class,
         critical_path_overlap=cp_overlap, worst=worst[:top_k],

@@ -1,0 +1,356 @@
+"""MPMD engine plumbing: program construction, ragged-group diagnostics
+(``ClusterProgramError``), the pipeline-stage splitter, DSE pipeline knobs
+and the workload-zoo conformance sweep (every registry arch must build,
+split into pipeline stages and run on the MPMD engine with consistent
+stage/collective accounting)."""
+import random
+
+import pytest
+
+from repro.configs.base import SystemConfig
+from repro.configs.registry import ARCH_NAMES, get_config
+from repro.configs.workload import workload_graph
+from repro.core import chakra, dse
+from repro.core.convert import split_pipeline_stages
+from repro.core.costmodel import (ClusterProgramError, MPMDProgram,
+                                  build_topology, collective_fingerprint,
+                                  collective_time, simulate, simulate_cluster)
+
+from test_compiled_sim import rand_graph
+
+SYS = SystemConfig(chips=8, topology="switch")
+TOPO = build_topology(SYS)
+
+
+def chain_graph(group, n_colls=1, kind="all-reduce"):
+    """comp -> collective(s) over `group` -> comp."""
+    g = chakra.Graph()
+    prev = g.add("a", chakra.COMP, flops=1.0)
+    for i in range(n_colls):
+        prev = g.add(f"c{i}", chakra.COMM_COLL, deps=[prev], comm_kind=kind,
+                     comm_bytes=1e6, group=list(group))
+    g.add("b", chakra.COMP, deps=[prev], flops=1.0)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# program construction + diagnostics
+# ---------------------------------------------------------------------------
+
+def test_program_construction_and_dedup():
+    g1, g2 = chain_graph([0, 1]), chain_graph([0, 1])
+    prog = MPMDProgram([g1, g1, g2, g2])
+    assert prog.n_ranks == 4 and prog.n_graphs == 2
+    assert prog.graph_for(0) is g1 and prog.graph_for(3) is g2
+    # dict form must be dense
+    assert MPMDProgram({0: g1, 1: g2}).n_ranks == 2
+    with pytest.raises(ValueError, match="densely"):
+        MPMDProgram({0: g1, 2: g2})
+    with pytest.raises(ValueError):
+        MPMDProgram([])
+    with pytest.raises(TypeError):
+        MPMDProgram([g1, "not a graph"])
+    with pytest.raises(ValueError, match="disagrees"):
+        simulate_cluster(prog, SYS, TOPO, n_ranks=8)
+
+
+def test_ragged_group_raises_cluster_program_error():
+    """Regression (ISSUE 5 bugfix): a group that claims a rank whose graph
+    omits the collective instance must raise a ClusterProgramError naming
+    the rank, fingerprint and program index — not KeyError or a hang."""
+    gA = chain_graph([0, 1], n_colls=2)
+    gB = chain_graph([0, 1], n_colls=1)       # rank 1 misses instance 1
+    with pytest.raises(ClusterProgramError) as ei:
+        simulate_cluster(MPMDProgram([gA, gB]), SYS, TOPO)
+    e = ei.value
+    assert e.rank == 1
+    assert e.index == 1
+    assert e.fingerprint == collective_fingerprint("all-reduce", [0, 1])
+    assert "rank 1" in str(e) and "all-reduce|0,1" in str(e)
+    # a rank with NO instance at all reports index 0
+    gC = chakra.Graph()
+    gC.add("solo", chakra.COMP, flops=1.0)
+    with pytest.raises(ClusterProgramError) as ei:
+        simulate_cluster(MPMDProgram([gA, gC]), SYS, TOPO)
+    assert ei.value.rank == 1 and ei.value.index == 0
+
+
+def test_mismatched_collective_kinds_raise():
+    gA = chain_graph([0, 1], kind="all-reduce")
+    gB = chain_graph([0, 1], kind="all-gather")
+    with pytest.raises(ClusterProgramError, match="mismatched collective"):
+        simulate_cluster(MPMDProgram([gA, gB]), SYS, TOPO)
+
+
+def test_nonmember_rank_runs_collective_locally():
+    """Ragged participation: a collective whose group omits a rank never
+    blocks that rank, even if the node appears in its graph."""
+    gA = chain_graph([0, 1])
+    gB = chain_graph([0, 1])                   # rank 2 carries the node...
+    prog = MPMDProgram([gA, gA, gB])           # ...but group = [0, 1]
+    a_nid = 0
+    rd = {0: {a_nid: 5e-3}}                    # straggle a group member
+    cr = simulate_cluster(prog, SYS, TOPO, rank_durations=rd,
+                          keep_timeline=True)
+    # rank 2 never waits for the [0,1] barrier
+    assert cr.barrier_wait[2] == 0.0
+    assert cr.rank_result(2).total_time < cr.rank_result(1).total_time
+    # ranks 0/1 synchronize
+    e0 = next(s for s in cr.rank_spans(0) if s.name == "c0")
+    e1 = next(s for s in cr.rank_spans(1) if s.name == "c0")
+    assert e0.end == e1.end
+
+
+def test_mpmd_asymmetric_pools_step_accounting():
+    """Two pools running different programs, stitched by one cross-pool
+    collective: the step is gated by the slower pool on every member."""
+    group = [0, 1, 2, 3]
+    g_train = chakra.Graph()
+    a = g_train.add("fwd", chakra.COMP, flops=5e10)
+    g_train.add("sync", chakra.COMM_COLL, deps=[a], comm_kind="all-reduce",
+                comm_bytes=4e6, group=group)
+    g_serve = chakra.Graph()
+    b = g_serve.add("decode", chakra.COMP, flops=5e8)
+    g_serve.add("sync", chakra.COMM_COLL, deps=[b], comm_kind="all-reduce",
+                comm_bytes=4e6, group=group)
+    prog = MPMDProgram([g_train, g_train, g_serve, g_serve])
+    cr = simulate_cluster(prog, SYS, TOPO, keep_timeline=True)
+    assert cr.n_classes == 2
+    coll = collective_time("all-reduce", 4e6, group, TOPO)
+    slow_arrival = max(s.start for r in group for s in cr.rank_spans(r)
+                      if s.name == "sync")
+    for r in group:
+        sp = next(s for s in cr.rank_spans(r) if s.name == "sync")
+        assert sp.end == slow_arrival + coll
+    # the fast serving pool carries the barrier wait
+    assert cr.barrier_wait[2] > 0.0 and cr.barrier_wait[0] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# pipeline splitter
+# ---------------------------------------------------------------------------
+
+def test_splitter_structure_and_accounting():
+    g = workload_graph(get_config("gemma3-4b", smoke=True),
+                       batch_tokens=512, ranks=8)
+    for S in (2, 3, 4, 8):
+        prog = split_pipeline_stages(g, S)
+        assert prog.n_ranks == S and prog.n_graphs == S
+        meta = prog.meta
+        assert meta["num_stages"] == S and meta["source_nodes"] == len(g)
+        assert sorted(set(meta["stage_of"])) == list(range(S))
+        # node accounting: every source node lands in exactly one stage;
+        # each cross-stage transfer adds one send + one recv
+        total = sum(len(prog.graph_for(r)) for r in range(S))
+        assert total == len(g) + 2 * meta["p2p_pairs"]
+        # collective accounting: original collectives survive per stage,
+        # plus the p2p pairs
+        n_colls = sum(len(prog.graph_for(r).by_type(chakra.COMM_COLL))
+                      for r in range(S))
+        n_src = len(g.by_type(chakra.COMM_COLL))
+        assert n_colls == n_src + 2 * meta["p2p_pairs"]
+        for r in range(S):
+            sg = prog.graph_for(r)
+            sg.validate()
+            # rewritten groups: stage-internal collectives span exactly the
+            # stage's (single) rank; p2p groups pair two stage ranks
+            for n in sg.by_type(chakra.COMM_COLL):
+                if n.attrs["comm_kind"] == "p2p":
+                    assert len(n.attrs["group"]) == 2
+                    assert r in n.attrs["group"]
+                else:
+                    assert n.attrs["group"] == [r]
+
+
+def test_splitter_replicas_and_dp_groups():
+    g = workload_graph(get_config("qwen3-8b", smoke=True),
+                       batch_tokens=512, ranks=8)
+    prog = split_pipeline_stages(g, 2, replicas=2)
+    assert prog.n_ranks == 4 and prog.n_graphs == 4
+    # stage-major layout: stage s owns ranks [s*R, (s+1)*R)
+    for r in range(4):
+        sg = prog.graph_for(r)
+        s = sg.meta["pipeline_stage"]
+        assert r in (s * 2, s * 2 + 1)
+        for n in sg.by_type(chakra.COMM_COLL):
+            if n.attrs["comm_kind"] != "p2p":
+                assert n.attrs["group"] == [s * 2, s * 2 + 1]
+    cr = simulate_cluster(prog, SYS, TOPO)
+    assert cr.n_ranks == 4
+    assert cr.step_time > 0.0
+
+
+def test_splitter_stage_boundaries_respect_dataflow():
+    g = rand_graph(random.Random(7), 60)
+    prog = split_pipeline_stages(g, 4, assignment="nodes")
+    stage_of = prog.meta["stage_of"]
+    for n in g.nodes:
+        for d in n.all_deps:
+            assert stage_of[d] <= stage_of[n.id], (d, n.id)
+
+
+def test_splitter_explicit_assignment_and_errors():
+    g = chakra.Graph()
+    a = g.add("a", chakra.COMP, flops=1.0, out_bytes=64.0)
+    b = g.add("b", chakra.COMP, deps=[a], flops=1.0)
+    c = g.add("c", chakra.COMP, deps=[b], flops=1.0)
+    prog = split_pipeline_stages(g, 2, assignment=[0, 0, 1])
+    assert prog.meta["assignment"] == "explicit"
+    assert prog.meta["stage_of"] == [0, 0, 1]
+    assert prog.meta["p2p_pairs"] == 1
+    with pytest.raises(ValueError, match="backward"):
+        split_pipeline_stages(g, 2, assignment=[1, 0, 1])
+    with pytest.raises(ValueError, match="omits"):
+        split_pipeline_stages(g, 2, assignment={0: 0, 2: 1})
+    with pytest.raises(ValueError, match="covers 2"):
+        split_pipeline_stages(g, 2, assignment=[0, 1])
+    with pytest.raises(ValueError, match="empty"):
+        split_pipeline_stages(g, 2, assignment=[0, 0, 0])
+    with pytest.raises(ValueError, match="outside"):
+        split_pipeline_stages(g, 2, assignment=[0, 0, 5])
+    with pytest.raises(ValueError):
+        split_pipeline_stages(g, 9)            # more stages than nodes
+    with pytest.raises(ValueError, match="policy"):
+        split_pipeline_stages(g, 2, assignment="bogus")
+
+
+def test_pipeline_stage_barrier_timing():
+    """2-stage split of a two-layer chain: stage 1 parks at its recv until
+    stage 0's send arrives — the p2p pair is a real cross-rank barrier."""
+    g = chakra.Graph()
+    f0 = g.add("f0", chakra.COMP, flops=1.0, out_bytes=1e6)
+    g.add("f1", chakra.COMP, deps=[f0], flops=1.0, out_bytes=1e6)
+    prog = split_pipeline_stages(g, 2, assignment=[0, 1])
+    rd = {0: {0: 3e-3}}                        # slow stage 0's compute
+    cr = simulate_cluster(prog, SYS, TOPO, rank_durations=rd,
+                          keep_timeline=True)
+    send = next(s for s in cr.rank_spans(0) if s.name.startswith("send"))
+    recv = next(s for s in cr.rank_spans(1) if s.name.startswith("recv"))
+    assert send.start == 3e-3                  # after slowed f0
+    assert recv.start == 0.0                   # stage 1 arrives immediately
+    assert recv.end == send.end                # released by the send
+    assert cr.barrier_wait[1] == pytest.approx(3e-3)
+    f1 = next(s for s in cr.rank_spans(1) if s.name == "f1")
+    assert f1.start >= recv.end
+
+
+def test_pipeline_p2p_pairs_never_cross_wires():
+    """Regression: two transfers on the same (src, dst) channel whose
+    sends complete in the opposite order from their creation must NOT
+    cross-pair — every consumer starts only after its own producer's send
+    (the FIFO ctrl chain pins both sides to creation order)."""
+    g = chakra.Graph()
+    # producer A: huge COMP (finishes late); producer B: stage-local
+    # collective committed on the comm stream at t~0 (finishes early)
+    a = g.add("A", chakra.COMP, flops=1e15, out_bytes=1e6)
+    b = g.add("B", chakra.COMM_COLL, comm_kind="all-reduce", comm_bytes=1e6,
+              out_bytes=1e6, group=[0])
+    ca = g.add("cA", chakra.COMP, deps=[a], flops=1.0)
+    cb = g.add("cB", chakra.COMP, deps=[b], flops=1.0)
+    prog = split_pipeline_stages(g, 2, assignment=[0, 0, 1, 1])
+    cr = simulate_cluster(prog, SYS, TOPO, keep_timeline=True)
+    fin = {s.name: s.end for s in cr.rank_spans(0)}
+    starts = {s.name: s.start for s in cr.rank_spans(1)}
+    assert starts["cA"] >= fin["A"], (starts["cA"], fin["A"])
+    assert starts["cB"] >= fin["B"], (starts["cB"], fin["B"])
+    # the channel is FIFO: sends commit in creation order on rank 0
+    sends = [s for s in cr.rank_spans(0) if s.name.startswith("send")]
+    assert [s.name for s in sorted(sends, key=lambda s: s.start)] \
+        == [s.name for s in sends]
+
+
+# ---------------------------------------------------------------------------
+# DSE pipeline knobs
+# ---------------------------------------------------------------------------
+
+def test_dse_num_stages_knob_routes_to_mpmd():
+    g = workload_graph(get_config("granite-3-8b", smoke=True),
+                       batch_tokens=512, ranks=8)
+    trials = dse.explore(lambda cfg: g, SYS,
+                         [dse.Knob("num_stages", [1, 2, 4],
+                                   layer="software")])
+    assert len(trials) == 3
+    by_ns = {t.config["num_stages"]: t for t in trials}
+    # the 1-stage trial is the plain simulate() path, bit-identical
+    assert by_ns[1].result.total_time == simulate(g, SYS, TOPO).total_time
+    assert "n_classes" not in by_ns[1].result.as_dict()
+    for ns in (2, 4):
+        d = by_ns[ns].result.as_dict()
+        assert d["n_ranks"] == ns * (TOPO.n_ranks // ns)
+    # stage_assignment is a sweepable knob too
+    trials = dse.explore(
+        lambda cfg: g, SYS,
+        [dse.Knob("num_stages", [2], layer="software"),
+         dse.Knob("stage_assignment", ["flops", "nodes"], layer="software")])
+    assert len(trials) == 2
+    assert {t.config["stage_assignment"] for t in trials} \
+        == {"flops", "nodes"}
+
+
+def test_dse_num_stages_cannot_exceed_cluster_ranks():
+    """num_stages > cluster ranks would model phantom hardware (S ranks on
+    a T-chip topology) and unfairly win any sweep — it must raise."""
+    g = workload_graph(get_config("mamba2-780m", smoke=True),
+                       batch_tokens=512, ranks=8)
+    with pytest.raises(ValueError, match="exceeds the cluster"):
+        dse.evaluate(g, SYS, {"num_stages": 16})
+    with pytest.raises(ValueError, match="exceeds the cluster"):
+        dse.evaluate(g, SYS, {"num_stages": 8, "cluster_ranks": 4})
+    # uneven splits idle the remainder instead of inflating hardware
+    r = dse.evaluate(g, SYS, {"num_stages": 3, "cluster_ranks": 8})
+    assert r.as_dict()["n_ranks"] == 3 * (8 // 3)
+
+
+def test_dse_pipeline_composes_with_hetero_knobs():
+    g = workload_graph(get_config("mamba2-780m", smoke=True),
+                       batch_tokens=512, ranks=8)
+    r = dse.evaluate(g, SYS, {"num_stages": 2, "cluster_ranks": 8,
+                              "slow_chip_ratio": 0.25})
+    d = r.as_dict()
+    assert d["n_ranks"] == 8
+    nominal = dse.evaluate(g, SYS, {"num_stages": 2, "cluster_ranks": 8})
+    assert r.step_time > nominal.step_time     # the slow chips bite
+
+
+# ---------------------------------------------------------------------------
+# workload-zoo conformance (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_workload_zoo_pipeline_conformance(arch):
+    """Every registry entry must build an analytic graph, split into 2
+    pipeline stages, and run through the MPMD engine with consistent
+    stage-count and collective-count accounting — a new config cannot
+    silently break the splitter."""
+    cfg = get_config(arch, smoke=True)
+    g = workload_graph(cfg, batch_tokens=512, ranks=8)
+    g.validate()
+    assert len(g.by_type(chakra.COMM_COLL)) >= 2 * cfg.num_layers
+    if cfg.num_experts:
+        assert any(n.attrs["comm_kind"] == "all-to-all"
+                   for n in g.by_type(chakra.COMM_COLL))
+    base = simulate(g, SYS, TOPO)
+    assert base.total_time > 0.0
+    for replicas in (1, 2):
+        prog = split_pipeline_stages(g, 2, replicas=replicas)
+        assert prog.n_ranks == 2 * replicas
+        assert sorted(set(prog.meta["stage_of"])) == [0, 1]
+        total = sum(len(prog.graph_for(r)) for r in range(prog.n_ranks))
+        assert total == replicas * (len(g) + 2 * prog.meta["p2p_pairs"])
+        n_colls = sum(len(prog.graph_for(r).by_type(chakra.COMM_COLL))
+                      for r in range(prog.n_ranks))
+        assert n_colls == replicas * (len(g.by_type(chakra.COMM_COLL))
+                                      + 2 * prog.meta["p2p_pairs"])
+        cr = simulate_cluster(prog, SYS, TOPO)
+        assert cr.n_ranks == prog.n_ranks
+        assert cr.step_time > 0.0
+        # per-stage p2p sends match recvs one-to-one
+        sends = sum(1 for r in range(prog.n_ranks)
+                    for n in prog.graph_for(r).by_type(chakra.COMM_COLL)
+                    if n.attrs["comm_kind"] == "p2p"
+                    and n.name.startswith("send"))
+        recvs = sum(1 for r in range(prog.n_ranks)
+                    for n in prog.graph_for(r).by_type(chakra.COMM_COLL)
+                    if n.attrs["comm_kind"] == "p2p"
+                    and n.name.startswith("recv"))
+        assert sends == recvs == replicas * prog.meta["p2p_pairs"]

@@ -1,0 +1,214 @@
+"""Randomized MPMD property suite (ISSUE 5 satellite).
+
+Generates random per-rank DAGs that share a cluster-wide collective
+schedule (each rank weaves its subset of the schedule into its own random
+compute DAG, chained in launch order like a real comm stream) and asserts
+the engine's core invariants over >= 50 seeded cases:
+
+  * K identical graphs are bit-identical to the single-graph
+    ``simulate_cluster`` and to ``simulate()`` for K in {1, 2, 4, 8};
+  * a collective barrier never completes before its slowest participant
+    arrives, completes simultaneously on every participant, and barrier
+    waits are non-negative;
+  * the cluster makespan is monotone non-decreasing when any rank slows;
+  * coalesced == naive (``coalesce=False``) per-rank results, graph pools
+    included.
+"""
+import random
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:          # container without hypothesis: deterministic stub
+    import _hypothesis_stub as st
+    from _hypothesis_stub import given, settings
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.costmodel import (MPMDProgram, build_topology, compile_graph,
+                                  simulate, simulate_cluster)
+
+from test_compiled_sim import FIELDS, rand_graph
+
+SYS = SystemConfig(chips=16)
+TOPO = build_topology(SYS)
+
+KINDS = ("all-gather", "all-reduce", "reduce-scatter")
+
+
+def shared_schedule(rng, K):
+    """Cluster-wide collective launch order: (name, kind, group, payload)."""
+    sched = []
+    for k in range(rng.randint(1, 5)):
+        size = rng.randint(2, K)
+        group = sorted(rng.sample(range(K), size))
+        sched.append((f"coll{k}", rng.choice(KINDS), group,
+                      rng.uniform(1e5, 1e7)))
+    return sched
+
+
+def rank_dag(rng, rank, sched, pool_ranks=None):
+    """One rank's graph: random COMP DAG + its slice of the shared schedule,
+    collectives chained in launch order (a real program serializes launches
+    on the comm stream; this also pins the canonical order to the schedule).
+
+    `pool_ranks` (for graph-sharing pools): the graph carries a schedule
+    entry iff ANY pool member participates — members barrier on it, the
+    others run it locally (ragged participation)."""
+    members_of = pool_ranks if pool_ranks is not None else [rank]
+    g = chakra.Graph()
+    nids = []
+
+    def rand_deps(k=3):
+        if not nids:
+            return []
+        return rng.sample(nids, rng.randint(0, min(len(nids), k)))
+
+    for i in range(rng.randint(2, 8)):
+        nids.append(g.add(f"p{i}", chakra.COMP, deps=rand_deps(),
+                          flops=rng.uniform(1e6, 1e9),
+                          bytes=rng.uniform(0.0, 1e7),
+                          out_bytes=rng.choice([0.0, rng.uniform(1, 100)])))
+    prev_coll = None
+    for name, kind, group, payload in sched:
+        if not any(r in group for r in members_of):
+            nids.append(g.add(f"x{name}", chakra.COMP, deps=rand_deps(),
+                              flops=rng.uniform(1e6, 1e9)))
+            continue
+        c = g.add(name, chakra.COMM_COLL, deps=rand_deps(),
+                  ctrl_deps=[prev_coll] if prev_coll is not None else [],
+                  comm_kind=kind, comm_bytes=payload, out_bytes=8.0,
+                  group=group)
+        prev_coll = c
+        nids.append(c)
+        for j in range(rng.randint(0, 2)):
+            nids.append(g.add(f"c{name}_{j}", chakra.COMP,
+                              deps=rand_deps() + [c],
+                              flops=rng.uniform(1e6, 1e9),
+                              out_bytes=rng.choice([0.0, 16.0])))
+    return g
+
+
+def mpmd_cluster(rng, K):
+    sched = shared_schedule(rng, K)
+    graphs = [rank_dag(rng, r, sched) for r in range(K)]
+    return MPMDProgram(graphs), sched
+
+
+def slowdown_overrides(prog, rank, factor):
+    """rank_durations scaling every node of `rank`'s graph by `factor`."""
+    cg = compile_graph(prog.graph_for(rank))
+    base = cg.durations(SYS, TOPO)
+    return {rank: {nid: base[nid] * factor for nid in range(cg.n)}}
+
+
+@settings(max_examples=15)
+@given(st.integers(0, 10**6))
+def test_identical_graphs_bit_identical_to_spmd_and_simulate(seed):
+    """K copies of one graph under the MPMD engine == today's single-graph
+    simulate_cluster == simulate(), every field, timeline included."""
+    rng = random.Random(seed)
+    g = rand_graph(rng, rng.randint(5, 80))
+    for overlap in (True, False):
+        ref = simulate(g, SYS, TOPO, overlap=overlap, keep_timeline=True)
+        for K in (1, 2, 4, 8):
+            spmd = simulate_cluster(g, SYS, TOPO, n_ranks=K, overlap=overlap,
+                                    keep_timeline=True)
+            mpmd = simulate_cluster([g] * K, SYS, TOPO, overlap=overlap,
+                                    keep_timeline=True)
+            assert mpmd.n_ranks == K
+            for r in range(K):
+                mr, sr = mpmd.rank_result(r), spmd.rank_result(r)
+                for f in FIELDS:
+                    assert getattr(mr, f) == getattr(ref, f), (K, r, f)
+                    assert getattr(mr, f) == getattr(sr, f), (K, r, f)
+                assert mr.timeline == ref.timeline
+            assert mpmd.step_time == spmd.step_time == ref.total_time
+            assert all(w == 0.0 for w in mpmd.class_barrier_wait)
+            assert mpmd.slowest_rank == 0
+
+
+@settings(max_examples=20)
+@given(st.integers(0, 10**6))
+def test_barrier_completes_at_slowest_participant(seed):
+    """Every shared collective ends simultaneously on all participants, no
+    earlier than the slowest participant's arrival; per-rank barrier waits
+    are >= 0."""
+    rng = random.Random(seed)
+    K = rng.choice([2, 4, 8])
+    prog, sched = mpmd_cluster(rng, K)
+    straggler = rng.randrange(K)
+    rd = slowdown_overrides(prog, straggler, rng.uniform(1.5, 4.0))
+    cr = simulate_cluster(prog, SYS, TOPO, rank_durations=rd,
+                          keep_timeline=True)
+    assert all(w >= 0.0 for w in cr.class_barrier_wait)
+    for name, kind, group, payload in sched:
+        spans = {}
+        for r in group:
+            sp = [s for s in cr.rank_spans(r) if s.name == name]
+            assert len(sp) == 1, (name, r)
+            spans[r] = sp[0]
+        ends = {s.end for s in spans.values()}
+        assert len(ends) == 1, (name, ends)          # synchronous completion
+        end = ends.pop()
+        slowest_arrival = max(s.start for s in spans.values())
+        assert end >= slowest_arrival                # barrier gates on it
+        # each participant's span covers [own arrival, shared end]: no
+        # start after the barrier fires, every span closes at `end`
+        for r, s in spans.items():
+            assert s.start <= slowest_arrival, (name, r)
+            assert s.end - s.start >= end - slowest_arrival, (name, r)
+
+
+@settings(max_examples=15)
+@given(st.integers(0, 10**6))
+def test_makespan_monotone_when_any_rank_slows(seed):
+    """step_time is monotone non-decreasing in any single rank's slowdown
+    factor (1.0 -> 1.5 -> 2.5)."""
+    rng = random.Random(seed)
+    K = rng.choice([2, 4])
+    prog, _ = mpmd_cluster(rng, K)
+    victim = rng.randrange(K)
+    base = simulate_cluster(prog, SYS, TOPO).step_time
+    prev = base
+    for f in (1.5, 2.5):
+        step = simulate_cluster(
+            prog, SYS, TOPO,
+            rank_durations=slowdown_overrides(prog, victim, f)).step_time
+    # slowed victim gates its barriers: never faster than nominal, and
+    # monotone across increasing factors
+        assert step >= prev - 1e-15, (seed, victim, f, prev, step)
+        prev = step
+    assert prev >= base
+
+
+@settings(max_examples=15)
+@given(st.integers(0, 10**6))
+def test_coalesced_equals_naive(seed):
+    """Graph-pool coalescing is an optimization, not a model change: ranks
+    sharing a graph coalesce (when unskewed) yet produce exactly the naive
+    per-rank engine's results."""
+    rng = random.Random(seed)
+    K = rng.choice([4, 8])
+    n_pools = rng.choice([1, 2])
+    sched = shared_schedule(rng, K)
+    pools = [[r for r in range(K) if r % n_pools == p]
+             for p in range(n_pools)]
+    pool_graphs = [rank_dag(rng, pool[0], sched, pool_ranks=pool)
+                   for pool in pools]
+    prog = MPMDProgram([pool_graphs[r % n_pools] for r in range(K)])
+    rd = None
+    if rng.random() < 0.6:               # skew a strict subset of ranks
+        rd = slowdown_overrides(prog, rng.randrange(K),
+                                rng.uniform(1.2, 3.0))
+    a = simulate_cluster(prog, SYS, TOPO, rank_durations=rd)
+    b = simulate_cluster(prog, SYS, TOPO, rank_durations=rd, coalesce=False)
+    assert b.n_classes == K
+    assert a.n_classes <= b.n_classes
+    for r in range(K):
+        ra, rb = a.rank_result(r), b.rank_result(r)
+        for f in FIELDS:
+            assert getattr(ra, f) == getattr(rb, f), (seed, r, f)
+        assert a.barrier_wait[r] == b.barrier_wait[r], (seed, r)
+    assert a.step_time == b.step_time
+    assert a.slowest_rank == b.slowest_rank

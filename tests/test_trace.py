@@ -445,6 +445,58 @@ def test_strided_groups_roundtrip_through_trace():
     assert tl.total_time(1) < tl.total_time(0)    # odd instance unaffected
 
 
+def test_mpmd_pipeline_roundtrip_4rank_2stage(tmp_path):
+    """ISSUE 5 satellite: a 4-rank, 2-stage pipeline MPMD run exports to
+    Chrome trace, re-ingests and validates at ~0% e2e error with 100% node
+    match per rank — each rank scored against its *own* stage graph."""
+    from repro.configs.registry import get_config
+    from repro.configs.workload import workload_graph
+    from repro.core.convert import split_pipeline_stages
+
+    g = workload_graph(get_config("gemma3-4b", smoke=True),
+                       batch_tokens=512, ranks=8)
+    prog = split_pipeline_stages(g, 2, replicas=2)     # 4 ranks, 2 stages
+    assert prog.n_ranks == 4
+    cr = simulate_cluster(prog, SYS, TOPO, keep_timeline=True)
+    path = str(tmp_path / "mpmd_trace.json")
+    export_chrome_trace(cr, path, graph=prog)
+    tl = ingest_chrome_trace(path)
+    assert tl.ranks() == [0, 1, 2, 3]
+    rep = validate(prog, tl, SYS, TOPO)
+    assert rep.n_ranks == 4
+    assert rep.match_fraction == 1.0                   # 100% per-rank match
+    for row in rep.per_rank:
+        assert row["match_fraction"] == 1.0, row
+        assert row["e2e_error"] < 1e-9, row
+    assert rep.e2e_error < 1e-9                        # ~0% round-trip error
+    assert not rep.worst
+    # the trace carries per-rank distinct graphs: stage 0 and stage 1
+    # processes expose different node sets
+    names0 = {e.name for e in tl.rank_events(0)}
+    names1 = {e.name for e in tl.rank_events(2)}
+    assert names0 != names1
+    assert any(n.startswith("send") for n in names0)
+    assert any(n.startswith("recv") for n in names1)
+    tr = to_chrome_trace(cr, graph=prog)
+    assert tr["metadata"]["mpmd"] is True
+
+
+def test_mpmd_roundtrip_with_straggler_profile():
+    """Per-rank profiles skew an MPMD pipeline run; validating under the
+    same profiles still reproduces it exactly."""
+    from repro.core.convert import split_pipeline_stages
+
+    g = fsdp_stack(6, 2)
+    prog = split_pipeline_stages(g, 2, replicas=2)
+    profs = {1: RankProfile(compute_scale=0.6)}
+    cr = simulate_cluster(prog, SYS, TOPO, rank_profiles=profs,
+                          keep_timeline=True)
+    tl = ingest_chrome_trace(to_chrome_trace(cr, graph=prog))
+    rep = validate(prog, tl, SYS, TOPO, rank_profiles=profs)
+    assert rep.match_fraction == 1.0
+    assert rep.e2e_error < 1e-9
+
+
 def test_explore_parallel_warns_gil_once():
     import warnings
 
