@@ -1,7 +1,8 @@
 """Benchmark regression gate: fail if BENCH_sim speedup ratios, the trace
 subsystem's round-trip/calibration figures, the search subsystem's
-sample-efficiency figures or the MPMD engine's exactness/coalescing
-figures fall below the floors recorded in benchmarks/thresholds.json.
+sample-efficiency figures, the MPMD engine's exactness/coalescing figures
+or the fault subsystem's segmented-resim/Young-Daly figures fall below
+the floors recorded in benchmarks/thresholds.json.
 
 Usage (the verify recipe's perf gate):
 
@@ -9,24 +10,28 @@ Usage (the verify recipe's perf gate):
     PYTHONPATH=.:src python -m benchmarks.trace_roundtrip --smoke
     PYTHONPATH=.:src python -m benchmarks.search_bench --smoke
     PYTHONPATH=.:src python -m benchmarks.mpmd_pipeline --smoke
+    PYTHONPATH=.:src python -m benchmarks.fault_scenarios --smoke
     PYTHONPATH=.:src python -m benchmarks.check_regression
 
 or in one shot::
 
     PYTHONPATH=.:src python -m benchmarks.check_regression --run-smoke
 
-Reads artifacts/bench/BENCH_sim.json, BENCH_trace.json, BENCH_search.json
-and BENCH_mpmd.json (``--bench`` / ``--trace-bench`` / ``--search-bench``
-/ ``--mpmd-bench`` to override).  The speedup floors are deliberately
-conservative — they hold for both the full and ``--smoke`` matrices on a
-loaded machine — so a failure means the engine actually regressed, not
-that the box was busy; the trace floors are correctness contracts
-(alignment, round-trip accuracy, calibration recovery), the search floors
-are the PR-4 acceptance bound (bayesian/evolutionary within 2% of the
-exhaustive grid optimum on <= 25% of its trials) and the mpmd floors are
-the PR-5 acceptance contract (K-identical-graph bit-identity, 64-rank
-two-pool coalescing speedup).  Exit code 1 on regression, 2 on missing
-inputs.
+Reads artifacts/bench/BENCH_sim.json, BENCH_trace.json, BENCH_search.json,
+BENCH_mpmd.json and BENCH_fault.json (``--bench`` / ``--trace-bench`` /
+``--search-bench`` / ``--mpmd-bench`` / ``--fault-bench`` to override).
+The speedup floors are deliberately conservative — they hold for both the
+full and ``--smoke`` matrices on a loaded machine — so a failure means the
+engine actually regressed, not that the box was busy; the trace floors are
+correctness contracts (alignment, round-trip accuracy, calibration
+recovery), the search floors are the PR-4 acceptance bound
+(bayesian/evolutionary within 2% of the exhaustive grid optimum on <= 25%
+of its trials), the mpmd floors are the PR-5 acceptance contract
+(K-identical-graph bit-identity, 64-rank two-pool coalescing speedup) and
+the fault floors are the PR-6 acceptance contract (segmented horizon
+re-simulation >= 3x over naive, simulated optimal checkpoint interval
+within 15% of Young/Daly, goodput monotone in fault rate).  Exit code 1
+on regression, 2 on missing inputs.
 """
 from __future__ import annotations
 
@@ -44,6 +49,8 @@ DEFAULT_SEARCH_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
                                     "BENCH_search.json")
 DEFAULT_MPMD_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
                                   "BENCH_mpmd.json")
+DEFAULT_FAULT_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
+                                   "BENCH_fault.json")
 DEFAULT_THRESH = os.path.join(HERE, "thresholds.json")
 
 
@@ -61,7 +68,8 @@ def check(bench: dict, thresholds: dict) -> list:
     for size, row in sorted(bench.get("simulate", {}).items()):
         for key, floor in sim_floors.items():
             one(f"simulate.{size}", key, floor, row.get(key))
-    for section in ("straggler", "explore", "trace", "search", "mpmd"):
+    for section in ("straggler", "explore", "trace", "search", "mpmd",
+                    "fault"):
         for key, floor in thresholds.get(section, {}).items():
             one(section, key, floor, bench.get(section, {}).get(key))
     return bad
@@ -77,21 +85,24 @@ def main(argv=None) -> int:
                     help="BENCH_search.json path")
     ap.add_argument("--mpmd-bench", default=DEFAULT_MPMD_BENCH,
                     help="BENCH_mpmd.json path")
+    ap.add_argument("--fault-bench", default=DEFAULT_FAULT_BENCH,
+                    help="BENCH_fault.json path")
     ap.add_argument("--thresholds", default=DEFAULT_THRESH)
     ap.add_argument("--run-smoke", action="store_true",
                     help="run `sim_bench --smoke` + `trace_roundtrip "
                          "--smoke` + `search_bench --smoke` + "
-                         "`mpmd_pipeline --smoke` first to produce the "
-                         "bench files")
+                         "`mpmd_pipeline --smoke` + `fault_scenarios "
+                         "--smoke` first to produce the bench files")
     args = ap.parse_args(argv)
 
     if args.run_smoke:
-        from benchmarks import (mpmd_pipeline, search_bench, sim_bench,
-                                trace_roundtrip)
+        from benchmarks import (fault_scenarios, mpmd_pipeline,
+                                search_bench, sim_bench, trace_roundtrip)
         sim_bench.main(["--smoke"])
         trace_roundtrip.main(["--smoke"])
         search_bench.main(["--smoke"])
         mpmd_pipeline.main(["--smoke"])
+        fault_scenarios.main(["--smoke"])
 
     bench = {}
     for path, key, producer in ((args.bench, None, "sim_bench"),
@@ -100,7 +111,9 @@ def main(argv=None) -> int:
                                 (args.search_bench, "search",
                                  "search_bench"),
                                 (args.mpmd_bench, "mpmd",
-                                 "mpmd_pipeline")):
+                                 "mpmd_pipeline"),
+                                (args.fault_bench, "fault",
+                                 "fault_scenarios")):
         if not os.path.exists(path):
             print(f"check_regression: no bench file at {path} "
                   f"(run benchmarks.{producer} first, or pass --run-smoke)")

@@ -1,0 +1,192 @@
+"""Fault-scenario subsystem benchmark: segmented re-simulation speedup,
+Monte-Carlo throughput, Young/Daly optimal-interval recovery, and the
+goodput-monotonicity contract.
+
+  fault.segmented_speedup   wall-time win of segmented horizon simulation
+                            (signature + engine memos) over the naive
+                            baseline that re-runs the cluster engine for
+                            every same-rate segment (``memoize=False``)
+  fault.mc_trials_per_sec   seeded Monte-Carlo horizon trials per second
+                            on the 16-rank FSDP stack
+  fault.young_daly_recovery min over (MTBF, checkpoint-cost) settings of
+                            1 - |tau_sim - tau_YD| / tau_YD: how closely
+                            the simulated optimal checkpoint interval
+                            recovers the Young/Daly closed form
+  fault.goodput_monotone    1.0 iff expected goodput is non-increasing
+                            along a fault-rate ladder (rate-coupled
+                            scenario sampling makes this exact)
+
+Writes BENCH_fault.json; ``check_regression.py`` floors the figures via
+the ``fault`` section of thresholds.json (segmented_speedup >= 3x is the
+ISSUE acceptance bound, young_daly_recovery >= 0.85 is the 15% tolerance).
+``--smoke`` shrinks horizons/trial counts, not the contracts — the floors
+hold in both modes.  No jax required; runs in seconds.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+from benchmarks.common import emit, write_json
+from benchmarks.hetero_cluster import fsdp_stack
+
+from repro.configs.base import SystemConfig
+from repro.core.costmodel import build_topology, simulate_cluster
+from repro.faults import (CheckpointPolicy, FaultEvent, FaultRates,
+                          FaultScenario, monte_carlo, simulate_horizon,
+                          young_daly_interval)
+
+RANKS = 16
+SEED = 3
+
+
+def _windowed_scenario(s0: float, n_steps: int) -> FaultScenario:
+    """Alternating slowdown / link-degrade windows: many segments, few
+    distinct signatures — the segmented engine's best case and the naive
+    engine's worst."""
+    evs = []
+    t = 5 * s0
+    for i in range(n_steps // 20):
+        if i % 2 == 0:
+            evs.append(FaultEvent(t, "slowdown", rank=i % RANKS,
+                                  duration=8 * s0, magnitude=2.0))
+        else:
+            evs.append(FaultEvent(t, "link_degrade", rank=i % RANKS,
+                                  duration=8 * s0, magnitude=0.5))
+        t += 20 * s0
+    return FaultScenario(evs, horizon=1e12, n_ranks=RANKS)
+
+
+def bench_segmented(g, sysc, topo, s0, n_steps):
+    sc = _windowed_scenario(s0, n_steps)
+    pol = CheckpointPolicy(interval=50, write_cost=s0)
+    kw = dict(topo=topo, n_ranks=RANKS, n_steps=n_steps)
+    ref = simulate_horizon(g, sysc, sc, pol, **kw)          # warm the memos
+    t0 = time.perf_counter()
+    seg = simulate_horizon(g, sysc, sc, pol, **kw)
+    t_seg = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    naive = simulate_horizon(g, sysc, sc, pol, memoize=False, **kw)
+    t_naive = time.perf_counter() - t0
+    assert naive.as_dict() == seg.as_dict() == ref.as_dict(), \
+        "memoization changed the physics"
+    return t_naive / t_seg, seg.n_segments, seg.n_signatures
+
+
+def bench_monte_carlo(g, sysc, topo, s0, n_trials, n_steps):
+    rates = FaultRates(fail_rate=1.0 / (200 * s0), fail_downtime=50 * s0,
+                       slowdown_rate=1.0 / (100 * s0))
+    pol = CheckpointPolicy(interval=20, write_cost=s0, restore_cost=2 * s0)
+    t0 = time.perf_counter()
+    mc = monte_carlo(g, sysc, rates, pol, topo=topo, n_ranks=RANKS,
+                     n_steps=n_steps, n_trials=n_trials, seed=SEED)
+    dt = time.perf_counter() - t0
+    return n_trials / dt, mc
+
+
+def bench_young_daly(g, sysc, topo, s0, n_trials):
+    """Simulated optimal interval vs the closed form, two (MTBF, C)
+    settings, common random numbers across every interval arm."""
+    worst = 1.0
+    rows = {}
+    for mtbf_steps, c_steps in ((400, 2), (1600, 8)):
+        mtbf, cost = mtbf_steps * s0, c_steps * s0
+        horizon = 30.0 * mtbf
+        rates = FaultRates(fail_rate=1.0 / mtbf, fail_downtime=0.5 * cost)
+        scen = [FaultScenario.sample(rates, horizon, RANKS, seed=(SEED, i))
+                for i in range(n_trials)]
+        i_yd = young_daly_interval(cost, mtbf) / s0
+        grid = sorted({max(1, round(i_yd * 1.08 ** k))
+                       for k in range(-9, 10)})
+        best_i, best_g = None, -1.0
+        for interval in grid:
+            mc = monte_carlo(g, sysc, rates,
+                             CheckpointPolicy(interval=interval,
+                                              write_cost=cost,
+                                              restore_cost=2 * cost),
+                             topo=topo, n_ranks=RANKS, wall_limit=horizon,
+                             scenarios=scen)
+            if mc.expected_goodput > best_g:
+                best_g, best_i = mc.expected_goodput, interval
+        err = abs(best_i - i_yd) / i_yd
+        worst = min(worst, 1.0 - err)
+        rows[f"mtbf{mtbf_steps}_c{c_steps}"] = {
+            "young_daly_interval": i_yd, "simulated_interval": best_i,
+            "error": err, "expected_goodput": best_g}
+    return worst, rows
+
+
+def bench_monotone(g, sysc, topo, s0, n_trials, n_steps):
+    pol = CheckpointPolicy(interval=20, write_cost=s0, restore_cost=2 * s0)
+    last = math.inf
+    ladder = []
+    for r in (1e-9, 1e-3, 1e-2, 0.05, 0.1):
+        mc = monte_carlo(g, sysc,
+                         FaultRates(fail_rate=r / s0,
+                                    fail_downtime=50 * s0),
+                         pol, topo=topo, n_ranks=RANKS, n_steps=n_steps,
+                         n_trials=n_trials, seed=7)
+        ladder.append((r, mc.expected_goodput))
+        if mc.expected_goodput > last + 1e-12:
+            return 0.0, ladder
+        last = mc.expected_goodput
+    return 1.0, ladder
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="shorter horizons + fewer MC trials (seconds)")
+    args = ap.parse_args(argv)
+
+    seg_steps = 400 if args.smoke else 2000
+    mc_trials = 8 if args.smoke else 16
+    yd_trials = 24 if args.smoke else 32
+
+    g = fsdp_stack(8 if args.smoke else 16, ranks=RANKS)
+    sysc = SystemConfig(chips=RANKS, topology="switch")
+    topo = build_topology(sysc)
+    s0 = float(simulate_cluster(g, sysc, topo, n_ranks=RANKS).total_time)
+    emit("fault.nominal_step_ms", s0 * 1e6, f"{s0 * 1e3:.3f}")
+
+    speedup, n_seg, n_sig = bench_segmented(g, sysc, topo, s0, seg_steps)
+    emit("fault.segments", 0.0, str(n_seg))
+    emit("fault.signatures", 0.0, str(n_sig))
+    emit("fault.segmented_speedup", 0.0, f"{speedup:.1f}x")
+
+    tps, mc = bench_monte_carlo(g, sysc, topo, s0, mc_trials,
+                                200 if args.smoke else 400)
+    emit("fault.mc_trials_per_sec", 0.0, f"{tps:.1f}")
+    emit("fault.mc_expected_goodput", 0.0, f"{mc.expected_goodput:.4f}")
+    emit("fault.mc_p99_step_ms", mc.p99_step_time * 1e6,
+         f"{mc.p99_step_time * 1e3:.3f}")
+
+    recovery, yd_rows = bench_young_daly(g, sysc, topo, s0, yd_trials)
+    for name, row in yd_rows.items():
+        emit(f"fault.young_daly.{name}", 0.0,
+             f"sim={row['simulated_interval']}"
+             f"_yd={row['young_daly_interval']:.1f}"
+             f"_err={row['error']:.1%}")
+    emit("fault.young_daly_recovery", 0.0, f"{recovery:.3f}")
+
+    monotone, ladder = bench_monotone(g, sysc, topo, s0, 6,
+                                      60 if args.smoke else 100)
+    emit("fault.goodput_monotone", 0.0, f"{monotone:.0f}")
+
+    payload = {"smoke": bool(args.smoke), "seed": SEED,
+               "nominal_step_time": s0,
+               "segmented_speedup": speedup,
+               "n_segments": n_seg, "n_signatures": n_sig,
+               "mc_trials_per_sec": tps,
+               "mc": mc.as_dict(),
+               "young_daly": yd_rows,
+               "young_daly_recovery": recovery,
+               "goodput_monotone": monotone,
+               "goodput_ladder": ladder}
+    path = write_json("BENCH_fault.json", payload)
+    emit("fault.bench_json", 0.0, path)
+
+
+if __name__ == "__main__":
+    main()

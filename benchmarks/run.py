@@ -18,10 +18,15 @@
   mpmd_pipeline    (ours)  true-MPMD cluster engine: K-identical-graph
                            exactness, pipeline-split step ratios,
                            64-rank two-pool coalescing speedup
+  fault_scenarios  (ours)  fault-scenario subsystem: segmented-resim
+                           speedup vs naive, Monte-Carlo throughput,
+                           Young/Daly interval recovery, goodput
+                           monotonicity
   check_regression (gate)  fails if BENCH_sim speedups, BENCH_trace
                            round-trip/calibration, BENCH_search
-                           sample-efficiency or BENCH_mpmd
-                           exactness/coalescing figures fall below
+                           sample-efficiency, BENCH_mpmd
+                           exactness/coalescing or BENCH_fault
+                           segmented/recovery figures fall below
                            benchmarks/thresholds.json floors
 
 Each bench runs in its own subprocess so it controls its fake-device count
@@ -34,7 +39,7 @@ import time
 BENCHES = ["opcounts", "e2e_validation", "fsdp_reorder", "bandwidth_sweep",
            "wafer_tacos", "nic_degradation", "roofline", "sim_bench",
            "hetero_cluster", "trace_roundtrip", "search_bench",
-           "mpmd_pipeline", "check_regression"]
+           "mpmd_pipeline", "fault_scenarios", "check_regression"]
 
 
 def main() -> None:

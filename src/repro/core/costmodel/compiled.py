@@ -880,6 +880,23 @@ def run_rows(rows: List[RowSpec], overlap: bool = True,
     return out, waits
 
 
+RESULT_CACHE_CAP = 512
+
+
+def result_cache_put(cache: Dict, key, value, cap: int = RESULT_CACHE_CAP):
+    """Insert into a per-graph result memo with FIFO eviction.
+
+    Fault-horizon Monte-Carlo sweeps can visit thousands of distinct
+    (profile-set, K) signatures per compiled graph over a long run; an
+    unbounded memo would grow without limit.  Dict insertion order gives a
+    cheap FIFO: evict the oldest entries once `cap` is reached.  Eviction
+    only costs a re-simulation — results stay bit-identical either way."""
+    if key not in cache:
+        while len(cache) >= cap:
+            cache.pop(next(iter(cache)))
+    cache[key] = value
+
+
 def compile_graph(g: chakra.Graph) -> CompiledGraph:
     """Lower `g` to a CompiledGraph, memoized on the Graph's edit token."""
     cached = getattr(g, "_cached", None)

@@ -54,10 +54,12 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Sequence
 
 from repro.core import chakra
-from repro.core.costmodel.compiled import RowSpec, compile_graph, run_rows
+from repro.core.costmodel.compiled import (RowSpec, compile_graph,
+                                           result_cache_put, run_rows)
 from repro.core.costmodel.simulator import (ClusterSimResult,
                                             _assemble_cluster_result,
-                                            _override, _parse_rank_durations,
+                                            _copy_cluster_result, _override,
+                                            _parse_rank_durations,
                                             _parse_rank_profiles, _rank_row)
 from repro.core.costmodel.topology import RankProfile, Topology, build_topology
 
@@ -119,6 +121,10 @@ class MPMDProgram:
                 self.graphs.append(g)
             self.graph_of.append(gi)
         self.meta: Dict = dict(meta or {})
+        # per-program result memo (mirrors CompiledGraph._result_cache);
+        # entries are keyed on the member graphs' edit tokens, so in-place
+        # graph edits invalidate naturally
+        self._result_cache: Dict = {}
 
     @property
     def n_ranks(self) -> int:
@@ -147,7 +153,8 @@ def simulate_mpmd(prog: MPMDProgram, system,
                   algo: str = "auto", overlap: bool = True,
                   compute_derate: float = 0.6,
                   keep_timeline: bool = False,
-                  coalesce: bool = True) -> ClusterSimResult:
+                  coalesce: bool = True,
+                  memoize: bool = True) -> ClusterSimResult:
     """Simulate one step of an MPMD program on a K-rank cluster.
 
     Same contract as ``simulator.simulate_cluster`` (which dispatches here
@@ -155,9 +162,10 @@ def simulate_mpmd(prog: MPMDProgram, system,
     individual ranks, per-link overrides come from ``topo.link_scales``,
     `coalesce=False` runs one row per rank as the executable spec of the
     class coalescing.  `n_ranks`, when given, must agree with the
-    program's rank count.  Results are not memoized (the cache would have
-    to span several graphs); coalescing keeps symmetric pools cheap
-    instead.
+    program's rank count.  Timeline-free results are memoized on the
+    *program* (keyed by the member graphs' edit tokens plus the cluster
+    config, so in-place graph edits invalidate); `memoize=False` bypasses
+    the memo both ways — the fault-horizon benchmark's naive baseline.
 
     Raises ``ClusterProgramError`` for mismatched per-rank collective
     sequences (see module docstring) rather than hanging.
@@ -168,12 +176,25 @@ def simulate_mpmd(prog: MPMDProgram, system,
         raise ValueError(f"n_ranks={n_ranks} disagrees with the MPMD "
                          f"program's {K} ranks")
     cgs = [compile_graph(g) for g in prog.graphs]
-    bases = [cg.durations(system, topo, algo, compute_derate) for cg in cgs]
 
     default_prof = RankProfile()
     profs = _parse_rank_profiles(rank_profiles, K)
     rdur = _parse_rank_durations(rank_durations, K)
     tls = getattr(topo, "link_scales", None) or {}
+
+    ckey = None
+    if not keep_timeline and memoize:
+        ckey = (tuple(g._token() for g in prog.graphs),
+                tuple(prog.graph_of),
+                cgs[0].config_key(system, topo, algo, compute_derate),
+                overlap, coalesce, tuple(sorted(profs.items())),
+                tuple(sorted((r, tuple(sorted(od.items())))
+                             for r, od in rdur.items())))
+        hit = prog._result_cache.get(ckey)
+        if hit is not None:
+            return _copy_cluster_result(hit)
+
+    bases = [cg.durations(system, topo, algo, compute_derate) for cg in cgs]
 
     # canonical per-graph collective program: (nid, kind, group-key) in the
     # order the rank issues them (= the nominal schedule's commit order,
@@ -300,4 +321,9 @@ def simulate_mpmd(prog: MPMDProgram, system,
                              orders[gi] if any_barrier else None))
     results, waits = run_rows(specs, overlap=overlap,
                               keep_timeline=keep_timeline)
-    return _assemble_cluster_result(K, colors, reps, results, waits)
+    res = _assemble_cluster_result(K, colors, reps, results, waits)
+    if ckey is not None:
+        # fresh copies both ways: callers may post-process in place
+        result_cache_put(prog._result_cache, ckey,
+                         _copy_cluster_result(res))
+    return res

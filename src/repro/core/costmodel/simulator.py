@@ -67,7 +67,8 @@ import numpy as np
 
 from repro.core import chakra
 from repro.core.costmodel.collectives import collective_time
-from repro.core.costmodel.compiled import CompiledGraph, compile_graph
+from repro.core.costmodel.compiled import (CompiledGraph, compile_graph,
+                                           result_cache_put)
 from repro.core.costmodel.topology import (RankProfile, Topology,
                                            build_topology)
 
@@ -173,7 +174,7 @@ def simulate(g: chakra.Graph, system, topo: Optional[Topology] = None,
         dur = _override(dur, durations)
     res = cg.run(dur, overlap=overlap, keep_timeline=keep_timeline)
     if rkey is not None:
-        cg._result_cache[rkey] = dataclasses.replace(res)
+        result_cache_put(cg._result_cache, rkey, dataclasses.replace(res))
     return res
 
 
@@ -215,7 +216,7 @@ def simulate_analytic(g: chakra.Graph, system,
                     exposed_comm=max(0.0, total - comp),
                     peak_bytes=cg.peak_memory_proxy(), n_nodes=cg.n,
                     timeline=None)
-    cg._result_cache[rkey] = dataclasses.replace(res)
+    result_cache_put(cg._result_cache, rkey, dataclasses.replace(res))
     return res
 
 
@@ -634,7 +635,8 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
                      algo: str = "auto", overlap: bool = True,
                      compute_derate: float = 0.6,
                      keep_timeline: bool = False,
-                     coalesce: bool = True) -> ClusterSimResult:
+                     coalesce: bool = True,
+                     memoize: bool = True) -> ClusterSimResult:
     """Simulate one SPMD step on a (possibly heterogeneous) K-rank cluster.
 
     `rank_profiles` is a {rank: RankProfile} dict or a length-K sequence
@@ -651,6 +653,11 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
     produce identical results (property-tested) — the naive path exists as
     the executable spec for the coalescing.
 
+    `memoize=False` bypasses the per-(config, profile-set) result memo in
+    both directions — every call pays the full engine.  The fault-horizon
+    benchmark uses it as the "naive per-segment rebuild" baseline; results
+    are bit-identical either way.
+
     `g` may also be a per-rank workload — an ``MPMDProgram``, a dense list
     of Graphs, or a ``{rank: Graph}`` dict — in which case the call routes
     to the true-MPMD engine (``costmodel.mpmd.simulate_mpmd``): group attrs
@@ -666,7 +673,7 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
             prog, system, topo=topo, n_ranks=n_ranks,
             rank_profiles=rank_profiles, rank_durations=rank_durations,
             algo=algo, overlap=overlap, compute_derate=compute_derate,
-            keep_timeline=keep_timeline, coalesce=coalesce)
+            keep_timeline=keep_timeline, coalesce=coalesce, memoize=memoize)
     topo = topo or build_topology(system)
     K = int(n_ranks if n_ranks is not None else topo.n_ranks)
     if K < 1:
@@ -683,7 +690,7 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
     # simulate()'s result cache: hetero DSE sweeps revisit identical
     # cluster configs, and a timeline-free run is pure in these inputs
     ckey = None
-    if not keep_timeline:
+    if not keep_timeline and memoize:
         ckey = ("cluster", cg.config_key(system, topo, algo, compute_derate),
                 overlap, K, coalesce, tuple(sorted(profs.items())),
                 tuple(sorted((r, tuple(sorted(od.items())))
@@ -766,7 +773,7 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
     res = _assemble_cluster_result(K, colors, reps, results, waits)
     if ckey is not None:
         # fresh copies both ways: callers may post-process in place
-        cg._result_cache[ckey] = _copy_cluster_result(res)
+        result_cache_put(cg._result_cache, ckey, _copy_cluster_result(res))
     return res
 
 

@@ -52,6 +52,17 @@ class RankProfile:
         base = self.hbm_bw if self.hbm_bw is not None else system.hbm_bw
         return base * self.compute_scale
 
+    def scaled(self, compute_scale: float = 1.0,
+               link_scale: float = 1.0) -> "RankProfile":
+        """Compose multiplicative derates onto this profile (absolute
+        overrides are preserved).  Fault windows stack: two concurrent 2x
+        slowdowns yield ``compute_scale=0.25``."""
+        if compute_scale == 1.0 and link_scale == 1.0:
+            return self
+        return dataclasses.replace(
+            self, compute_scale=self.compute_scale * compute_scale,
+            link_scale=self.link_scale * link_scale)
+
 
 @dataclasses.dataclass
 class Topology:

@@ -111,6 +111,11 @@ _TOPO_KNOBS = ("topology", "link_bw", "dcn_bw", "chips")
 _HETERO_KNOBS = ("degraded_fraction", "degraded_link_scale",
                  "slow_chip_ratio", "slow_chip_scale", "pod_link_scale",
                  "cluster_ranks")
+# reliability knobs (repro.faults): any of these present (non-None) wraps
+# the trial's nominal result in a FaultSimResult carrying expected_goodput /
+# p99_step_time_under_faults / makespan_inflation from a small seeded
+# Monte-Carlo — composable with the hetero and pipeline knobs above
+_FAULT_KNOBS = ("checkpoint_interval", "fault_rate", "spare_ranks")
 
 
 def rank_profiles_for(n_ranks: int, config: Dict) -> Optional[Dict]:
@@ -250,20 +255,33 @@ def _simulate_cfg(g2: chakra.Graph, system, config: Dict,
         prog = g2._cached(key, lambda: split_pipeline_stages(
             g2, S, assignment=assign, replicas=replicas))
         n_ranks = prog.n_ranks
-        return simulate_cluster(prog, sys2, topo, n_ranks=n_ranks,
-                                rank_profiles=rank_profiles_for(n_ranks,
-                                                                config),
-                                algo=sys2.collective_algo,
-                                compute_derate=compute_derate)
-    if _is_hetero(config):
+        workload = prog
+        res = simulate_cluster(prog, sys2, topo, n_ranks=n_ranks,
+                               rank_profiles=rank_profiles_for(n_ranks,
+                                                               config),
+                               algo=sys2.collective_algo,
+                               compute_derate=compute_derate)
+    elif _is_hetero(config):
         n_ranks = int(config.get("cluster_ranks") or topo.n_ranks)
-        return simulate_cluster(g2, sys2, topo, n_ranks=n_ranks,
-                                rank_profiles=rank_profiles_for(n_ranks,
-                                                                config),
-                                algo=sys2.collective_algo,
-                                compute_derate=compute_derate)
-    return simulate(g2, sys2, topo, algo=sys2.collective_algo,
-                    compute_derate=compute_derate)
+        workload = g2
+        res = simulate_cluster(g2, sys2, topo, n_ranks=n_ranks,
+                               rank_profiles=rank_profiles_for(n_ranks,
+                                                               config),
+                               algo=sys2.collective_algo,
+                               compute_derate=compute_derate)
+    else:
+        n_ranks = int(config.get("cluster_ranks") or topo.n_ranks)
+        workload = g2
+        res = simulate(g2, sys2, topo, algo=sys2.collective_algo,
+                       compute_derate=compute_derate)
+    if any(config.get(k) is not None for k in _FAULT_KNOBS):
+        from repro.faults.montecarlo import fault_metrics
+        res = fault_metrics(workload, sys2, topo, config, res,
+                            n_ranks=n_ranks,
+                            rank_profiles=rank_profiles_for(n_ranks, config),
+                            algo=sys2.collective_algo,
+                            compute_derate=compute_derate)
+    return res
 
 
 def evaluate(g: chakra.Graph, system, config: Dict,
@@ -304,6 +322,8 @@ def explore(graph_for: Callable[[Dict], chakra.Graph], system,
         raise ValueError(
             f"unknown search strategy {strategy!r}: available strategies "
             f"are {available_strategies()}")
+    from repro.search.objectives import sense
+    s = sense(objective)             # -1 for goodput-style maximized metrics
     if strategy != "grid":
         from repro.search.run import SearchRun
         run = SearchRun(graph_for, system, knobs, strategy=strategy,
@@ -312,7 +332,7 @@ def explore(graph_for: Callable[[Dict], chakra.Graph], system,
         sr = run.run()
         trials = [Trial(t.config, t.result, t.objectives[objective])
                   for t in sr.full_trials]
-        trials.sort(key=lambda t: t.objective)
+        trials.sort(key=lambda t: s * t.objective)
         return trials
 
     global _gil_pool_warned
@@ -344,7 +364,7 @@ def explore(graph_for: Callable[[Dict], chakra.Graph], system,
             trials = list(ex.map(run_trial, cfgs))
     else:
         trials = [run_trial(cfg) for cfg in cfgs]
-    trials.sort(key=lambda t: t.objective)
+    trials.sort(key=lambda t: s * t.objective)
     return trials
 
 
@@ -356,6 +376,8 @@ def greedy_descent(graph_for, system, knobs: List[Knob],
 
     Captures, software-pass applications AND full-config evaluations are
     memoized, so revisiting a config while sweeping other knobs is free."""
+    from repro.search.objectives import sense
+    s = sense(objective)
     current = {k.name: k.values[0] for k in knobs}
     memo = GraphMemo(graph_for,
                      [k.name for k in knobs if k.layer == "workload"])
@@ -382,7 +404,7 @@ def greedy_descent(graph_for, system, knobs: List[Knob],
                 cand = dict(current)
                 cand[k.name] = v
                 t = eval_cfg(cand)
-                if t.objective < best.objective:
+                if s * t.objective < s * best.objective:
                     best, current, improved = t, cand, True
         if not improved:
             break

@@ -1,0 +1,23 @@
+"""Fault-scenario simulation over the cluster engines.
+
+Time-varying failures (rank slowdowns, NIC degradation, fail-stop
+preemptions with checkpoint/restore, transient stalls) applied as
+piecewise-constant profiles to a multi-step horizon, plus a seeded
+Monte-Carlo layer that turns them into DSE objectives.  See
+``faults.scenario`` / ``faults.horizon`` / ``faults.montecarlo``.
+"""
+from repro.faults.horizon import HorizonResult, simulate_horizon
+from repro.faults.montecarlo import (FAULT_KNOBS, FaultSimResult,
+                                     MonteCarloResult, analytic_fault_metrics,
+                                     analytic_goodput, fault_metrics,
+                                     has_fault_knobs, monte_carlo)
+from repro.faults.scenario import (CheckpointPolicy, FaultEvent, FaultRates,
+                                   FaultScenario, young_daly_interval)
+
+__all__ = [
+    "CheckpointPolicy", "FaultEvent", "FaultRates", "FaultScenario",
+    "FaultSimResult", "FAULT_KNOBS", "HorizonResult", "MonteCarloResult",
+    "analytic_fault_metrics", "analytic_goodput", "fault_metrics",
+    "has_fault_knobs", "monte_carlo", "simulate_horizon",
+    "young_daly_interval",
+]

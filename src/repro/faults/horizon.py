@@ -1,0 +1,344 @@
+"""Multi-step horizon simulation under a fault scenario.
+
+The cluster engines (``simulate_cluster`` / ``simulate_mpmd``) price one
+*steady-state* step.  This module stretches them over a horizon of many
+steps during which the cluster changes out from under the job: a
+``FaultScenario``'s events are applied as piecewise-constant rank/link
+profiles, and the horizon is simulated segment by segment — one engine
+evaluation per *distinct* profile signature, with repeated signatures
+served from the engines' result memos (PR-5 ``run_rows`` + pool
+coalescing underneath).  A 10k-step horizon with three slowdown windows
+costs a handful of engine runs, not 10k.
+
+Semantics (deliberately simple, documented over clever):
+
+  * Steps are atomic; a step runs at the profile in force when it starts,
+    so an event takes effect at the next step boundary after its time.
+  * ``fail_stop`` rolls the job back to its last checkpoint (losing the
+    steps since — the ``CheckpointPolicy`` cost model), then:
+      - a spare rank, if provisioned, absorbs the failure: pay
+        ``restore_cost`` and continue at K ranks (the repaired node
+        rejoins the spare pool after its downtime);
+      - otherwise an SPMD (single-graph) job *elastically rescales*: pay
+        ``restore_cost`` and continue on the K-1 survivors (the engine
+        reprices the step at the smaller cluster), paying another
+        ``restore_cost`` to scale back up when the rank returns;
+      - an MPMD program cannot drop a rank (its graph is part of the
+        program), so the whole job stalls until the rank returns, then
+        pays ``restore_cost``.
+  * Checkpoints are written every ``policy.interval`` useful steps at
+    ``policy.write_cost`` wall seconds; step 0 is checkpointed.
+  * ``stall`` events add wall time with no progress.
+
+Reported: **goodput** (useful-work seconds per wall second, 1.0 = ideal
+fault-free cluster with free checkpoints), makespan inflation vs the
+fault-free run of the same step count under the same checkpoint policy,
+and the p50/p99 of executed step times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import chakra
+from repro.core.costmodel.simulator import (_parse_rank_profiles,
+                                            simulate_cluster)
+from repro.core.costmodel.topology import RankProfile, Topology, build_topology
+from repro.faults.scenario import CheckpointPolicy, FaultScenario
+
+_INF = float("inf")
+
+
+@dataclasses.dataclass
+class HorizonResult:
+    """Outcome of one horizon simulation (see module docstring)."""
+    useful_steps: int
+    wall_time: float
+    goodput: float
+    makespan_inflation: float
+    nominal_step_time: float
+    p50_step_time: float
+    p99_step_time: float
+    lost_steps: int
+    lost_work_s: float
+    checkpoint_s: float
+    restore_s: float
+    stall_s: float
+    downtime_s: float
+    n_failures: int
+    n_checkpoints: int
+    n_segments: int
+    n_signatures: int
+    # (step_time, count) pairs of executed steps — Monte-Carlo pools these
+    # across trials for aggregate percentiles
+    step_records: List[Tuple[float, int]] = dataclasses.field(
+        default_factory=list)
+    # (t_start, t_end, step_time, steps) per contiguous same-rate segment
+    segments: Optional[List[Tuple[float, float, float, int]]] = None
+
+    def as_dict(self) -> dict:
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+             if f.name not in ("step_records", "segments")}
+        return d
+
+
+def _weighted_pct(records: Dict[float, int], q: float) -> float:
+    total = sum(records.values())
+    if total == 0:
+        return 0.0
+    target = q * total
+    cum = 0
+    for s in sorted(records):
+        cum += records[s]
+        if cum >= target:
+            return s
+    return max(records)
+
+
+def simulate_horizon(workload, system, scenario: FaultScenario,
+                     policy: Optional[CheckpointPolicy] = None, *,
+                     topo: Optional[Topology] = None,
+                     n_ranks: Optional[int] = None,
+                     n_steps: Optional[int] = None,
+                     wall_limit: Optional[float] = None,
+                     spare_ranks: int = 0,
+                     rank_profiles=None,
+                     algo: str = "auto", compute_derate: float = 0.6,
+                     memoize: bool = True,
+                     keep_segments: bool = False) -> HorizonResult:
+    """Run `workload` for a horizon under `scenario` + `policy`.
+
+    Stop condition: `n_steps` useful steps completed, or `wall_limit`
+    seconds of wall clock consumed (whichever first; default
+    ``wall_limit=scenario.horizon``).  `workload` is anything
+    ``simulate_cluster`` accepts — a Graph (SPMD, supports elastic
+    rescale) or an MPMD program/list/dict (fail-stops stall instead).
+    `rank_profiles` are *static* per-rank profiles (a hetero cluster's
+    baseline); fault windows compose multiplicatively on top of them.
+    `memoize=False` forces a full engine rebuild per segment (the naive
+    baseline the fault benchmark measures against)."""
+    policy = policy or CheckpointPolicy()
+    topo = topo or build_topology(system)
+    is_graph = isinstance(workload, chakra.Graph)
+    if is_graph:
+        K = int(n_ranks if n_ranks is not None else topo.n_ranks)
+    else:
+        from repro.core.costmodel.mpmd import MPMDProgram
+        if not isinstance(workload, MPMDProgram):
+            workload = MPMDProgram(workload)
+        K = workload.n_ranks
+        if n_ranks is not None and int(n_ranks) != K:
+            raise ValueError(f"n_ranks={n_ranks} disagrees with the MPMD "
+                             f"program's {K} ranks")
+    if scenario.n_ranks is not None and scenario.n_ranks != K:
+        raise ValueError(f"scenario was sampled for {scenario.n_ranks} "
+                         f"ranks, cluster has {K}")
+    if n_steps is None and wall_limit is None:
+        wall_limit = scenario.horizon
+    if spare_ranks < 0:
+        raise ValueError(f"spare_ranks must be >= 0, got {spare_ranks}")
+    base_profs = _parse_rank_profiles(rank_profiles, K)
+
+    sig_cache: Dict[tuple, float] = {}
+    sigs_seen: set = set()          # distinct signatures, memoize or not
+
+    def step_time(failed: frozenset, active: List[list]) -> float:
+        # signature: surviving-cluster size + surviving effects remapped to
+        # the survivors' dense rank ids (identical signatures — however the
+        # timeline reached them — share one engine evaluation)
+        if is_graph and failed:
+            survivors = [r for r in range(K) if r not in failed]
+            remap = {r: i for i, r in enumerate(survivors)}
+            Kc = len(survivors)
+        else:
+            remap = None
+            Kc = K
+        eff = []
+        for _, kind, rank, mag in active:
+            if rank is None:
+                continue
+            if remap is not None:
+                if rank in failed:
+                    continue
+                rank = remap[rank]
+            if 0 <= rank < Kc:
+                eff.append((rank, kind, mag))
+        sig = (Kc, tuple(sorted(eff)))
+        sigs_seen.add(sig)
+        if memoize:
+            hit = sig_cache.get(sig)
+            if hit is not None:
+                return hit
+        prof: Dict[int, RankProfile] = {}
+        if base_profs:
+            if remap is not None:
+                prof = {remap[r]: p for r, p in base_profs.items()
+                        if r in remap}
+            else:
+                prof = dict(base_profs)
+        for rank, kind, mag in sig[1]:
+            p = prof.get(rank, RankProfile())
+            if kind == "slowdown":
+                p = p.scaled(compute_scale=1.0 / mag)
+            else:
+                p = p.scaled(link_scale=mag)
+            prof[rank] = p
+        res = simulate_cluster(
+            workload, system, topo, n_ranks=Kc if is_graph else None,
+            rank_profiles=prof or None, algo=algo,
+            compute_derate=compute_derate, memoize=memoize)
+        s = float(res.total_time)
+        if not s > 0.0:
+            raise ValueError(f"non-positive step time {s} for signature {sig}")
+        if memoize:
+            sig_cache[sig] = s
+        return s
+
+    s0 = step_time(frozenset(), [])
+
+    events = scenario.events
+    ei = 0
+    active: List[list] = []         # [end_time, kind, rank, magnitude]
+    returns: List[tuple] = []       # heap of (time, tag, rank)
+    failed: set = set()
+    spares = int(spare_ranks)
+    t = 0.0
+    done = 0                        # useful (checkpoint-survivable) steps
+    since = 0                       # steps since last checkpoint
+    sec_since = 0.0
+    records: Dict[float, int] = {}
+    segments: List[list] = []       # [t0, t1, s, steps]
+    lost_steps = 0
+    lost_s = ckpt_s = restore_s = stall_s = downtime_s = 0.0
+    n_fail = n_ckpt = 0
+
+    guard = 0
+    while True:
+        guard += 1
+        if guard > 10_000_000:
+            raise RuntimeError("simulate_horizon failed to make progress "
+                               f"(t={t}, done={done})")
+        if n_steps is not None and done >= n_steps:
+            break
+        if wall_limit is not None and t >= wall_limit:
+            break
+
+        # apply everything due by now (rank returns first: a rank that came
+        # back can absorb a failure arriving at the same instant)
+        while returns and returns[0][0] <= t:
+            _, tag, rank = heapq.heappop(returns)
+            if tag == "spare":
+                spares += 1
+            else:
+                failed.discard(rank)
+                t += policy.restore_cost      # reintegration restore
+                restore_s += policy.restore_cost
+        while ei < len(events) and events[ei].time <= t:
+            e = events[ei]
+            ei += 1
+            if e.kind == "stall":
+                t += e.duration
+                stall_s += e.duration
+            elif e.kind in ("slowdown", "link_degrade"):
+                active.append([e.time + e.duration, e.kind, e.rank,
+                               e.magnitude])
+            else:                             # fail_stop
+                n_fail += 1
+                lost_steps += since
+                lost_s += sec_since
+                done -= since
+                since = 0
+                sec_since = 0.0
+                if spares > 0:
+                    spares -= 1
+                    t += policy.restore_cost
+                    restore_s += policy.restore_cost
+                    if e.duration > 0:        # repaired node rejoins pool
+                        heapq.heappush(returns,
+                                       (e.time + e.duration, "spare", e.rank))
+                else:
+                    failed.add(e.rank)
+                    if e.duration > 0:
+                        heapq.heappush(returns,
+                                       (e.time + e.duration, "rank", e.rank))
+                    if is_graph:              # elastic rescale to survivors
+                        if len(failed) >= K:
+                            raise ValueError("all ranks failed with no "
+                                             "spares left")
+                        t += policy.restore_cost
+                        restore_s += policy.restore_cost
+        if active and any(a[0] <= t for a in active):
+            active = [a for a in active if a[0] > t]
+
+        # next profile boundary
+        nb = events[ei].time if ei < len(events) else _INF
+        for a in active:
+            if a[0] < nb:
+                nb = a[0]
+        if returns and returns[0][0] < nb:
+            nb = returns[0][0]
+        if wall_limit is not None and wall_limit < nb:
+            nb = wall_limit
+
+        if failed and not is_graph:
+            # MPMD: the program needs every rank; stall until one returns
+            if nb is _INF or nb == _INF:
+                raise RuntimeError(
+                    "MPMD program permanently stalled: a rank failed with "
+                    "no spares, no scheduled return, and no wall_limit")
+            downtime_s += nb - t
+            t = nb
+            continue
+
+        s = step_time(frozenset(failed), active)
+        room = max(1, int((nb - t) / s)) if nb < _INF else _INF
+        chunk = policy.interval - since
+        if room < chunk:
+            chunk = room
+        if n_steps is not None and n_steps - done < chunk:
+            chunk = n_steps - done
+        if wall_limit is not None:
+            fit = int((wall_limit - t) / s)
+            if fit <= 0:                      # budget dies mid-step
+                t = wall_limit
+                break
+            if fit < chunk:
+                chunk = fit
+        t0 = t
+        t += chunk * s
+        done += chunk
+        since += chunk
+        sec_since += chunk * s
+        records[s] = records.get(s, 0) + chunk
+        if segments and segments[-1][2] == s:
+            segments[-1][1] = t
+            segments[-1][3] += chunk
+        else:
+            segments.append([t0, t, s, chunk])
+        if since >= policy.interval:
+            t += policy.write_cost
+            ckpt_s += policy.write_cost
+            n_ckpt += 1
+            since = 0
+            sec_since = 0.0
+
+    wall = t if wall_limit is None else min(t, wall_limit)
+    goodput = (done * s0 / wall) if wall > 0 else (1.0 if done else 0.0)
+    ff = done * s0 + (done // policy.interval) * policy.write_cost
+    if ff > 0:
+        inflation = wall / ff
+    else:
+        inflation = 1.0 if wall == 0 else _INF
+    return HorizonResult(
+        useful_steps=done, wall_time=wall, goodput=goodput,
+        makespan_inflation=inflation, nominal_step_time=s0,
+        p50_step_time=_weighted_pct(records, 0.50),
+        p99_step_time=_weighted_pct(records, 0.99),
+        lost_steps=lost_steps, lost_work_s=lost_s,
+        checkpoint_s=ckpt_s, restore_s=restore_s, stall_s=stall_s,
+        downtime_s=downtime_s, n_failures=n_fail, n_checkpoints=n_ckpt,
+        n_segments=len(segments), n_signatures=len(sigs_seen),
+        step_records=sorted(records.items()),
+        segments=[tuple(sg) for sg in segments] if keep_segments else None)

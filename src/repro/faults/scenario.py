@@ -1,0 +1,201 @@
+"""Fault scenarios: seeded timelines of failure events over a cluster.
+
+A ``FaultScenario`` is a wall-clock timeline of ``FaultEvent``s applied to
+a K-rank cluster.  The horizon simulator (``faults.horizon``) interprets
+events as piecewise-constant rank/link profiles between event boundaries:
+
+  * ``slowdown``      -- one rank computes ``magnitude``x slower for
+                         ``duration`` seconds (thermal throttling, noisy
+                         neighbor, degraded host)
+  * ``link_degrade``  -- one rank's NIC/ICI bandwidth is multiplied by
+                         ``magnitude`` (< 1) for ``duration`` seconds
+                         (flapping NIC, degraded pod uplink)
+  * ``fail_stop``     -- one rank is preempted: work since the last
+                         checkpoint is lost, the cluster pays the
+                         checkpoint-restore delay, and the rank is gone for
+                         ``duration`` seconds (covered by a spare, or the
+                         job rescales elastically to K-1 ranks)
+  * ``stall``         -- a transient cluster-wide stall of ``duration``
+                         seconds with no progress (collective timeout +
+                         retry, network partition blip)
+
+Timelines are either hand-written (``FaultScenario([...], horizon=...)``)
+or sampled from exponential per-kind rates (``FaultScenario.sample``).
+Sampling couples scenarios across rates: arrival times are a unit-rate
+Poisson process scaled by 1/rate from a dedicated uniform substream, so
+raising a rate compresses the *same* arrival sequence instead of drawing a
+fresh one.  That coupling is what makes expected goodput provably monotone
+in the rate knob (property-tested) rather than just monotone on average.
+
+``CheckpointPolicy`` + ``young_daly_interval`` supply the checkpoint cost
+model the horizon simulator charges on fail-stop events.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+EVENT_KINDS = ("slowdown", "link_degrade", "fail_stop", "stall")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One fault at wall-clock ``time`` (seconds since step 0).
+
+    ``rank`` is the afflicted rank (None for cluster-wide ``stall``);
+    ``duration`` is how long the effect lasts (for ``fail_stop``: the
+    downtime before the rank rejoins — 0 means it never returns);
+    ``magnitude`` is the kind-specific factor: slowdown factor (> 1 =
+    slower) for ``slowdown``, bandwidth multiplier (< 1 = degraded) for
+    ``link_degrade``, unused otherwise."""
+    time: float
+    kind: str
+    rank: Optional[int] = None
+    duration: float = 0.0
+    magnitude: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}: "
+                             f"expected one of {EVENT_KINDS}")
+        if self.time < 0.0:
+            raise ValueError(f"event time must be >= 0, got {self.time}")
+        if self.duration < 0.0:
+            raise ValueError(f"duration must be >= 0, got {self.duration}")
+        if self.kind in ("slowdown", "link_degrade", "fail_stop") \
+                and self.rank is None:
+            raise ValueError(f"{self.kind} event needs a target rank")
+        if self.kind == "slowdown" and self.magnitude < 1.0:
+            raise ValueError("slowdown magnitude is a slowdown factor "
+                             f">= 1, got {self.magnitude}")
+        if self.kind == "link_degrade" and not 0.0 < self.magnitude <= 1.0:
+            raise ValueError("link_degrade magnitude is a bandwidth "
+                             f"multiplier in (0, 1], got {self.magnitude}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """Checkpoint cost model: write every ``interval`` useful steps at
+    ``write_cost`` seconds per write; a fail-stop rolls back to the last
+    checkpoint (losing the steps since) and pays ``restore_cost`` seconds
+    to reload + reshard.  Step 0 counts as checkpointed."""
+    interval: int = 32
+    write_cost: float = 0.0
+    restore_cost: float = 0.0
+
+    def __post_init__(self):
+        if self.interval < 1:
+            raise ValueError(f"interval must be >= 1, got {self.interval}")
+        if self.write_cost < 0.0 or self.restore_cost < 0.0:
+            raise ValueError("checkpoint costs must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultRates:
+    """Exponential-MTBF fault process: cluster-wide arrival rates (events
+    per second; MTBF = 1/rate) plus the fixed per-event parameters.  A rate
+    of 0 disables that kind."""
+    fail_rate: float = 0.0
+    fail_downtime: float = 0.0       # rank downtime after a fail-stop
+    slowdown_rate: float = 0.0
+    slowdown_factor: float = 2.0
+    slowdown_duration: float = 1.0
+    degrade_rate: float = 0.0
+    degrade_scale: float = 0.5
+    degrade_duration: float = 1.0
+    stall_rate: float = 0.0
+    stall_duration: float = 0.1
+
+
+class FaultScenario:
+    """A sorted, validated timeline of ``FaultEvent``s over ``horizon``
+    seconds on an ``n_ranks`` cluster (n_ranks=None: rank bounds are the
+    simulator's problem)."""
+
+    def __init__(self, events: Sequence[FaultEvent], horizon: float,
+                 n_ranks: Optional[int] = None):
+        if horizon <= 0.0:
+            raise ValueError(f"horizon must be > 0, got {horizon}")
+        evs = sorted(events, key=lambda e: (e.time, e.kind, e.rank or 0))
+        if n_ranks is not None:
+            for e in evs:
+                if e.rank is not None and not 0 <= e.rank < n_ranks:
+                    raise ValueError(
+                        f"event rank {e.rank} outside cluster 0..{n_ranks - 1}")
+        self.events: List[FaultEvent] = evs
+        self.horizon = float(horizon)
+        self.n_ranks = n_ranks
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __repr__(self) -> str:
+        kinds = {}
+        for e in self.events:
+            kinds[e.kind] = kinds.get(e.kind, 0) + 1
+        return (f"FaultScenario(horizon={self.horizon:g}, "
+                f"events={dict(sorted(kinds.items()))})")
+
+    @staticmethod
+    def sample(rates: FaultRates, horizon: float, n_ranks: int,
+               seed=0) -> "FaultScenario":
+        """Draw a seeded scenario from exponential per-kind arrival rates.
+
+        Deterministic in (rates, horizon, n_ranks, seed).  Arrival times
+        come from a unit-rate Poisson substream divided by the kind's rate
+        (inverse-CDF coupling — see module docstring); target ranks come
+        from a separate substream consumed in arrival order, so the i-th
+        event of a kind hits the same rank at every rate."""
+        events: List[FaultEvent] = []
+        specs = (
+            ("fail_stop", rates.fail_rate,
+             dict(duration=rates.fail_downtime)),
+            ("slowdown", rates.slowdown_rate,
+             dict(duration=rates.slowdown_duration,
+                  magnitude=rates.slowdown_factor)),
+            ("link_degrade", rates.degrade_rate,
+             dict(duration=rates.degrade_duration,
+                  magnitude=rates.degrade_scale)),
+            ("stall", rates.stall_rate,
+             dict(duration=rates.stall_duration)),
+        )
+        for kind, rate, kw in specs:
+            if rate <= 0.0:
+                continue
+            arr = _seed_rng(seed, kind, "arrivals")
+            rnk = _seed_rng(seed, kind, "ranks")
+            t = 0.0
+            while True:
+                # unit-rate exponential gap scaled by 1/rate: same uniforms
+                # across rates => monotone arrival coupling
+                t += -math.log(1.0 - arr.random()) / rate
+                if t >= horizon:
+                    break
+                rank = None
+                if kind != "stall":
+                    rank = int(rnk.integers(n_ranks))
+                events.append(FaultEvent(time=t, kind=kind, rank=rank, **kw))
+        return FaultScenario(events, horizon=horizon, n_ranks=n_ranks)
+
+
+def _seed_rng(seed, *salt) -> np.random.Generator:
+    """Independent substream for (seed, salt...): ints pass through,
+    strings hash via crc32 (mirrors search.strategies)."""
+    parts = list(seed) if isinstance(seed, (tuple, list)) else [seed]
+    key = [int(p) if not isinstance(p, str)
+           else zlib.crc32(p.encode()) for p in [*parts, *salt]]
+    return np.random.default_rng(key)
+
+
+def young_daly_interval(write_cost: float, mtbf: float) -> float:
+    """Young/Daly first-order optimal checkpoint period in *seconds*:
+    tau_opt = sqrt(2 * C * MTBF).  Divide by the step time for the optimal
+    ``CheckpointPolicy.interval`` in steps."""
+    if write_cost <= 0.0 or mtbf <= 0.0:
+        raise ValueError("young_daly_interval needs write_cost > 0 and "
+                         f"mtbf > 0, got C={write_cost}, MTBF={mtbf}")
+    return math.sqrt(2.0 * write_cost * mtbf)

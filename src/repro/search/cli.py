@@ -134,10 +134,13 @@ def _cmd_front(args) -> int:
         print(f"error: {args.checkpoint} is empty", file=sys.stderr)
         return 2
     names = head["objectives"]
-    full = [t for t in trials if t.get("fidelity", 1.0) >= 1.0]
+    failed = [t for t in trials if t.get("error")]
+    full = [t for t in trials
+            if t.get("fidelity", 1.0) >= 1.0 and not t.get("error")]
     print(f"{args.checkpoint}: strategy={head['strategy']} "
           f"seed={head['seed']} trials={len(trials)} full={len(full)} "
-          f"objectives={names}")
+          + (f"failed={len(failed)} " if failed else "")
+          + f"objectives={names}")
     if not full:
         return 0
     best = min(full, key=lambda t: t["objective"])

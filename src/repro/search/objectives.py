@@ -7,6 +7,13 @@ returned (``total_time``, ``exposed_comm``, ``comm_time``, ``peak_bytes``,
 per-rank liveness bound priced straight off the (transformed) graph, so the
 memory axis costs nothing even at proxy fidelities where no event loop ran.
 
+Objective *sense*: everything is minimized except the names in
+``MAXIMIZE_OBJECTIVES`` (goodput-style metrics from the fault subsystem,
+``repro.faults``).  ``scalarize`` negates their normalized contribution and
+``dominates`` flips their comparisons, so "high goodput, low p99" Pareto
+fronts come out right without callers hand-negating values — checkpoint
+records and reports keep the natural (positive) readings.
+
 Strategies need one scalar to rank candidates, so multi-objective values are
 scalarized: a weighted sum of objectives normalized by a reference point
 (the first completed trial's values, recorded in the checkpoint header's
@@ -22,6 +29,19 @@ DEFAULT_OBJECTIVES = ("total_time",)
 
 #: objective names that do not live on the sim result
 _GRAPH_METRICS = ("peak_memory_proxy",)
+
+#: objectives that are maximized (larger is better); everything else is
+#: minimized.  These live on ``FaultSimResult`` (repro.faults) — a trial
+#: config needs a fault knob (checkpoint_interval / fault_rate /
+#: spare_ranks) for the evaluator to produce them.
+MAXIMIZE_OBJECTIVES = frozenset({"expected_goodput", "goodput",
+                                 "worst_goodput"})
+
+
+def sense(name: str) -> float:
+    """-1.0 for maximized objectives, +1.0 for minimized ones: multiplying
+    a value by its sense yields a quantity that is always minimized."""
+    return -1.0 if name in MAXIMIZE_OBJECTIVES else 1.0
 
 
 def trial_objectives(result, names: Sequence[str], graph=None) -> Dict:
@@ -43,23 +63,34 @@ def trial_objectives(result, names: Sequence[str], graph=None) -> Dict:
             try:
                 out[name] = float(getattr(result, name))
             except AttributeError:
+                hint = ""
+                if name in ("expected_goodput",
+                            "p99_step_time_under_faults",
+                            "makespan_inflation", "goodput_std"):
+                    hint = (" (fault objectives need a fault knob — "
+                            "checkpoint_interval / fault_rate / "
+                            "spare_ranks — in the trial config so the "
+                            "evaluator runs the fault Monte-Carlo)")
                 raise ValueError(
                     f"unknown objective {name!r}: not a field of "
                     f"{type(result).__name__} and not one of "
-                    f"{_GRAPH_METRICS}") from None
+                    f"{_GRAPH_METRICS}{hint}") from None
     return out
 
 
 def scalarize(values: Dict, names: Sequence[str],
               weights: Sequence[float], ref: Dict) -> float:
-    """Weighted sum of `values[name] / ref[name]` — minimized.
+    """Weighted sum of ``sense(name) * values[name] / ref[name]`` —
+    minimized.
 
     Normalizing by the reference point puts seconds and bytes on one scale;
-    a zero reference component falls back to 1.0 (the raw value)."""
+    a zero reference component falls back to 1.0 (the raw value).
+    Maximized objectives contribute negatively, so improving goodput lowers
+    the scalar exactly like lowering step time does."""
     total = 0.0
     for name, w in zip(names, weights):
         r = ref.get(name) or 1.0
-        total += w * values[name] / r
+        total += w * sense(name) * values[name] / r
     return total
 
 
@@ -69,10 +100,12 @@ def default_weights(names: Sequence[str]) -> List[float]:
 
 
 def dominates(a: Dict, b: Dict, names: Sequence[str]) -> bool:
-    """a dominates b: no worse on every objective, strictly better on one."""
+    """a dominates b: no worse on every objective, strictly better on one
+    (respecting each objective's sense)."""
     better = False
     for name in names:
-        av, bv = a[name], b[name]
+        s = sense(name)
+        av, bv = s * a[name], s * b[name]
         if av > bv:
             return False
         if av < bv:
@@ -81,8 +114,8 @@ def dominates(a: Dict, b: Dict, names: Sequence[str]) -> bool:
 
 
 def pareto_front(values: Sequence[Dict], names: Sequence[str]) -> List[int]:
-    """Indices of the non-dominated entries of `values` (all objectives
-    minimized), in input order; duplicate points all survive."""
+    """Indices of the non-dominated entries of `values` (each objective
+    taken with its sense), in input order; duplicate points all survive."""
     n = len(values)
     keep = []
     for i in range(n):

@@ -23,10 +23,22 @@ at zero simulation cost.  A partially-written last line (the kill case) is
 ignored.
 
 Fidelities (successive halving's cheap rungs):
-  1.0  full evaluation — hetero knobs route to ``simulate_cluster``
-  0.5  symmetric event loop — hetero knobs coalesced to the baseline rank
+  1.0  full evaluation — hetero knobs route to ``simulate_cluster``;
+       fault knobs run the seeded fault Monte-Carlo (``repro.faults``)
+  0.5  symmetric event loop — hetero knobs coalesced to the baseline rank;
+       fault knobs priced by the Young/Daly closed form
   0.0  analytic roofline bound — no event loop at all
 Only full-fidelity trials compete for ``best`` and the Pareto front.
+
+Failed trials
+-------------
+An exception inside ``_evaluate`` (a config whose capture or simulation
+raises) does NOT kill the sweep: the trial is recorded with an ``error``
+string and the fixed penalty objective ``FAILED_OBJECTIVE``, the strategy
+is told that penalty (deterministically — resume replays the exact same
+tell), and the loop moves on.  Failed trials are excluded from ``best``,
+``full_trials`` and the Pareto front but count against the budget, exactly
+like a crashed job would burn its cluster allocation.
 """
 from __future__ import annotations
 
@@ -46,28 +58,41 @@ from repro.search.strategies import (FIDELITY_FULL, FIDELITY_SYMMETRIC,
 
 CHECKPOINT_VERSION = 1
 
+# scalarized objective recorded for a trial whose evaluation raised: huge
+# enough that no surviving config ranks behind it, finite so surrogate
+# models (GP fit, tournament scores) stay well-conditioned
+FAILED_OBJECTIVE = 1e6
+
 
 @dataclasses.dataclass
 class SearchTrial:
     """One evaluated configuration."""
     index: int
     config: Dict
-    objectives: Dict                 # name -> measured value
+    objectives: Dict                 # name -> measured value ({} if failed)
     objective: float                 # scalarized (normalized weighted sum)
     fidelity: float = FIDELITY_FULL
     result: object = None            # SimResult/ClusterSimResult (not resumed)
+    error: Optional[str] = None      # "ExcType: message" for a failed trial
 
     @property
     def is_full(self) -> bool:
         return self.fidelity >= FIDELITY_FULL
 
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
     def as_dict(self) -> Dict:
-        return {"index": self.index,
-                "config": {k: dse.json_value(v)
-                           for k, v in self.config.items()},
-                "objectives": self.objectives,
-                "objective": self.objective,
-                "fidelity": self.fidelity}
+        d = {"index": self.index,
+             "config": {k: dse.json_value(v)
+                        for k, v in self.config.items()},
+             "objectives": self.objectives,
+             "objective": self.objective,
+             "fidelity": self.fidelity}
+        if self.error is not None:
+            d["error"] = self.error
+        return d
 
 
 @dataclasses.dataclass
@@ -82,7 +107,11 @@ class SearchResult:
 
     @property
     def full_trials(self) -> List[SearchTrial]:
-        return [t for t in self.trials if t.is_full]
+        return [t for t in self.trials if t.is_full and t.ok]
+
+    @property
+    def failed_trials(self) -> List[SearchTrial]:
+        return [t for t in self.trials if not t.ok]
 
     @property
     def best(self) -> Optional[SearchTrial]:
@@ -108,10 +137,12 @@ class SearchResult:
 
     def summary(self) -> str:
         b = self.best
+        failed = len(self.failed_trials)
         lines = [f"search[{self.strategy}]: {len(self.trials)} trials "
                  f"({self.n_resumed} resumed, {self.n_evaluated} evaluated, "
-                 f"{len(self.full_trials)} full-fidelity) "
-                 f"in {self.elapsed:.2f}s"]
+                 f"{len(self.full_trials)} full-fidelity"
+                 + (f", {failed} failed" if failed else "")
+                 + f") in {self.elapsed:.2f}s"]
         if b is not None:
             obj = ", ".join(f"{k}={v:.4g}" for k, v in b.objectives.items())
             lines.append(f"  best #{b.index}: {b.config} -> {obj}")
@@ -230,6 +261,13 @@ class SearchRun:
                 else simulate_analytic
             res = sim(g2, sys2, topo, algo=sys2.collective_algo,
                       compute_derate=self.compute_derate)
+            if any(cfg.get(k) is not None for k in dse._FAULT_KNOBS):
+                # proxy-fidelity fault metrics: Young/Daly closed form on
+                # the proxy step time — keeps halving rungs cheap while
+                # preserving the gross ordering of reliability configs
+                from repro.faults.montecarlo import analytic_fault_metrics
+                res = analytic_fault_metrics(
+                    res, cfg, int(cfg.get("cluster_ranks") or topo.n_ranks))
         vals = objmod.trial_objectives(res, self.objective_names, graph=g2)
         return res, vals
 
@@ -271,12 +309,31 @@ class SearchRun:
                     "objectives and space)")
         return records, dirty
 
+    def _check_record(self, rec, i: int) -> None:
+        """Validate one checkpoint trial record's shape up front — a clear
+        diagnostic naming the missing field and line beats a KeyError deep
+        in replay.  (Line i+2: line 1 is the header.)"""
+        if not isinstance(rec, dict):
+            raise ValueError(f"{self.checkpoint}:{i + 2}: trial record is "
+                             f"{type(rec).__name__}, expected an object")
+        for field in ("config", "objective"):
+            if field not in rec:
+                raise ValueError(f"{self.checkpoint}:{i + 2}: trial record "
+                                 f"missing field {field!r}")
+        if "objectives" not in rec and "error" not in rec:
+            raise ValueError(f"{self.checkpoint}:{i + 2}: trial record "
+                             "missing field 'objectives' (and carries no "
+                             "'error' marking it failed)")
+
     def _replay(self, records: List[Dict]) -> List[SearchTrial]:
         """Re-ask the strategy through the recorded trials (no simulation):
         determinism of ask() given the tell history makes this land in the
-        exact state an uninterrupted run would be in."""
+        exact state an uninterrupted run would be in.  Failed records
+        (``error`` set) replay their recorded penalty objective — the same
+        tell the live loop issued."""
         out = []
-        for rec in records:
+        for i, rec in enumerate(records):
+            self._check_record(rec, i)
             sug = self.strategy.ask()
             if sug is None:
                 raise ValueError(
@@ -293,14 +350,17 @@ class SearchRun:
                     f"{rec['config']}@{rec.get('fidelity')} — seed, space "
                     "or strategy code changed since the checkpoint was "
                     "written")
-            vals = rec["objectives"]
-            if self._ref is None:
+            err = rec.get("error")
+            vals = rec.get("objectives") or {}
+            if self._ref is None and err is None:
+                # the reference point is the first *successful* trial, both
+                # live and on replay — failed trials never set it
                 self._ref = dict(vals)
             self.strategy.tell(cfg, rec["objective"], vals, fid)
             out.append(SearchTrial(index=len(out), config=dict(cfg),
                                    objectives=dict(vals),
                                    objective=rec["objective"],
-                                   fidelity=fid, result=None))
+                                   fidelity=fid, result=None, error=err))
         return out
 
     # -- driver --------------------------------------------------------------
@@ -342,11 +402,17 @@ class SearchRun:
                 if sug is None:
                     break
                 cfg, fid = sug
-                res, vals = self._evaluate(cfg, fid)
-                scal = self._scalarize(vals)
+                try:
+                    res, vals = self._evaluate(cfg, fid)
+                    err = None
+                    scal = self._scalarize(vals)
+                except Exception as e:  # noqa: BLE001 — any bad config
+                    res, vals = None, {}
+                    err = f"{type(e).__name__}: {e}"
+                    scal = FAILED_OBJECTIVE
                 trial = SearchTrial(index=len(trials), config=dict(cfg),
                                     objectives=vals, objective=scal,
-                                    fidelity=fid, result=res)
+                                    fidelity=fid, result=res, error=err)
                 self.strategy.tell(cfg, scal, vals, fid)
                 trials.append(trial)
                 n_new += 1

@@ -41,6 +41,31 @@ def flatten_state(state):
     return {_path_str(path): leaf for path, leaf in leaves}
 
 
+def state_nbytes(state) -> int:
+    """Total bytes a checkpoint of `state` writes (sum of leaf nbytes)."""
+    total = 0
+    for leaf in flatten_state(state).values():
+        nb = getattr(leaf, "nbytes", None)
+        total += int(nb) if nb is not None else np.asarray(leaf).nbytes
+    return total
+
+
+def checkpoint_policy_for_state(state, interval: int = 32,
+                                write_bw: float = 1e9,
+                                restore_bw: Optional[float] = None):
+    """Price a real pytree into a faults.CheckpointPolicy.
+
+    write/restore costs are state_nbytes / bandwidth (bytes/s), so the
+    fault simulator charges what this state would actually cost to
+    persist; restore_bw defaults to write_bw.
+    """
+    from repro.faults.scenario import CheckpointPolicy
+    nb = state_nbytes(state)
+    return CheckpointPolicy(interval=interval,
+                            write_cost=nb / float(write_bw),
+                            restore_cost=nb / float(restore_bw or write_bw))
+
+
 def save_checkpoint(ckpt_dir: str, step: int, state, meta: Optional[dict] = None,
                     keep: int = 3, async_save: bool = False):
     """Atomically persist `state` under ckpt_dir/step_<step>."""

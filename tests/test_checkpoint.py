@@ -144,3 +144,18 @@ def test_straggler_monitor():
         assert not mon.record(s, 0.1)
     assert mon.record(10, 0.5)
     assert mon.straggler_steps[0][0] == 10
+
+
+def test_state_nbytes_and_fault_policy_bridge():
+    from repro.faults import CheckpointPolicy
+    from repro.train.checkpoint import (checkpoint_policy_for_state,
+                                        state_nbytes)
+    state = {"w": jnp.ones((8, 4), jnp.float32),
+             "b": jnp.ones((4,), jnp.bfloat16)}
+    assert state_nbytes(state) == 8 * 4 * 4 + 4 * 2
+    pol = checkpoint_policy_for_state(state, interval=16, write_bw=136.0,
+                                      restore_bw=68.0)
+    assert isinstance(pol, CheckpointPolicy)
+    assert pol.interval == 16
+    assert pol.write_cost == pytest.approx(1.0)     # 136 B at 136 B/s
+    assert pol.restore_cost == pytest.approx(2.0)

@@ -1,0 +1,145 @@
+"""train.fault hardening: seeded exponential backoff with injectable
+sleep/clock, retryable-exception filtering, deadlines, bounded straggler
+history, and preemption handlers that restore prior signal handlers."""
+import signal
+
+import pytest
+
+from repro.train.fault import (FaultInjector, PreemptionHandler,
+                               SimulatedFault, StragglerMonitor,
+                               run_with_retry)
+
+
+class _Clock:
+    """Fake time: sleep() advances it, so backoff tests run instantly."""
+
+    def __init__(self):
+        self.t = 0.0
+        self.sleeps = []
+
+    def sleep(self, d):
+        self.sleeps.append(d)
+        self.t += d
+
+    def now(self):
+        return self.t
+
+
+def _flaky(n_failures, exc=ValueError):
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        if calls["n"] <= n_failures:
+            raise exc(f"boom {calls['n']}")
+        return "ok"
+
+    fn.calls = calls
+    return fn
+
+
+def test_retry_plain_still_works():
+    fn = _flaky(2)
+    assert run_with_retry(fn, retries=2) == "ok"
+    assert fn.calls["n"] == 3
+    with pytest.raises(ValueError):
+        run_with_retry(_flaky(5), retries=2)
+
+
+def test_backoff_grows_and_jitter_is_seeded():
+    ck = _Clock()
+    fn = _flaky(3)
+    run_with_retry(fn, retries=5, backoff=0.1, factor=2.0, jitter=0.5,
+                   seed=7, sleep=ck.sleep, clock=ck.now)
+    assert len(ck.sleeps) == 3
+    assert ck.sleeps[0] < ck.sleeps[1] < ck.sleeps[2]   # exponential growth
+    assert ck.sleeps[0] >= 0.1                          # jitter only adds
+    ck2 = _Clock()
+    run_with_retry(_flaky(3), retries=5, backoff=0.1, factor=2.0, jitter=0.5,
+                   seed=7, sleep=ck2.sleep, clock=ck2.now)
+    assert ck.sleeps == ck2.sleeps                      # same seed, same jitter
+    ck3 = _Clock()
+    run_with_retry(_flaky(3), retries=5, backoff=0.1, factor=2.0, jitter=0.5,
+                   seed=8, sleep=ck3.sleep, clock=ck3.now)
+    assert ck.sleeps != ck3.sleeps
+
+
+def test_backoff_caps_at_max():
+    ck = _Clock()
+    run_with_retry(_flaky(4), retries=5, backoff=1.0, factor=10.0,
+                   max_backoff=5.0, sleep=ck.sleep, clock=ck.now)
+    assert max(ck.sleeps) == 5.0
+
+
+def test_retryable_filter_class_tuple_predicate():
+    fn = _flaky(5, exc=ValueError)
+    with pytest.raises(ValueError):                     # wrong class: no retry
+        run_with_retry(fn, retries=5, retryable=KeyError)
+    assert fn.calls["n"] == 1
+    assert run_with_retry(_flaky(2), retries=5,
+                          retryable=(ValueError, OSError)) == "ok"
+    assert run_with_retry(_flaky(2), retries=5,
+                          retryable=lambda e: "boom" in str(e)) == "ok"
+    with pytest.raises(ValueError):
+        run_with_retry(_flaky(2), retries=5,
+                       retryable=lambda e: False)
+
+
+def test_deadline_stops_retrying():
+    ck = _Clock()
+    with pytest.raises(ValueError):
+        # first sleep (10s) would blow the 5s deadline: re-raise instead
+        run_with_retry(_flaky(5), retries=5, backoff=10.0, deadline=5.0,
+                       sleep=ck.sleep, clock=ck.now)
+    assert ck.sleeps == []
+
+
+def test_on_failure_sees_each_attempt():
+    seen = []
+    run_with_retry(_flaky(2), retries=3,
+                   on_failure=lambda e, a: seen.append((str(e), a)))
+    assert [a for _, a in seen] == [0, 1]
+
+
+def test_fault_injector_transient_fires_once():
+    inj = FaultInjector(fail_steps=[3], transient=True)
+    with pytest.raises(SimulatedFault):
+        inj.check(3)
+    inj.check(3)                                        # second pass clean
+
+
+def test_straggler_history_bounded_at_window():
+    m = StragglerMonitor(window=10, threshold=2.0)
+    for i in range(1000):
+        m.record(i, 1.0)
+    assert len(m.times) == 10                           # O(window), not O(steps)
+    assert m.median == 1.0
+    assert m.record(1000, 5.0) is True
+    assert m.straggler_steps[-1][0] == 1000
+    # an ancient slow era beyond the window no longer skews the median
+    m2 = StragglerMonitor(window=10)
+    for i in range(20):
+        m2.record(i, 100.0)
+    for i in range(20, 40):
+        m2.record(i, 1.0)
+    assert m2.median == 1.0
+
+
+def test_preemption_handler_restores_previous_handlers():
+    sentinel = []
+    prev = signal.signal(signal.SIGTERM, lambda s, f: sentinel.append(s))
+    try:
+        h = PreemptionHandler().install()
+        assert signal.getsignal(signal.SIGTERM) == h._handle
+        h._handle(signal.SIGTERM, None)
+        assert h.should_stop
+        h.uninstall()
+        cur = signal.getsignal(signal.SIGTERM)
+        cur(signal.SIGTERM, None)
+        assert sentinel == [signal.SIGTERM]             # our handler is back
+        with PreemptionHandler() as h2:                 # context-manager form
+            assert not h2.should_stop
+            assert signal.getsignal(signal.SIGTERM) == h2._handle
+        assert signal.getsignal(signal.SIGTERM) == cur
+    finally:
+        signal.signal(signal.SIGTERM, prev)

@@ -1,0 +1,340 @@
+"""Fault-scenario subsystem: scenario sampling (seeded, rate-coupled),
+horizon simulation semantics (lost work, spares, elastic rescale, MPMD
+stalls), segmented re-simulation caching, Monte-Carlo determinism, the
+goodput-monotone-in-fault-rate property, Young/Daly optimal-interval
+recovery, and the DSE/objectives integration."""
+import math
+
+import pytest
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.costmodel import MPMDProgram, build_topology, simulate_cluster
+from repro.core.dse import Knob, explore
+from repro.faults import (CheckpointPolicy, FaultEvent, FaultRates,
+                          FaultScenario, FaultSimResult, analytic_goodput,
+                          fault_metrics, monte_carlo, simulate_horizon,
+                          young_daly_interval)
+
+SYS = SystemConfig(chips=16, topology="switch")
+TOPO = build_topology(SYS)
+K = 16
+
+
+def _graph(n_layers=4, comm_mb=4.0, group=K):
+    g = chakra.Graph()
+    prev = None
+    for i in range(n_layers):
+        ag = g.add(f"ag{i}", chakra.COMM_COLL, comm_kind="all-gather",
+                   comm_bytes=comm_mb * 1e6, out_bytes=comm_mb * 1e6,
+                   group=list(range(group)))
+        deps = [ag] + ([prev] if prev is not None else [])
+        prev = g.add(f"comp{i}", chakra.COMP, deps=deps, flops=5e10,
+                     out_bytes=1e6)
+    return g
+
+
+G = _graph()
+S0 = float(simulate_cluster(G, SYS, TOPO, n_ranks=K).total_time)
+
+
+# ---------------------------------------------------------------------------
+# scenario DSL + sampling
+# ---------------------------------------------------------------------------
+
+def test_event_and_policy_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(1.0, "meteor", rank=0)
+    with pytest.raises(ValueError, match="time"):
+        FaultEvent(-1.0, "stall")
+    with pytest.raises(ValueError, match="target rank"):
+        FaultEvent(1.0, "fail_stop")
+    with pytest.raises(ValueError, match="slowdown magnitude"):
+        FaultEvent(1.0, "slowdown", rank=0, magnitude=0.5)
+    with pytest.raises(ValueError, match="bandwidth"):
+        FaultEvent(1.0, "link_degrade", rank=0, magnitude=1.5)
+    with pytest.raises(ValueError, match="interval"):
+        CheckpointPolicy(interval=0)
+    with pytest.raises(ValueError, match="costs"):
+        CheckpointPolicy(write_cost=-1.0)
+    with pytest.raises(ValueError, match="horizon"):
+        FaultScenario([], horizon=0.0)
+    with pytest.raises(ValueError, match="outside cluster"):
+        FaultScenario([FaultEvent(1.0, "fail_stop", rank=9)],
+                      horizon=10.0, n_ranks=8)
+    with pytest.raises(ValueError, match="young_daly"):
+        young_daly_interval(0.0, 100.0)
+
+
+def test_scenario_sampling_deterministic_and_rate_coupled():
+    rates = FaultRates(fail_rate=0.5, slowdown_rate=1.0, stall_rate=0.25)
+    a = FaultScenario.sample(rates, horizon=40.0, n_ranks=K, seed=11)
+    b = FaultScenario.sample(rates, horizon=40.0, n_ranks=K, seed=11)
+    assert [dataclasses_tuple(e) for e in a.events] == \
+           [dataclasses_tuple(e) for e in b.events]
+    c = FaultScenario.sample(rates, horizon=40.0, n_ranks=K, seed=12)
+    assert [dataclasses_tuple(e) for e in a.events] != \
+           [dataclasses_tuple(e) for e in c.events]
+    # coupling: doubling a rate exactly halves the shared arrival times and
+    # keeps the per-event target ranks (inverse-CDF on the same uniforms)
+    lo = FaultScenario.sample(FaultRates(fail_rate=0.5), 40.0, K, seed=3)
+    hi = FaultScenario.sample(FaultRates(fail_rate=1.0), 40.0, K, seed=3)
+    los = [e for e in lo.events]
+    his = [e for e in hi.events]
+    assert len(his) >= len(los)
+    for el, eh in zip(los, his[:len(los)]):
+        assert eh.time == pytest.approx(el.time / 2.0)
+        assert eh.rank == el.rank
+
+
+def dataclasses_tuple(e):
+    return (e.time, e.kind, e.rank, e.duration, e.magnitude)
+
+
+# ---------------------------------------------------------------------------
+# horizon semantics
+# ---------------------------------------------------------------------------
+
+def test_fault_free_horizon_is_ideal():
+    sc = FaultScenario([], horizon=1e9)
+    hr = simulate_horizon(G, SYS, sc, CheckpointPolicy(interval=10),
+                          topo=TOPO, n_ranks=K, n_steps=100)
+    assert hr.useful_steps == 100
+    assert hr.goodput == pytest.approx(1.0)
+    assert hr.makespan_inflation == pytest.approx(1.0)
+    assert hr.p50_step_time == hr.p99_step_time == pytest.approx(S0)
+    assert hr.n_failures == 0 and hr.lost_steps == 0
+    assert hr.n_signatures == 1
+
+
+def test_slowdown_window_p99_and_segment_caching():
+    # two identical 2x-slowdown windows -> 2 distinct signatures even
+    # though the timeline has >2 segments (repeats hit the cache)
+    evs = [FaultEvent(10 * S0, "slowdown", rank=3, duration=20 * S0,
+                      magnitude=2.0),
+           FaultEvent(60 * S0, "slowdown", rank=3, duration=20 * S0,
+                      magnitude=2.0)]
+    sc = FaultScenario(evs, horizon=1e9, n_ranks=K)
+    hr = simulate_horizon(G, SYS, sc, CheckpointPolicy(interval=1000),
+                          topo=TOPO, n_ranks=K, n_steps=100,
+                          keep_segments=True)
+    assert hr.useful_steps == 100
+    assert hr.goodput < 1.0
+    assert hr.n_signatures == 2
+    assert hr.n_segments >= 3
+    assert hr.p50_step_time == pytest.approx(S0)
+    # a 2x compute slowdown on the critical path at least slows the step
+    assert hr.p99_step_time > hr.p50_step_time
+    # memoize=False is the naive baseline: identical physics, no caches
+    naive = simulate_horizon(G, SYS, sc, CheckpointPolicy(interval=1000),
+                             topo=TOPO, n_ranks=K, n_steps=100,
+                             memoize=False)
+    assert naive.as_dict() == hr.as_dict()
+
+
+def test_fail_stop_lost_work_and_wall_accounting():
+    pol = CheckpointPolicy(interval=10, write_cost=0.5 * S0,
+                           restore_cost=3.0 * S0)
+    ev = FaultEvent(4.5 * S0, "fail_stop", rank=2)    # never returns
+    sc = FaultScenario([ev], horizon=1e9, n_ranks=K)
+    hr = simulate_horizon(G, SYS, sc, pol, topo=TOPO, n_ranks=K, n_steps=50)
+    assert hr.n_failures == 1
+    assert hr.lost_steps == 5            # steps 0..4 re-run from checkpoint 0
+    assert hr.useful_steps == 50
+    assert hr.restore_s == pytest.approx(pol.restore_cost)   # one rescale
+    # conservation: wall == executed step time + checkpoints + restores
+    executed = sum(s * c for s, c in hr.step_records)
+    assert hr.wall_time == pytest.approx(
+        executed + hr.checkpoint_s + hr.restore_s + hr.stall_s)
+    assert hr.goodput < 1.0
+    # the post-failure cluster runs on 15 survivors -> a second signature
+    assert hr.n_signatures == 2
+
+
+def test_spare_absorbs_failure_keeps_full_cluster():
+    pol = CheckpointPolicy(interval=10, restore_cost=2.0 * S0)
+    sc = FaultScenario([FaultEvent(4.5 * S0, "fail_stop", rank=2)],
+                       horizon=1e9, n_ranks=K)
+    spare = simulate_horizon(G, SYS, sc, pol, topo=TOPO, n_ranks=K,
+                             n_steps=50, spare_ranks=1)
+    rescale = simulate_horizon(G, SYS, sc, pol, topo=TOPO, n_ranks=K,
+                               n_steps=50, spare_ranks=0)
+    assert spare.n_signatures == 1       # never leaves the K-rank profile
+    assert rescale.n_signatures == 2
+    assert spare.goodput >= rescale.goodput
+    assert spare.p99_step_time == pytest.approx(S0)
+
+
+def test_stall_event_adds_wall_without_progress():
+    sc = FaultScenario([FaultEvent(2.0 * S0, "stall", duration=7.0)],
+                       horizon=1e9)
+    hr = simulate_horizon(G, SYS, sc, CheckpointPolicy(interval=1000),
+                          topo=TOPO, n_ranks=K, n_steps=20)
+    assert hr.stall_s == pytest.approx(7.0)
+    assert hr.useful_steps == 20
+    assert hr.wall_time == pytest.approx(20 * S0 + 7.0)
+
+
+def test_mpmd_fail_stop_stalls_until_return():
+    g = _graph(group=4)
+    prog = MPMDProgram([g, g, g, g])
+    s0 = float(simulate_cluster(prog, SYS, TOPO).total_time)
+    pol = CheckpointPolicy(interval=100, restore_cost=s0)
+    down = 10 * s0
+    sc = FaultScenario([FaultEvent(3.5 * s0, "fail_stop", rank=1,
+                                   duration=down)], horizon=1e9, n_ranks=4)
+    hr = simulate_horizon(prog, SYS, sc, pol, n_steps=50)
+    # the program cannot drop rank 1: it waits out the downtime, restores,
+    # and finishes its step budget
+    assert hr.downtime_s == pytest.approx(down, rel=0.3)
+    assert hr.restore_s == pytest.approx(pol.restore_cost)
+    assert hr.n_failures == 1
+    # permanent failure without a wall limit is a hard error, not a hang
+    forever = FaultScenario([FaultEvent(3.5 * s0, "fail_stop", rank=1)],
+                            horizon=1e9, n_ranks=4)
+    with pytest.raises(RuntimeError, match="stalled"):
+        simulate_horizon(prog, SYS, forever, pol, n_steps=50)
+    # ...but a wall limit bounds it cleanly
+    hr2 = simulate_horizon(prog, SYS, forever, pol, n_steps=50,
+                           wall_limit=20 * s0)
+    assert hr2.useful_steps < 50
+    assert hr2.wall_time == pytest.approx(20 * s0)
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo layer
+# ---------------------------------------------------------------------------
+
+def test_monte_carlo_deterministic_in_seed():
+    rates = FaultRates(fail_rate=1.0 / (200 * S0), fail_downtime=50 * S0)
+    pol = CheckpointPolicy(interval=20, write_cost=S0, restore_cost=2 * S0)
+    kw = dict(topo=TOPO, n_ranks=K, n_steps=100, n_trials=4)
+    a = monte_carlo(G, SYS, rates, pol, seed=5, **kw)
+    b = monte_carlo(G, SYS, rates, pol, seed=5, **kw)
+    assert a.as_dict() == b.as_dict()
+    c = monte_carlo(G, SYS, rates, pol, seed=6, **kw)
+    assert a.as_dict() != c.as_dict()
+    assert a.n_trials == 4
+
+
+@pytest.mark.parametrize("seed", [0, 7, 23])
+def test_goodput_monotone_nonincreasing_in_fault_rate(seed):
+    """The DSE contract: raising fault_rate never raises expected goodput.
+    Rate-coupled sampling makes this exact (same arrival sequence,
+    compressed), not just true on average."""
+    pol = CheckpointPolicy(interval=20, write_cost=S0, restore_cost=2 * S0)
+    rates_per_step = [1e-9, 1e-3, 1e-2, 0.05, 0.1]
+    last = math.inf
+    for r in rates_per_step:
+        mc = monte_carlo(
+            G, SYS, FaultRates(fail_rate=r / S0, fail_downtime=50 * S0),
+            pol, topo=TOPO, n_ranks=K, n_steps=60, n_trials=6, seed=seed)
+        assert mc.expected_goodput <= last + 1e-12, \
+            f"goodput rose at rate {r}/step (seed {seed})"
+        last = mc.expected_goodput
+    assert last < 1.0                    # the ladder actually bites
+
+
+def _recover_interval(mtbf_steps, c_steps, n_trials=32, seed=3):
+    """Best checkpoint interval by simulated expected goodput, on a log
+    grid around the Young/Daly optimum, with common random numbers (the
+    same sampled scenarios) across every interval arm."""
+    mtbf, C = mtbf_steps * S0, c_steps * S0
+    R = 2 * C
+    horizon = 30.0 * mtbf
+    rates = FaultRates(fail_rate=1.0 / mtbf, fail_downtime=0.5 * C)
+    scen = [FaultScenario.sample(rates, horizon, K, seed=(seed, i))
+            for i in range(n_trials)]
+    i_yd = young_daly_interval(C, mtbf) / S0
+    grid = sorted({max(1, round(i_yd * 1.08 ** k)) for k in range(-9, 10)})
+    best_i, best_g = None, -1.0
+    for interval in grid:
+        mc = monte_carlo(G, SYS, rates,
+                         CheckpointPolicy(interval=interval, write_cost=C,
+                                          restore_cost=R),
+                         topo=TOPO, n_ranks=K, wall_limit=horizon,
+                         scenarios=scen)
+        if mc.expected_goodput > best_g:
+            best_g, best_i = mc.expected_goodput, interval
+    return best_i, i_yd
+
+
+@pytest.mark.parametrize("mtbf_steps,c_steps", [(400, 2), (1600, 8)])
+def test_simulated_optimum_recovers_young_daly(mtbf_steps, c_steps):
+    best_i, i_yd = _recover_interval(mtbf_steps, c_steps)
+    err = abs(best_i - i_yd) / i_yd
+    assert err <= 0.15, (f"MTBF={mtbf_steps} C={c_steps}: simulated optimum "
+                         f"{best_i} vs Young/Daly {i_yd:.1f} ({err:.0%} off)")
+
+
+def test_analytic_goodput_peaks_at_young_daly():
+    C, mtbf = 2 * S0, 400 * S0
+    i_yd = young_daly_interval(C, mtbf) / S0
+    grid = range(1, 200)
+    best = max(grid, key=lambda i: analytic_goodput(S0, i, C, 2 * C,
+                                                    1.0 / mtbf))
+    assert abs(best - i_yd) / i_yd <= 0.05
+
+
+# ---------------------------------------------------------------------------
+# DSE + objectives integration
+# ---------------------------------------------------------------------------
+
+def test_fault_sim_result_delegates_to_base():
+    base = simulate_cluster(G, SYS, TOPO, n_ranks=K)
+    fr = FaultSimResult(base, expected_goodput=0.9,
+                        p99_step_time_under_faults=2 * S0,
+                        makespan_inflation=1.1)
+    assert fr.total_time == base.total_time          # delegated
+    assert fr.expected_goodput == 0.9
+    d = fr.as_dict()
+    assert d["expected_goodput"] == 0.9 and "total_time" in d
+    with pytest.raises(AttributeError):
+        fr.no_such_metric
+    with pytest.raises(AttributeError):
+        fr._no_private_delegation
+
+
+def test_explore_routes_fault_knobs_and_sorts_by_sense():
+    knobs = [Knob("checkpoint_interval", [5, 40], layer="software"),
+             Knob("fault_rate", [1.0 / (300 * S0)], layer="software"),
+             Knob("fault_trials", [4], layer="software"),
+             Knob("fault_steps", [60], layer="software")]
+    trials = explore(lambda cfg: G, SYS, knobs,
+                     objective="expected_goodput")
+    assert len(trials) == 2
+    assert all(isinstance(t.result, FaultSimResult) for t in trials)
+    # maximized objective: best (highest goodput) sorts first
+    assert trials[0].objective >= trials[1].objective
+    # fault-free trials stay plain results
+    plain = explore(lambda cfg: G, SYS,
+                    [Knob("prefetch", [0, 2], layer="software")])
+    assert not any(isinstance(t.result, FaultSimResult) for t in plain)
+
+
+def test_spare_ranks_goodput_normalized_per_provisioned_rank():
+    cfg = {"checkpoint_interval": 20, "fault_rate": 0.0, "fault_trials": 1,
+           "fault_steps": 40}
+    base = simulate_cluster(G, SYS, TOPO, n_ranks=K)
+    no_spare = fault_metrics(G, SYS, TOPO, cfg, base, n_ranks=K)
+    with_spares = fault_metrics(G, SYS, TOPO, {**cfg, "spare_ranks": 4},
+                                base, n_ranks=K)
+    # fault-free: spares are pure provisioning overhead, K/(K+4) exactly
+    assert with_spares.expected_goodput == pytest.approx(
+        no_spare.expected_goodput * K / (K + 4))
+
+
+def test_objective_sense_scalarize_dominates():
+    from repro.search.objectives import dominates, scalarize, sense
+    assert sense("total_time") == 1.0
+    assert sense("expected_goodput") == -1.0
+    ref = {"expected_goodput": 0.5}
+    hi = scalarize({"expected_goodput": 0.9}, ["expected_goodput"], [1.0],
+                   ref)
+    lo = scalarize({"expected_goodput": 0.6}, ["expected_goodput"], [1.0],
+                   ref)
+    assert hi < lo                       # higher goodput = better (smaller)
+    names = ["expected_goodput", "p99_step_time_under_faults"]
+    a = {"expected_goodput": 0.9, "p99_step_time_under_faults": 1.0}
+    b = {"expected_goodput": 0.8, "p99_step_time_under_faults": 1.5}
+    assert dominates(a, b, names) and not dominates(b, a, names)

@@ -584,3 +584,105 @@ def test_cli_parse_knob():
         parse_knob("noequals")
     with pytest.raises(ValueError):
         parse_knob("a=1@badlayer")
+
+
+# ---------------------------------------------------------------------------
+# failed trials (crash-proof sweep)
+# ---------------------------------------------------------------------------
+
+def _poisoned_graph_for(cfg):
+    """Capture that crashes for half the space — a config whose workload
+    build dies, like an OOMing capture job."""
+    if cfg.get("poison"):
+        raise RuntimeError("capture exploded")
+    return _graph()
+
+
+_POISON_KNOBS = [Knob("poison", [0, 1], layer="workload"),
+                 Knob("prefetch", [0, 2, 4, 8], layer="software"),
+                 Knob("bucket_bytes", [None, 64e6], layer="software")]
+
+
+def test_failed_trials_recorded_and_sweep_completes(tmp_path):
+    from repro.search.run import FAILED_OBJECTIVE
+    ck = str(tmp_path / "run.jsonl")
+    r = SearchRun(_poisoned_graph_for, SYS, _POISON_KNOBS, strategy="random",
+                  budget=6, seed=0, checkpoint=ck).run()
+    assert len(r.trials) == 6            # the sweep burned its full budget
+    failed = r.failed_trials
+    good = [t for t in r.trials if t.ok]
+    assert failed and good
+    for t in failed:
+        assert "RuntimeError: capture exploded" in t.error
+        assert t.objective == FAILED_OBJECTIVE and t.objectives == {}
+    # failures never compete for best / the front
+    assert r.best is not None and r.best.ok
+    assert all(t.ok for t in r.full_trials)
+    assert f"{len(failed)} failed" in r.summary()
+    # ...and are persisted with their error string
+    recs = [json.loads(ln) for ln in open(ck).read().splitlines()][1:]
+    assert [bool(rec.get("error")) for rec in recs] == \
+           [not t.ok for t in r.trials]
+
+
+def test_failed_trials_resume_bit_identical(tmp_path, monkeypatch):
+    ref = SearchRun(_poisoned_graph_for, SYS, _POISON_KNOBS,
+                    strategy="bayesian", budget=10, seed=4).run()
+    assert ref.failed_trials             # the poison actually fired
+    ck = str(tmp_path / "run.jsonl")
+    SearchRun(_poisoned_graph_for, SYS, _POISON_KNOBS, strategy="bayesian",
+              budget=10, seed=4, checkpoint=ck).run()
+    _truncate_checkpoint(ck, 5)          # killed mid-sweep
+
+    evals = []
+    orig = SearchRun._evaluate
+
+    def counting(self, cfg, fid):
+        evals.append(dict(cfg))
+        return orig(self, cfg, fid)
+
+    monkeypatch.setattr(SearchRun, "_evaluate", counting)
+    r2 = SearchRun(_poisoned_graph_for, SYS, _POISON_KNOBS,
+                   strategy="bayesian", budget=10, seed=4,
+                   checkpoint=ck).run()
+    assert (r2.n_resumed, r2.n_evaluated) == (5, 5)
+    assert len(evals) == 5
+    # resumed run == uninterrupted run, error strings included
+    assert [(t.config, t.objective, t.error) for t in r2.trials] == \
+           [(t.config, t.objective, t.error) for t in ref.trials]
+    assert r2.best is not None and r2.best.config == ref.best.config
+
+
+def test_corrupted_trial_record_names_field_and_line(tmp_path):
+    g = _graph()
+    ck = str(tmp_path / "run.jsonl")
+    SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+              budget=4, seed=0, checkpoint=ck).run()
+    lines = open(ck).read().splitlines()
+
+    def rewrite(i, mutate):
+        rec = json.loads(lines[i])
+        mutate(rec)
+        out = list(lines)
+        out[i] = json.dumps(rec)
+        with open(ck, "w") as f:
+            f.write("\n".join(out) + "\n")
+
+    # drop 'objective' from the 2nd trial (file line 3)
+    rewrite(2, lambda rec: rec.pop("objective"))
+    with pytest.raises(ValueError, match=r":3.*'objective'"):
+        SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+                  budget=4, seed=0, checkpoint=ck).run()
+    # a record that is valid JSON but not an object
+    with open(ck, "w") as f:
+        f.write(lines[0] + "\n" + json.dumps([1, 2]) + "\n")
+    with pytest.raises(ValueError, match=r":2.*expected an object"):
+        SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+                  budget=4, seed=0, checkpoint=ck).run()
+    # 'objectives' gone without an error marker: refused with a hint
+    with open(ck, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    rewrite(1, lambda rec: rec.pop("objectives"))
+    with pytest.raises(ValueError, match=r":2.*objectives"):
+        SearchRun(lambda cfg: g, SYS, _fsdp_knobs(), strategy="random",
+                  budget=4, seed=0, checkpoint=ck).run()
