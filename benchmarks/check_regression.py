@@ -1,8 +1,9 @@
 """Benchmark regression gate: fail if BENCH_sim speedup ratios, the trace
 subsystem's round-trip/calibration figures, the search subsystem's
-sample-efficiency figures, the MPMD engine's exactness/coalescing figures
-or the fault subsystem's segmented-resim/Young-Daly figures fall below
-the floors recorded in benchmarks/thresholds.json.
+sample-efficiency figures, the MPMD engine's exactness/coalescing figures,
+the fault subsystem's segmented-resim/Young-Daly figures or the
+parallel/delta DSE figures fall below the floors recorded in
+benchmarks/thresholds.json.
 
 Usage (the verify recipe's perf gate):
 
@@ -11,6 +12,7 @@ Usage (the verify recipe's perf gate):
     PYTHONPATH=.:src python -m benchmarks.search_bench --smoke
     PYTHONPATH=.:src python -m benchmarks.mpmd_pipeline --smoke
     PYTHONPATH=.:src python -m benchmarks.fault_scenarios --smoke
+    PYTHONPATH=.:src python -m benchmarks.parallel_dse --smoke
     PYTHONPATH=.:src python -m benchmarks.check_regression
 
 or in one shot::
@@ -18,8 +20,9 @@ or in one shot::
     PYTHONPATH=.:src python -m benchmarks.check_regression --run-smoke
 
 Reads artifacts/bench/BENCH_sim.json, BENCH_trace.json, BENCH_search.json,
-BENCH_mpmd.json and BENCH_fault.json (``--bench`` / ``--trace-bench`` /
-``--search-bench`` / ``--mpmd-bench`` / ``--fault-bench`` to override).
+BENCH_mpmd.json, BENCH_fault.json and BENCH_parallel.json (``--bench`` /
+``--trace-bench`` / ``--search-bench`` / ``--mpmd-bench`` /
+``--fault-bench`` / ``--parallel-bench`` to override).
 The speedup floors are deliberately conservative — they hold for both the
 full and ``--smoke`` matrices on a loaded machine — so a failure means the
 engine actually regressed, not that the box was busy; the trace floors are
@@ -27,11 +30,15 @@ correctness contracts (alignment, round-trip accuracy, calibration
 recovery), the search floors are the PR-4 acceptance bound
 (bayesian/evolutionary within 2% of the exhaustive grid optimum on <= 25%
 of its trials), the mpmd floors are the PR-5 acceptance contract
-(K-identical-graph bit-identity, 64-rank two-pool coalescing speedup) and
-the fault floors are the PR-6 acceptance contract (segmented horizon
+(K-identical-graph bit-identity, 64-rank two-pool coalescing speedup), the
+fault floors are the PR-6 acceptance contract (segmented horizon
 re-simulation >= 3x over naive, simulated optimal checkpoint interval
-within 15% of Young/Daly, goodput monotone in fault rate).  Exit code 1
-on regression, 2 on missing inputs.
+within 15% of Young/Daly, goodput monotone in fault rate), and the
+parallel floors gate the process-pool + delta re-simulation PR
+(pool_identity/delta_identity are exactness contracts enforced
+everywhere; the ``pool_speedup`` floor only applies when the box reports
+>= 4 usable cores, since a smaller box physically cannot show pool
+scaling).  Exit code 1 on regression, 2 on missing inputs.
 """
 from __future__ import annotations
 
@@ -51,6 +58,8 @@ DEFAULT_MPMD_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
                                   "BENCH_mpmd.json")
 DEFAULT_FAULT_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
                                    "BENCH_fault.json")
+DEFAULT_PARALLEL_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
+                                      "BENCH_parallel.json")
 DEFAULT_THRESH = os.path.join(HERE, "thresholds.json")
 
 
@@ -72,6 +81,13 @@ def check(bench: dict, thresholds: dict) -> list:
                     "fault"):
         for key, floor in thresholds.get(section, {}).items():
             one(section, key, floor, bench.get(section, {}).get(key))
+    par = bench.get("parallel", {})
+    for key, floor in thresholds.get("parallel", {}).items():
+        if key.startswith("pool_speedup") and par.get("cpus", 1) < 4:
+            # a < 4-core box cannot show process-pool scaling; the
+            # identity and delta floors still apply unconditionally
+            continue
+        one("parallel", key, floor, par.get(key))
     return bad
 
 
@@ -87,22 +103,26 @@ def main(argv=None) -> int:
                     help="BENCH_mpmd.json path")
     ap.add_argument("--fault-bench", default=DEFAULT_FAULT_BENCH,
                     help="BENCH_fault.json path")
+    ap.add_argument("--parallel-bench", default=DEFAULT_PARALLEL_BENCH,
+                    help="BENCH_parallel.json path")
     ap.add_argument("--thresholds", default=DEFAULT_THRESH)
     ap.add_argument("--run-smoke", action="store_true",
                     help="run `sim_bench --smoke` + `trace_roundtrip "
                          "--smoke` + `search_bench --smoke` + "
                          "`mpmd_pipeline --smoke` + `fault_scenarios "
-                         "--smoke` first to produce the bench files")
+                         "--smoke` + `parallel_dse --smoke` first to "
+                         "produce the bench files")
     args = ap.parse_args(argv)
 
     if args.run_smoke:
-        from benchmarks import (fault_scenarios, mpmd_pipeline,
+        from benchmarks import (fault_scenarios, mpmd_pipeline, parallel_dse,
                                 search_bench, sim_bench, trace_roundtrip)
         sim_bench.main(["--smoke"])
         trace_roundtrip.main(["--smoke"])
         search_bench.main(["--smoke"])
         mpmd_pipeline.main(["--smoke"])
         fault_scenarios.main(["--smoke"])
+        parallel_dse.main(["--smoke"])
 
     bench = {}
     for path, key, producer in ((args.bench, None, "sim_bench"),
@@ -113,7 +133,9 @@ def main(argv=None) -> int:
                                 (args.mpmd_bench, "mpmd",
                                  "mpmd_pipeline"),
                                 (args.fault_bench, "fault",
-                                 "fault_scenarios")):
+                                 "fault_scenarios"),
+                                (args.parallel_bench, "parallel",
+                                 "parallel_dse")):
         if not os.path.exists(path):
             print(f"check_regression: no bench file at {path} "
                   f"(run benchmarks.{producer} first, or pass --run-smoke)")

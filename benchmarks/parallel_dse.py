@@ -1,0 +1,147 @@
+"""Process-pool + delta re-simulation benchmark (PR "raw DSE speed").
+
+Two scenarios, written to BENCH_parallel.json:
+
+  pool    the 64-trial explore grid from sim_bench, serial vs
+          ``parallel=4`` / ``parallel=8`` on the fork process pool, with a
+          bit-identity check against the serial trial list.  ``cpus``
+          records the usable core count: on a < 4-core box a process pool
+          physically cannot reach the 2.5x floor, so check_regression
+          enforces ``pool_speedup`` only when ``cpus >= 4`` (identity is
+          enforced everywhere).
+
+  delta   a 10k-node layered graph with 1% of duration rows perturbed.
+          ``delta_speedup`` measures the tail-window scenario — changed
+          rows drawn from the *late* part of the base schedule, the shape
+          of transient-straggler / fault-window / optimizer-phase sweeps —
+          where suffix-resume skips ~99% of the replay.  The
+          scattered-uniform case is reported as
+          ``delta_speedup_scattered`` for honesty: a uniformly-early
+          changed row forces a near-full replay, so it hovers near 1x;
+          delta's win is shape-dependent, its correctness is not.
+          ``delta_identity`` is the fraction of randomized perturbation
+          subsets whose delta result equals the full re-run bit for bit
+          (gated at 1.0).
+
+``--smoke`` trims reps and the identity matrix; every gated figure holds
+in both modes.  No jax required; runs in seconds.
+"""
+from __future__ import annotations
+
+import argparse
+import random
+
+from benchmarks.common import emit, write_json
+from benchmarks.sim_bench import best_of, layered_graph
+
+from repro.configs.base import SystemConfig
+from repro.core import dse, pool
+from repro.core.costmodel import DeltaBase, build_topology, compile_graph
+from repro.core.costmodel.simulator import _override
+
+
+def bench_pool(sysc, n: int, reps: int) -> dict:
+    g = layered_graph(n)
+    knobs = [
+        dse.Knob("fsdp_sync", [True, False], layer="software"),
+        dse.Knob("prefetch", [0, 1, 2, 4], layer="software"),
+        dse.Knob("bucket_bytes", [0, 16e6], layer="software"),
+        dse.Knob("link_bw", [25e9, 50e9, 100e9, 400e9], layer="hardware"),
+    ]
+
+    def run(par):
+        return dse.explore(lambda cfg: g, sysc, knobs, budget=64,
+                           parallel=par)
+
+    serial = run(None)                                 # warm every cache
+    identical = 1.0
+    for par in (4, 8):
+        got = run(par)
+        if [(t.config, t.objective) for t in got] \
+                != [(t.config, t.objective) for t in serial]:
+            identical = 0.0
+    t_ser = best_of(lambda: run(None), reps=reps)
+    t_p4 = best_of(lambda: run(4), reps=reps)
+    t_p8 = best_of(lambda: run(8), reps=reps)
+    emit("parallel_dse.pool4", t_p4 * 1e6, f"{t_ser / t_p4:.2f}x_vs_serial")
+    emit("parallel_dse.pool8", t_p8 * 1e6, f"{t_ser / t_p8:.2f}x_vs_serial")
+    return {"n_nodes": n, "n_trials": 64,
+            "serial_ms": t_ser * 1e3, "parallel4_ms": t_p4 * 1e3,
+            "parallel8_ms": t_p8 * 1e3,
+            "pool_speedup": t_ser / t_p4,
+            "pool_speedup_8": t_ser / t_p8,
+            "pool_identity": identical}
+
+
+def bench_delta(sysc, n: int, reps: int, n_identity: int) -> dict:
+    g = layered_graph(n)
+    topo = build_topology(sysc)
+    cg = compile_graph(g)
+    base = cg.durations(sysc, topo, "auto", 0.6)
+    db = DeltaBase(cg, base, n_checkpoints=64)
+    n_changed = max(1, cg.n // 100)                    # 1% of rows
+
+    # tail window: a transient straggler late in the step — the last 1%
+    # of the base schedule slowed 1.3x
+    tail = {nid: base[nid] * 1.3 for nid in db.schedule[-n_changed:]}
+    # scattered: the same row count, uniform over the whole schedule
+    rng = random.Random(0)
+    scat = {nid: base[nid] * 1.3
+            for nid in rng.sample(range(cg.n), n_changed)}
+
+    t_full = best_of(lambda: cg.run(_override(base, tail)), reps=reps)
+    t_tail = best_of(lambda: db.run(tail), reps=reps)
+    t_fscat = best_of(lambda: cg.run(_override(base, scat)), reps=reps)
+    t_scat = best_of(lambda: db.run(scat), reps=reps)
+
+    assert db.run(tail) == cg.run(_override(base, tail))
+    ok = total = 0
+    for seed in range(n_identity):
+        r = random.Random(100 + seed)
+        for k in (0, 1, n_changed, cg.n):
+            ov = {nid: base[nid] * r.uniform(0.5, 2.0)
+                  for nid in r.sample(range(cg.n), k)}
+            total += 1
+            if db.run(ov) == cg.run(_override(base, ov)):
+                ok += 1
+
+    emit("parallel_dse.delta_tail", t_tail * 1e6,
+         f"{t_full / t_tail:.1f}x_vs_full")
+    emit("parallel_dse.delta_scattered", t_scat * 1e6,
+         f"{t_fscat / t_scat:.2f}x_vs_full")
+    return {"n_nodes": cg.n, "rows_changed": n_changed,
+            "n_checkpoints": db.n_checkpoints,
+            "full_ms": t_full * 1e3, "delta_tail_ms": t_tail * 1e3,
+            "delta_scattered_ms": t_scat * 1e3,
+            "delta_speedup": t_full / t_tail,
+            "delta_speedup_scattered": t_fscat / t_scat,
+            "delta_identity": ok / total, "identity_checks": total}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced matrix for CI gating (seconds)")
+    args = ap.parse_args(argv)
+    sysc = SystemConfig(chips=16)
+    if args.smoke:
+        pool_part = bench_pool(sysc, n=1_000, reps=2)
+        delta_part = bench_delta(sysc, n=10_000, reps=3, n_identity=3)
+    else:
+        pool_part = bench_pool(sysc, n=2_000, reps=3)
+        delta_part = bench_delta(sysc, n=10_000, reps=5, n_identity=10)
+    payload = {"cpus": pool.cpu_count(),
+               "fork_available": pool.pool_available(),
+               "smoke": bool(args.smoke)}
+    payload.update(pool_part)
+    payload.update(delta_part)
+    # n_nodes collides across the two parts; keep them distinct
+    payload["n_nodes"] = {"pool": pool_part["n_nodes"],
+                          "delta": delta_part["n_nodes"]}
+    path = write_json("BENCH_parallel.json", payload)
+    print(f"wrote {path}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

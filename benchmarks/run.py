@@ -22,11 +22,16 @@
                            speedup vs naive, Monte-Carlo throughput,
                            Young/Daly interval recovery, goodput
                            monotonicity
+  parallel_dse     (ours)  process-pool explore speedup at 4/8 workers
+                           vs serial (bit-identity checked) + delta
+                           re-simulation speedup/exactness on a 10k-node
+                           graph with 1% of rows perturbed
   check_regression (gate)  fails if BENCH_sim speedups, BENCH_trace
                            round-trip/calibration, BENCH_search
                            sample-efficiency, BENCH_mpmd
-                           exactness/coalescing or BENCH_fault
-                           segmented/recovery figures fall below
+                           exactness/coalescing, BENCH_fault
+                           segmented/recovery or BENCH_parallel
+                           pool/delta figures fall below
                            benchmarks/thresholds.json floors
 
 Each bench runs in its own subprocess so it controls its fake-device count
@@ -39,7 +44,8 @@ import time
 BENCHES = ["opcounts", "e2e_validation", "fsdp_reorder", "bandwidth_sweep",
            "wafer_tacos", "nic_degradation", "roofline", "sim_bench",
            "hetero_cluster", "trace_roundtrip", "search_bench",
-           "mpmd_pipeline", "fault_scenarios", "check_regression"]
+           "mpmd_pipeline", "fault_scenarios", "parallel_dse",
+           "check_regression"]
 
 
 def main() -> None:

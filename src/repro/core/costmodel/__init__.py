@@ -10,6 +10,7 @@ from repro.core.costmodel.simulator import (simulate, simulate_analytic,
                                             straggler_analysis, SimResult,
                                             ClusterSimResult, node_duration,
                                             peak_memory_proxy)
+from repro.core.costmodel.delta import DeltaBase, delta_base
 from repro.core.costmodel.mpmd import (MPMDProgram, ClusterProgramError,
                                        simulate_mpmd, collective_fingerprint)
 from repro.core.costmodel.analytical import (roofline, RooflineTerms,
@@ -21,6 +22,7 @@ __all__ = ["Topology", "Switch", "Ring", "Torus2D", "Wafer2D", "MultiPod",
            "compile_graph", "simulate", "simulate_analytic", "simulate_batch",
            "simulate_cluster", "straggler_analysis", "SimResult",
            "ClusterSimResult", "node_duration", "peak_memory_proxy",
+           "DeltaBase", "delta_base",
            "MPMDProgram", "ClusterProgramError", "simulate_mpmd",
            "collective_fingerprint",
            "roofline", "RooflineTerms", "model_flops_per_step"]

@@ -158,7 +158,22 @@ class CompiledGraph:
         self._dur_cache: Dict = {}
         self._result_cache: Dict = {}
         self._canon_cache: Dict = {}           # canonical collective order
+        self._delta_cache: Dict = {}           # DeltaBase per config (delta.py)
         self._mem_proxy: Optional[float] = None
+
+    # -- pickling ------------------------------------------------------------
+    def __getstate__(self):
+        """Process-pool support: a CompiledGraph is flat arrays + plain
+        Python mirrors, so it pickles naturally — but the volatile memo
+        caches are dropped (each worker re-fills its own).  Memo-key
+        semantics survive: ``config_key`` is built from reprs, not object
+        identities, and ``_canon_cache``'s id()-keyed entries are guarded
+        by an identity check that simply misses after unpickling."""
+        state = self.__dict__.copy()
+        for k in ("_dur_cache", "_result_cache", "_canon_cache",
+                  "_delta_cache", "_csr_cache"):
+            state[k] = {}
+        return state
 
     # -- CSR views -----------------------------------------------------------
     def csr(self, kind: str):
@@ -328,10 +343,57 @@ class CompiledGraph:
         goes straight to the avail heap — the reference would move it there
         in the drain step of the very next scheduling decision, before any
         candidate comparison, so every decision sees identical heap state.
-        """
-        from repro.core.costmodel.simulator import SimResult, Span
 
+        Internally the loop is segmented: ``_fresh_state`` builds a
+        ``_RunState``, ``_run_span`` advances it a bounded number of
+        scheduling decisions, ``_finalize`` assembles the ``SimResult``.
+        Durations are read only at the instant a node is scheduled, so a
+        mid-run state snapshot is a sound resume point for any duration
+        vector agreeing with the original on all nodes scheduled so far —
+        the delta re-simulation contract (``costmodel.delta``).
+        """
+        st = self._fresh_state(overlap, keep_timeline)
+        self._run_span(st, dur, overlap, self.n)
+        return self._finalize(st)
+
+    def _fresh_state(self, overlap: bool = True,
+                     keep_timeline: bool = False) -> "_RunState":
+        """Pristine engine state: roots on their avail heaps, clocks at 0."""
         n_total = self.n
+        pos = self._pos
+        scode = self._is_comm if overlap else self._zeros
+        st = _RunState.__new__(_RunState)
+        st.remaining = self._indeg0[:]
+        st.dcount = self._dcount0[:]
+        # dmax[c] = max finish time over c's already-finished deps: every
+        # (dedup'd) dep decrements remaining[c] exactly once, so by the time
+        # remaining[c] hits 0 this equals max(finish[d] for d in deps[c]).
+        st.dmax = [0.0] * n_total
+        st.total = 0.0                         # running max finish time
+        st.sf0 = st.sf1 = 0.0                  # stream clocks
+        st.busy0 = st.busy1 = 0.0              # busy time by *node type*
+        avail0: List[int] = []                 # heaps of topo positions
+        avail1: List[int] = []
+        for nid in self._roots:
+            (avail1 if scode[nid] else avail0).append(pos[nid])
+        heapq.heapify(avail0)
+        heapq.heapify(avail1)
+        st.avail0, st.avail1 = avail0, avail1
+        st.future0, st.future1 = [], []        # heaps of (dep_t, pos)
+        st.mem_events = []
+        st.timeline = [] if keep_timeline else None
+        st.scheduled = 0
+        return st
+
+    def _run_span(self, st: "_RunState", dur: List[float], overlap: bool,
+                  stop: int, record: Optional[List] = None) -> None:
+        """Advance `st` until `stop` scheduling decisions have been made in
+        total (stop = self.n runs to completion).  `record`, when given,
+        collects ``(nid, end)`` per decision — the base-run trace delta
+        re-simulation checkpoints."""
+        from repro.core.costmodel.simulator import Span
+
+        n_total = stop
         pos = self._pos
         order = self._order
         ddeps = self._ddeps
@@ -339,29 +401,19 @@ class CompiledGraph:
         out_b = self._out_bytes
         is_comm = self._is_comm
         scode = is_comm if overlap else self._zeros
-        remaining = self._indeg0[:]
-        dcount = self._dcount0[:]
-        # dmax[c] = max finish time over c's already-finished deps: every
-        # (dedup'd) dep decrements remaining[c] exactly once, so by the time
-        # remaining[c] hits 0 this equals max(finish[d] for d in deps[c]).
-        dmax = [0.0] * n_total
-        total = 0.0                            # running max finish time
-        sf0 = sf1 = 0.0                        # stream clocks
-        busy0 = busy1 = 0.0                    # busy time by *node type*
-        avail0: List[int] = []                 # heaps of topo positions
-        avail1: List[int] = []
-        future0: List = []                     # heaps of (dep_t, pos)
-        future1: List = []
-        timeline = [] if keep_timeline else None
-        mem_events = []
+        remaining = st.remaining
+        dcount = st.dcount
+        dmax = st.dmax
+        total = st.total
+        sf0, sf1 = st.sf0, st.sf1
+        busy0, busy1 = st.busy0, st.busy1
+        avail0, avail1 = st.avail0, st.avail1
+        future0, future1 = st.future0, st.future1
+        timeline = st.timeline
+        mem_events = st.mem_events
+        scheduled = st.scheduled
         push, pop = heapq.heappush, heapq.heappop
 
-        for nid in self._roots:
-            (avail1 if scode[nid] else avail0).append(pos[nid])
-        heapq.heapify(avail0)
-        heapq.heapify(avail1)
-
-        scheduled = 0
         while scheduled < n_total:
             while future0 and future0[0][0] <= sf0:
                 push(avail0, pop(future0)[1])
@@ -407,6 +459,8 @@ class CompiledGraph:
             if end > total:
                 total = end
             scheduled += 1
+            if record is not None:
+                record.append((nid, end))
             if timeline is not None:
                 timeline.append(Span(nid, self._names[nid],
                                      "comm" if s else "comp", start, end))
@@ -439,18 +493,27 @@ class CompiledGraph:
                     if ob:
                         mem_events.append((end, -ob))
 
-        busy = (busy0, busy1)
+        st.total = total
+        st.sf0, st.sf1 = sf0, sf1
+        st.busy0, st.busy1 = busy0, busy1
+        st.scheduled = scheduled
+
+    def _finalize(self, st: "_RunState"):
+        """SimResult from a fully-run state (st.scheduled == self.n)."""
+        from repro.core.costmodel.simulator import SimResult
+
         live = peak = 0.0
-        for _, delta in sorted(mem_events):
+        for _, delta in sorted(st.mem_events):
             live += delta
             if live > peak:
                 peak = live
-        exposed = total - busy[0]
+        exposed = st.total - st.busy0
         if exposed < 0.0:
             exposed = 0.0
-        return SimResult(total_time=total, compute_time=busy[0],
-                         comm_time=busy[1], exposed_comm=exposed,
-                         peak_bytes=peak, n_nodes=n_total, timeline=timeline)
+        return SimResult(total_time=st.total, compute_time=st.busy0,
+                         comm_time=st.busy1, exposed_comm=exposed,
+                         peak_bytes=peak, n_nodes=self.n,
+                         timeline=st.timeline)
 
     def canonical_coll_order(self, dur: List[float],
                              overlap: bool = True) -> List[int]:
@@ -528,6 +591,32 @@ class CompiledGraph:
                               | (self.type_code == 3))[0]:
             out[int(nid)] = (float(cb[nid]) / link_bw + topo.link_latency)
         return out
+
+
+class _RunState:
+    """Resumable state of one single-row ``run()``: everything the event
+    loop reads or writes between two scheduling decisions.  ``copy()`` is
+    the checkpoint primitive of delta re-simulation (``costmodel.delta``) —
+    heap lists copy shallowly (ints / immutable tuples), so a snapshot is
+    O(n) and restoring one re-creates the exact mid-run engine state."""
+    __slots__ = ("remaining", "dcount", "dmax", "total", "sf0", "sf1",
+                 "busy0", "busy1", "avail0", "avail1", "future0", "future1",
+                 "mem_events", "timeline", "scheduled")
+
+    def copy(self) -> "_RunState":
+        st = _RunState.__new__(_RunState)
+        st.remaining = self.remaining[:]
+        st.dcount = self.dcount[:]
+        st.dmax = self.dmax[:]
+        st.total = self.total
+        st.sf0, st.sf1 = self.sf0, self.sf1
+        st.busy0, st.busy1 = self.busy0, self.busy1
+        st.avail0, st.avail1 = self.avail0[:], self.avail1[:]
+        st.future0, st.future1 = self.future0[:], self.future1[:]
+        st.mem_events = self.mem_events[:]
+        st.timeline = None if self.timeline is None else self.timeline[:]
+        st.scheduled = self.scheduled
+        return st
 
 
 class RowSpec:

@@ -1,0 +1,166 @@
+"""Delta (incremental) re-simulation: re-run only the schedule suffix a
+duration change can reach.
+
+Most DSE neighbors share a compiled graph and differ in a handful of
+duration rows — a repriced collective, a straggler's compute rows, a
+fault window late in the step.  A full ``run()`` replays every scheduling
+decision anyway.  ``DeltaBase`` runs the base duration vector *once*,
+checkpointing the engine state (``compiled._RunState``) every
+``n / n_checkpoints`` scheduling decisions plus the commit order and
+per-node finish times; a delta run then restores the last checkpoint at
+or before the first decision that can observe a changed duration and
+replays only the remaining suffix.
+
+Soundness (why this is bit-identical, not approximate)
+------------------------------------------------------
+The event loop reads ``dur[nid]`` at exactly one instant: the decision
+that schedules ``nid``.  Every decision before the first scheduling of a
+changed node therefore evolves the engine state identically under the
+base and the perturbed vector — same heap layouts, same stream clocks,
+same float accumulation order.  Restoring a checkpoint taken at decision
+``t* = min(schedule position of changed nodes)`` or earlier and running
+the *same* loop forward is indistinguishable from a full run with the
+perturbed vector.  There is no fixed-order approximation and no fallback
+condition: the suffix replay re-makes every scheduling decision, so
+schedule changes caused by the perturbation are handled exactly.  In a
+two-stream machine the cone of influence of a changed row is conservatively
+the entire schedule suffix from its first occurrence (stream serialization
+couples everything scheduled later); the win is skipping the prefix.
+
+When it pays
+------------
+Speedup is ``n / (n - snap)`` where ``snap`` is the restored decision
+index — large when changes sit late in the base schedule (straggler
+tails, fault windows, optimizer-phase calibration), ~1x (plus an O(n)
+restore) when a changed row is scheduled early.  Worst case is a full
+replay plus one state copy; results are bit-identical either way
+(property-tested on randomized DAGs, tests/test_delta.py).
+
+``simulate_batch(..., delta=...)`` and the cluster engine's single-class
+path route through the per-graph ``delta_base`` memo; zero-changed
+overrides return a copy of the base result without touching the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from bisect import bisect_right
+from typing import Dict, List, Optional
+
+from repro.core.costmodel.compiled import CompiledGraph, result_cache_put
+
+# per-CompiledGraph cap on memoized DeltaBase instances (each holds
+# n_checkpoints O(n) snapshots — a handful of configs is plenty)
+DELTA_CACHE_CAP = 8
+DEFAULT_CHECKPOINTS = 16
+
+
+class DeltaBase:
+    """One checkpointed base run of ``cg`` under ``dur``; ``run(overrides)``
+    re-simulates any per-node override dict bit-identically to a full
+    ``cg.run``.
+
+    Attributes: ``result`` (the base ``SimResult``), ``schedule`` (node ids
+    in commit order), ``finish`` (per-node finish times of the base run —
+    the checkpointed quantities delta runs resume from).
+    """
+
+    def __init__(self, cg: CompiledGraph, dur: List[float],
+                 overlap: bool = True, keep_timeline: bool = False,
+                 n_checkpoints: int = DEFAULT_CHECKPOINTS):
+        if len(dur) != cg.n:
+            raise ValueError(f"duration vector has {len(dur)} entries for "
+                             f"a {cg.n}-node graph")
+        self.cg = cg
+        self._src = dur                   # identity guard for the id() memo
+        self.dur = list(dur)
+        self.overlap = bool(overlap)
+        self.keep_timeline = bool(keep_timeline)
+        n = cg.n
+        record: List = []
+        snaps = []
+        st = cg._fresh_state(self.overlap, self.keep_timeline)
+        step = max(1, -(-n // max(1, int(n_checkpoints)))) if n else 1
+        while st.scheduled < n:
+            snaps.append((st.scheduled, st.copy()))
+            cg._run_span(st, self.dur, self.overlap,
+                         min(n, st.scheduled + step), record=record)
+        self.result = cg._finalize(st)
+        self._snaps = snaps
+        self._snap_idx = [i for i, _ in snaps]
+        self.schedule: List[int] = [nid for nid, _ in record]
+        self.finish: List[float] = [0.0] * n
+        pos_of = [0] * n
+        for i, (nid, end) in enumerate(record):
+            pos_of[nid] = i
+            self.finish[nid] = end
+        self._pos_of = pos_of
+
+    @property
+    def n_checkpoints(self) -> int:
+        return len(self._snaps)
+
+    def earliest_decision(self, overrides: Optional[Dict]) -> int:
+        """Base-schedule position of the first decision that can observe
+        `overrides` (= position of the earliest-scheduled genuinely-changed
+        node); ``cg.n`` when nothing changes.  Ids outside the graph are
+        ignored and an override equal to the base value is not a change —
+        matching ``simulator._override`` semantics."""
+        n = self.cg.n
+        t = n
+        if overrides:
+            base = self.dur
+            pos_of = self._pos_of
+            for nid, v in overrides.items():
+                if 0 <= nid < n and base[nid] != v:
+                    p = pos_of[nid]
+                    if p < t:
+                        t = p
+        return t
+
+    def run(self, overrides: Optional[Dict] = None):
+        """SimResult under ``base durations + overrides``, bit-identical to
+        ``cg.run(_override(base, overrides), overlap, keep_timeline)``."""
+        cg = self.cg
+        n = cg.n
+        t_star = self.earliest_decision(overrides)
+        if t_star >= n:
+            # nothing changed: the base result, as a fresh copy (callers may
+            # post-process in place, mirroring simulate()'s memo contract)
+            res = dataclasses.replace(self.result)
+            if res.timeline is not None:
+                res.timeline = list(res.timeline)
+            return res
+        k = bisect_right(self._snap_idx, t_star) - 1
+        st = self._snaps[k][1].copy()
+        dur = self.dur[:]
+        for nid, v in overrides.items():
+            if 0 <= nid < n:
+                dur[nid] = v
+        cg._run_span(st, dur, self.overlap, n)
+        return cg._finalize(st)
+
+
+def delta_base(cg: CompiledGraph, dur: List[float], overlap: bool = True,
+               keep_timeline: bool = False,
+               n_checkpoints: int = DEFAULT_CHECKPOINTS,
+               key=None, build: bool = True) -> Optional[DeltaBase]:
+    """Memoized ``DeltaBase`` per (config, overlap, keep_timeline) on the
+    compiled graph.
+
+    `key` should be a hashable config identity (e.g. ``(config_key,)``);
+    without one the memo keys on ``id(dur)`` with an identity guard, which
+    works for the memoized read-only lists ``durations()`` returns.
+    ``build=False`` only peeks: it returns an existing base or None — the
+    opportunistic hook ``simulate``/``simulate_cluster`` use so cold paths
+    pay nothing."""
+    ck = ((key if key is not None else id(dur)),
+          bool(overlap), bool(keep_timeline))
+    hit = cg._delta_cache.get(ck)
+    if hit is not None and (key is not None or hit._src is dur):
+        return hit
+    if not build:
+        return None
+    db = DeltaBase(cg, dur, overlap=overlap, keep_timeline=keep_timeline,
+                   n_checkpoints=n_checkpoints)
+    result_cache_put(cg._delta_cache, ck, db, cap=DELTA_CACHE_CAP)
+    return db

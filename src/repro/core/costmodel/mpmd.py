@@ -137,6 +137,16 @@ class MPMDProgram:
     def graph_for(self, rank: int) -> chakra.Graph:
         return self.graphs[self.graph_of[rank]]
 
+    def __getstate__(self):
+        """Process-pool support: graphs + rank map pickle naturally (graph
+        dedup survives — pickle preserves shared references), but the
+        volatile result memo is dropped to keep payloads small; each
+        worker re-fills its own.  Memo keys are content-derived edit
+        tokens, so semantics are unchanged either way."""
+        state = self.__dict__.copy()
+        state["_result_cache"] = {}
+        return state
+
     def __repr__(self) -> str:
         return (f"MPMDProgram(n_ranks={self.n_ranks}, "
                 f"n_graphs={self.n_graphs})")

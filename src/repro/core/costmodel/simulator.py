@@ -141,7 +141,7 @@ def simulate(g: chakra.Graph, system, topo: Optional[Topology] = None,
              algo: str = "auto", overlap: bool = True,
              compute_derate: float = 0.6, durations: Optional[Dict] = None,
              keep_timeline: bool = False,
-             engine: str = "compiled") -> SimResult:
+             engine: str = "compiled", delta: object = "auto") -> SimResult:
     """Time-ordered event-driven list scheduling: when a stream goes idle it
     picks the lowest-topo-position node among those whose deps have finished
     *by then* (a later-positioned ready node fills idle gaps — no artificial
@@ -149,6 +149,13 @@ def simulate(g: chakra.Graph, system, topo: Optional[Topology] = None,
 
     `durations` optionally overrides per-node durations ({nid: seconds});
     `engine` selects the compiled fast path or the reference loop.
+
+    `delta` controls incremental re-simulation of override runs (see
+    ``costmodel.delta``): ``"auto"`` reuses a checkpointed base run if one
+    is already memoized for this config (e.g. by an earlier
+    ``simulate_batch``) — zero cost when cold; ``True`` builds the base on
+    first use; ``False`` forces plain full replays.  Results are
+    bit-identical in every mode.
     """
     if engine == "reference":
         return _simulate_reference(g, system, topo, algo, overlap,
@@ -171,6 +178,16 @@ def simulate(g: chakra.Graph, system, topo: Optional[Topology] = None,
             return dataclasses.replace(hit)
     dur = cg.durations(system, topo, algo, compute_derate)
     if durations:
+        # the memoized base-duration list is the delta memo's identity key,
+        # so bases built here, by simulate_batch, or by the cluster engine
+        # are shared across all three entry points
+        if delta is not False and engine == "compiled":
+            from repro.core.costmodel import delta as _delta
+            db = _delta.delta_base(cg, dur, overlap=overlap,
+                                   keep_timeline=keep_timeline,
+                                   build=(delta is True))
+            if db is not None:
+                return db.run(durations)
         dur = _override(dur, durations)
     res = cg.run(dur, overlap=overlap, keep_timeline=keep_timeline)
     if rkey is not None:
@@ -230,17 +247,33 @@ def peak_memory_proxy(g: chakra.Graph) -> float:
 def simulate_batch(g: chakra.Graph, system,
                    durations_list: Sequence[Optional[Dict]],
                    topo: Optional[Topology] = None, algo: str = "auto",
-                   overlap: bool = True,
-                   compute_derate: float = 0.6) -> List[SimResult]:
+                   overlap: bool = True, compute_derate: float = 0.6,
+                   delta: object = "auto") -> List[SimResult]:
     """Run one compiled graph under many duration-override dicts.
 
     Compiles once and reuses the cached base-duration vector, so a K-entry
     batch costs K event loops — no recompilation, no per-entry duration
     recomputation.  Each entry of `durations_list` is a {nid: seconds}
-    override (or None for the base durations)."""
+    override (or None for the base durations).
+
+    `delta="auto"` (default) routes batches with >= 2 override entries
+    through ``costmodel.delta``: a single checkpointed base run lets each
+    entry replay only the schedule suffix its changed rows can reach —
+    bit-identical to full replays (property-tested), and the base is
+    memoized on the compiled graph so later batches and ``simulate(...,
+    durations=...)`` calls reuse it.  ``True`` forces delta even for one
+    entry; ``False`` disables it."""
     topo = topo or build_topology(system)
     cg = compile_graph(g)
     base = cg.durations(system, topo, algo, compute_derate)
+    if delta == "auto":
+        use_delta = sum(1 for ov in durations_list if ov) >= 2
+    else:
+        use_delta = bool(delta)
+    if use_delta and cg.n:
+        from repro.core.costmodel import delta as _delta
+        db = _delta.delta_base(cg, base, overlap=overlap)
+        return [db.run(ov) for ov in durations_list]
     out = []
     for overrides in durations_list:
         dur = _override(base, overrides) if overrides else base
@@ -636,7 +669,8 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
                      compute_derate: float = 0.6,
                      keep_timeline: bool = False,
                      coalesce: bool = True,
-                     memoize: bool = True) -> ClusterSimResult:
+                     memoize: bool = True,
+                     delta: object = "auto") -> ClusterSimResult:
     """Simulate one SPMD step on a (possibly heterogeneous) K-rank cluster.
 
     `rank_profiles` is a {rank: RankProfile} dict or a length-K sequence
@@ -665,6 +699,13 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
     order), and mismatched per-rank collective sequences raise
     ``ClusterProgramError``.  K identical graphs are bit-identical to this
     single-graph path (property-tested).
+
+    `delta` enables incremental re-simulation (``costmodel.delta``) on the
+    single-class, barrier-free case whose row is base-plus-overrides —
+    exactly the shape of uniform-override sweeps.  ``"auto"`` reuses an
+    already-memoized checkpointed base (zero cold cost), ``True`` builds
+    one, ``False`` disables.  Bit-identical either way; multi-class runs
+    always take the engine (not forwarded to the MPMD engine).
     """
     if not isinstance(g, chakra.Graph):
         from repro.core.costmodel import mpmd as _mpmd
@@ -760,15 +801,31 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
             for w in W:
                 barrier_map[w][nid] = b
 
-    # canonical program order of collectives (the compiled binary's launch
-    # order, taken from the nominal symmetric schedule) — only needed when
-    # some barrier actually spans classes
-    coll_order = (cg.canonical_coll_order(base, overlap=overlap)
-                  if any(barrier_map) else None)
+    # delta fast path (costmodel.delta): a single-class cluster never has
+    # cross-rank barriers (every instance maps to one class), and when its
+    # row is `base` itself (nominal hardware, see _rank_row) the run is
+    # exactly simulate()'s override path — resume from the checkpointed
+    # base run instead of replaying the whole schedule
+    results = None
+    if (delta is not False and n_classes == 1 and not keep_timeline
+            and not reprice
+            and profs.get(reps[0], default_prof).is_default()):
+        from repro.core.costmodel import delta as _delta
+        db = _delta.delta_base(cg, base, overlap=overlap,
+                               build=(delta is True))
+        if db is not None:
+            results, waits = [db.run(rdur.get(reps[0]) or {})], [0.0]
 
-    results, waits = cg.run_cluster(rows, barrier_map, coll_order=coll_order,
-                                    overlap=overlap,
-                                    keep_timeline=keep_timeline)
+    if results is None:
+        # canonical program order of collectives (the compiled binary's
+        # launch order, taken from the nominal symmetric schedule) — only
+        # needed when some barrier actually spans classes
+        coll_order = (cg.canonical_coll_order(base, overlap=overlap)
+                      if any(barrier_map) else None)
+        results, waits = cg.run_cluster(rows, barrier_map,
+                                        coll_order=coll_order,
+                                        overlap=overlap,
+                                        keep_timeline=keep_timeline)
 
     res = _assemble_cluster_result(K, colors, reps, results, waits)
     if ckey is not None:

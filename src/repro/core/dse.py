@@ -16,8 +16,13 @@ explore() walks a knob grid; work is reused at every layer of the stack:
     substrate (costmodel.compiled), so hardware-knob sweeps over one graph
     recompile nothing — per-trial cost is one event-loop replay;
   * ``explore(..., parallel=N)`` evaluates independent trials on a
-    concurrent.futures thread pool (trial evaluation releases no locks and
-    the caches are GIL-safe dict ops; results are identical to serial).
+    fork-based process pool (``repro.core.pool``): capture, pass
+    application and graph lowering happen serially in the parent, so
+    every forked worker inherits the warm caches copy-on-write and pays
+    only its own event loops.  Results are bit-identical to serial and
+    ordered deterministically (by trial index, never completion order).
+    Platforms without fork fall back to the old GIL-bound thread pool
+    with a one-shot RuntimeWarning.
 
 ``explore(strategy=...)`` is a thin adapter over the search subsystem
 (``repro.search``): "grid" keeps the exhaustive walk above bit-identically,
@@ -294,6 +299,24 @@ def evaluate(g: chakra.Graph, system, config: Dict,
 _gil_pool_warned = False
 
 
+def reset_pool_warning():
+    """Re-arm the one-shot thread-fallback warning (test hook)."""
+    global _gil_pool_warned
+    _gil_pool_warned = False
+
+
+def _warn_gil_fallback():
+    global _gil_pool_warned
+    if _gil_pool_warned:
+        return
+    warnings.warn(
+        "explore(parallel=N): no usable fork start method on this "
+        "platform — falling back to a thread pool, and trial evaluation "
+        "is pure Python, so the GIL serializes it; expect no speedup "
+        "over parallel=None.", RuntimeWarning, stacklevel=3)
+    _gil_pool_warned = True
+
+
 def explore(graph_for: Callable[[Dict], chakra.Graph], system,
             knobs: List[Knob], objective: str = "total_time",
             strategy: str = "grid", budget: int = 256,
@@ -309,9 +332,12 @@ def explore(graph_for: Callable[[Dict], chakra.Graph], system,
     strategy routes through ``repro.search.SearchRun`` with `seed` and
     returns its full-fidelity trials, budgeted to `budget` evaluations.
 
-    `parallel=N` (grid only) evaluates trials on N threads (identical
-    results, sorted the same; capture and pass application stay serial so
-    graph mutation never races).  `compute_derate`/`topo` accept
+    `parallel=N` evaluates trials on an N-worker fork process pool
+    (bit-identical results, sorted the same; capture, pass application
+    and lowering stay serial in the parent so workers inherit warm
+    caches and graph mutation never races).  For non-grid strategies it
+    becomes ``SearchRun(jobs=N)`` — one generation of pending asks
+    dispatched per pool batch.  `compute_derate`/`topo` accept
     trace-calibrated parameters (repro.trace.calibrate): pass
     ``cal.compute_derate`` and ``cal.topology`` so every trial prices
     against the fitted hardware.  Returns trials sorted by objective
@@ -328,31 +354,25 @@ def explore(graph_for: Callable[[Dict], chakra.Graph], system,
         from repro.search.run import SearchRun
         run = SearchRun(graph_for, system, knobs, strategy=strategy,
                         objectives=(objective,), budget=budget, seed=seed,
-                        compute_derate=compute_derate, topo=topo)
+                        compute_derate=compute_derate, topo=topo,
+                        jobs=parallel or 1)
         sr = run.run()
         trials = [Trial(t.config, t.result, t.objectives[objective])
                   for t in sr.full_trials]
         trials.sort(key=lambda t: s * t.objective)
         return trials
 
-    global _gil_pool_warned
-    if parallel and parallel > 1 and not _gil_pool_warned:
-        warnings.warn(
-            "explore(parallel=N) runs trials on a thread pool, and trial "
-            "evaluation is pure Python — the GIL serializes it, so expect "
-            "no speedup over parallel=None (measured in BENCH_sim.json). "
-            "A process-pool path needs picklable graph_for callables.",
-            RuntimeWarning, stacklevel=2)
-        _gil_pool_warned = True
     memo = GraphMemo(graph_for,
                      [k.name for k in knobs if k.layer == "workload"])
     cfgs = list(SearchSpace.from_knobs(knobs).grid_configs(limit=budget))
 
     # serial phase: capture per distinct workload, transform per distinct
-    # (workload, software) pair — both memoized, so the thread pool below
-    # only ever reads the caches (graph mutation never races)
+    # (workload, software) pair, lower each transformed graph — all
+    # memoized, so pool workers fork with warm caches (copy-on-write) and
+    # graph mutation never races
+    from repro.core.costmodel.compiled import compile_graph
     for cfg in cfgs:
-        memo.transformed(cfg)
+        compile_graph(memo.transformed(cfg))
 
     def run_trial(cfg: Dict) -> Trial:
         res = _simulate_cfg(memo.transformed(cfg), system, cfg,
@@ -360,8 +380,19 @@ def explore(graph_for: Callable[[Dict], chakra.Graph], system,
         return Trial(cfg, res, getattr(res, objective))
 
     if parallel and parallel > 1:
-        with ThreadPoolExecutor(max_workers=parallel) as ex:
-            trials = list(ex.map(run_trial, cfgs))
+        from repro.core import pool as _pool
+        if _pool.pool_available():
+            trials = []
+            for cfg, (t, err) in zip(cfgs, _pool.map_fork(run_trial, cfgs,
+                                                          jobs=parallel)):
+                if err is not None:
+                    raise RuntimeError(
+                        f"explore trial {cfg!r} failed in worker: {err}")
+                trials.append(t)
+        else:
+            _warn_gil_fallback()
+            with ThreadPoolExecutor(max_workers=parallel) as ex:
+                trials = list(ex.map(run_trial, cfgs))
     else:
         trials = [run_trial(cfg) for cfg in cfgs]
     trials.sort(key=lambda t: s * t.objective)

@@ -1,0 +1,101 @@
+"""Fork-based process pool for DSE trial evaluation.
+
+Why fork and not spawn: trial evaluators close over ``graph_for``
+callables, memoized graphs and system configs — lambdas and
+capture-derived closures that cannot cross a pickle boundary.  A forked
+child inherits the parent's whole heap copy-on-write, so the work table
+is published in a module global immediately before the pool starts and
+workers index into it; only ``(index, result, error)`` tuples cross the
+process boundary.  Results *are* pickled on the way back — SimResult /
+ClusterSimResult / Trial / CompiledGraph are plain data
+(tests/test_pickle.py keeps them that way).
+
+``map_fork`` degrades to an in-process serial map — same results, same
+ordering — when ``jobs <= 1``, the platform lacks a fork start method,
+or the caller is already a daemonic pool worker (nested pools are not a
+thing in ``multiprocessing``).  Output order is by item index, never by
+completion order, so parallel evaluation is deterministic.
+
+Caveat: forking a process whose threads hold locks is unsafe in
+general, and jax warns at fork time when it is loaded (its runtime is
+multithreaded).  The simulator/DSE workers forked here run pure-Python
+cost-model code and never touch jax, so the fork is benign in this
+package's entry points — but don't route jax-calling evaluators through
+``map_fork``; run those trials serially or in spawned processes.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+from typing import Callable, List, Optional, Sequence, Tuple
+
+# (fn, items) published for fork children; set only for the lifetime of
+# one map_fork call in the parent
+_WORK = None
+
+
+def pool_available() -> bool:
+    """True when this platform can run the fork pool (Linux/macOS CPython;
+    spawn-only platforms would need picklable callables, which graph_for
+    lambdas are not)."""
+    return hasattr(os, "fork") and "fork" in mp.get_all_start_methods()
+
+
+def cpu_count() -> int:
+    """Usable CPUs (affinity-aware where the OS exposes it)."""
+    try:
+        return len(os.sched_getaffinity(0))
+    except (AttributeError, OSError):
+        return os.cpu_count() or 1
+
+
+def _run_chunk(bounds: Tuple[int, int]) -> List[Tuple[int, object, Optional[str]]]:
+    lo, hi = bounds
+    fn, items = _WORK
+    out = []
+    for i in range(lo, hi):
+        try:
+            out.append((i, fn(items[i]), None))
+        except Exception as e:  # stringified: worker exceptions may not pickle
+            out.append((i, None, f"{type(e).__name__}: {e}"))
+    return out
+
+
+def map_fork(fn: Callable, items: Sequence, jobs: Optional[int] = None,
+             chunks_per_worker: int = 4) -> List[Tuple[object, Optional[str]]]:
+    """``[(result, error)]`` for ``fn`` over ``items``, in item order.
+
+    ``error`` is None on success; on an exception the slot carries
+    ``"ExcType: message"`` and result is None — the caller decides whether
+    to raise or record (SearchRun records failed trials, explore raises).
+    Items are dispatched as contiguous chunks (``chunks_per_worker`` per
+    worker) so per-task IPC amortizes; chunk completion order does not
+    affect output order.
+    """
+    items = list(items)
+    n = len(items)
+    serial = (jobs is None or jobs <= 1 or n <= 1 or not pool_available()
+              or mp.current_process().daemon)
+    if serial:
+        out = []
+        for it in items:
+            try:
+                out.append((fn(it), None))
+            except Exception as e:
+                out.append((None, f"{type(e).__name__}: {e}"))
+        return out
+    global _WORK
+    workers = min(int(jobs), n)
+    step = max(1, -(-n // (workers * max(1, chunks_per_worker))))
+    bounds = [(lo, min(n, lo + step)) for lo in range(0, n, step)]
+    results: List = [None] * n
+    _WORK = (fn, items)
+    try:
+        ctx = mp.get_context("fork")
+        with ctx.Pool(processes=workers) as p:
+            for part in p.imap_unordered(_run_chunk, bounds):
+                for i, val, err in part:
+                    results[i] = (val, err)
+    finally:
+        _WORK = None
+    return results

@@ -85,7 +85,8 @@ def monte_carlo(workload, system, rates: FaultRates,
                 horizon_slack: float = 4.0, rank_profiles=None,
                 algo: str = "auto", compute_derate: float = 0.6,
                 memoize: bool = True,
-                keep_trials: bool = False) -> MonteCarloResult:
+                keep_trials: bool = False,
+                jobs: Optional[int] = None) -> MonteCarloResult:
     """Expected fault metrics for `workload` under exponential `rates`.
 
     Deterministic in (inputs, seed): trial i samples its scenario with
@@ -94,7 +95,14 @@ def monte_carlo(workload, system, rates: FaultRates,
     Young/Daly validation uses this so every checkpoint interval faces the
     same failures).  Engine-level memoization makes repeated signatures
     free *across* trials too: MC cost scales with distinct profile
-    signatures, not trials x steps."""
+    signatures, not trials x steps.
+
+    `jobs=N` runs the horizon trials on a fork process pool
+    (``repro.core.pool``); trials aggregate in index order, so results
+    are bit-identical to serial.  Note the pool defeats cross-trial
+    engine memoization (each worker warms its own), so it pays off when
+    scenarios are signature-diverse — fail-stop-heavy rate mixes — and
+    not when most trials share a handful of profile signatures."""
     topo = topo or build_topology(system)
     is_graph = isinstance(workload, chakra.Graph)
     if not is_graph:
@@ -124,18 +132,29 @@ def monte_carlo(workload, system, rates: FaultRates,
         overhead = (n_steps // policy.interval + 1) * policy.write_cost
         horizon = horizon_slack * (n_steps * s0 + overhead)
 
-    results: List[HorizonResult] = []
-    pooled: Dict[float, int] = {}
-    for i in range(n_trials):
+    def _trial(i: int) -> HorizonResult:
         sc = (scenarios[i] if scenarios is not None
               else FaultScenario.sample(rates, horizon, K, seed=(seed, i)))
-        hr = simulate_horizon(
+        return simulate_horizon(
             workload, system, sc, policy, topo=topo,
             n_ranks=K if is_graph else None, n_steps=n_steps,
             wall_limit=wall_limit, spare_ranks=spare_ranks,
             rank_profiles=rank_profiles, algo=algo,
             compute_derate=compute_derate, memoize=memoize)
-        results.append(hr)
+
+    results: List[HorizonResult] = []
+    if jobs is not None and jobs > 1:
+        from repro.core import pool as _pool
+        for i, (hr, err) in enumerate(_pool.map_fork(_trial, range(n_trials),
+                                                     jobs=jobs)):
+            if err is not None:
+                raise RuntimeError(
+                    f"monte_carlo trial {i} failed in worker: {err}")
+            results.append(hr)
+    else:
+        results = [_trial(i) for i in range(n_trials)]
+    pooled: Dict[float, int] = {}
+    for hr in results:
         for s, c in hr.step_records:
             pooled[s] = pooled.get(s, 0) + c
 

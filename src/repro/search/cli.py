@@ -101,7 +101,7 @@ def _run_checked(args) -> int:
                     objectives=objectives, weights=weights,
                     budget=args.budget, wall_clock=args.wall_clock,
                     seed=args.seed, checkpoint=args.checkpoint,
-                    compute_derate=derate)
+                    compute_derate=derate, jobs=args.jobs)
     res = run.run()
     print(res.summary())
     if len(objectives) > 1:
@@ -173,6 +173,9 @@ def main(argv=None) -> int:
                     help=f"one of {available_strategies()}")
     rn.add_argument("--budget", type=int, default=64,
                     help="max evaluations, resumed trials included")
+    rn.add_argument("--jobs", type=int, default=1, metavar="N",
+                    help="evaluate each generation of up to N pending "
+                         "asks on a fork process pool (1 = serial)")
     rn.add_argument("--wall-clock", type=float, default=None,
                     help="max seconds of search time")
     rn.add_argument("--objectives", default="total_time",

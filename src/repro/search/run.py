@@ -14,13 +14,18 @@ budget, objective names + weights, and the space signature (budget included
 because it sizes init designs / populations / halving brackets, i.e. the
 ask sequence itself); every following line is
 one completed trial ``{index, config, objectives, objective, fidelity}``
-with JSON-native config values.  On resume the header must match and the
-trials are *replayed through the strategy*: the driver re-asks, checks each
-suggestion against the recorded config (asks are deterministic in seed +
-tell history, see ``strategies``), and tells the recorded result — landing
-the strategy in exactly the state an uninterrupted run would have reached,
-at zero simulation cost.  A partially-written last line (the kill case) is
-ignored.
+with JSON-native config values.  Trials evaluated as one ``jobs > 1``
+pool generation additionally carry ``gen`` — the trial index the
+generation started at — because a batched run asks the whole generation
+*before* telling any of it, and replay must reproduce that exact
+ask/tell interleaving for tell-dependent strategies.  On resume the
+header must match and the trials are *replayed through the strategy*:
+the driver re-asks generation by generation, checks each suggestion
+against the recorded config (asks are deterministic in seed + tell
+history, see ``strategies``), and tells the recorded result — landing
+the strategy in exactly the state an uninterrupted run would have
+reached, at zero simulation cost, regardless of the current ``jobs``
+value.  A partially-written last line (the kill case) is ignored.
 
 Fidelities (successive halving's cheap rungs):
   1.0  full evaluation — hetero knobs route to ``simulate_cluster``;
@@ -74,6 +79,8 @@ class SearchTrial:
     fidelity: float = FIDELITY_FULL
     result: object = None            # SimResult/ClusterSimResult (not resumed)
     error: Optional[str] = None      # "ExcType: message" for a failed trial
+    gen: Optional[int] = None        # start index of this trial's pool
+                                     # generation (None = serial singleton)
 
     @property
     def is_full(self) -> bool:
@@ -92,6 +99,8 @@ class SearchTrial:
              "fidelity": self.fidelity}
         if self.error is not None:
             d["error"] = self.error
+        if self.gen is not None:
+            d["gen"] = self.gen
         return d
 
 
@@ -204,7 +213,16 @@ class SearchRun:
     spent in ``run()``.  `checkpoint` names a JSONL file to append trials
     to and resume from.  `system`/`compute_derate`/`topo` accept a
     trace-calibrated model (``repro.trace.calibrate`` /
-    ``load_system_json``) so searches price against fitted hardware."""
+    ``load_system_json``) so searches price against fitted hardware.
+
+    `jobs=N` evaluates each generation of up to N pending asks on a fork
+    process pool (``repro.core.pool``): the strategy is asked until it
+    has no suggestion or the generation is full, the batch fans out, and
+    tells happen in ask order — deterministic and checkpoint-replayable
+    (see the ``gen`` record field).  Tell-independent strategies (grid,
+    random) produce the exact serial trial sequence; tell-dependent ones
+    (bayesian, evolutionary) become batch-suggestion searches, the
+    standard parallel-BO trade of model freshness for throughput."""
 
     def __init__(self, graph_for: Callable[[Dict], chakra.Graph], system,
                  space, strategy: str = "random",
@@ -215,7 +233,8 @@ class SearchRun:
                  seed: int = 0, checkpoint: Optional[str] = None,
                  compute_derate: float = 0.6,
                  topo: Optional[Topology] = None,
-                 strategy_opts: Optional[Dict] = None):
+                 strategy_opts: Optional[Dict] = None,
+                 jobs: int = 1):
         self.graph_for = graph_for
         self.system = system
         self.space = space if isinstance(space, SearchSpace) \
@@ -230,6 +249,7 @@ class SearchRun:
                              f"{len(self.objective_names)} objectives")
         self.budget = budget
         self.wall_clock = wall_clock
+        self.jobs = max(1, int(jobs or 1))
         self.seed = int(seed)
         self.checkpoint = checkpoint
         self.compute_derate = compute_derate
@@ -270,6 +290,39 @@ class SearchRun:
                     res, cfg, int(cfg.get("cluster_ranks") or topo.n_ranks))
         vals = objmod.trial_objectives(res, self.objective_names, graph=g2)
         return res, vals
+
+    def _evaluate_batch(self, gen) -> List[Tuple]:
+        """``[(result, objectives, error)]`` for one generation of asks, in
+        ask order.  A multi-trial generation fans out on the fork pool
+        when the platform has one: the parent captures/transforms/lowers
+        every config serially first, so workers inherit the warm caches
+        copy-on-write and pay only their own event loops.  The serial
+        path (jobs=1, single-trial generations, no fork) produces
+        identical triples, including the error-string format."""
+        if len(gen) > 1:
+            from repro.core import pool as _pool
+            if _pool.pool_available():
+                from repro.core.costmodel.compiled import compile_graph
+                for cfg, _ in gen:
+                    try:
+                        compile_graph(self._memo.transformed(cfg))
+                    except Exception:  # noqa: BLE001 — surfaced per-trial
+                        pass           # by the worker below
+                out = []
+                for val, err in _pool.map_fork(
+                        lambda s: self._evaluate(s[0], s[1]), gen,
+                        jobs=len(gen)):
+                    out.append((None, {}, err) if err is not None
+                               else (val[0], val[1], None))
+                return out
+        out = []
+        for cfg, fid in gen:
+            try:
+                res, vals = self._evaluate(cfg, fid)
+                out.append((res, vals, None))
+            except Exception as e:  # noqa: BLE001 — any bad config
+                out.append((None, {}, f"{type(e).__name__}: {e}"))
+        return out
 
     def _scalarize(self, vals: Dict) -> float:
         if self._ref is None:
@@ -330,37 +383,59 @@ class SearchRun:
         determinism of ask() given the tell history makes this land in the
         exact state an uninterrupted run would be in.  Failed records
         (``error`` set) replay their recorded penalty objective — the same
-        tell the live loop issued."""
+        tell the live loop issued.
+
+        Records sharing a ``gen`` tag were one pool generation: the live
+        loop asked them all before telling any, so replay reproduces that
+        ask/tell interleaving (it matters for tell-dependent strategies
+        — a bayesian ask after the tells would propose different
+        configs).  Records without the tag are singleton generations, the
+        serial format — old checkpoints replay unchanged."""
         out = []
-        for i, rec in enumerate(records):
-            self._check_record(rec, i)
-            sug = self.strategy.ask()
-            if sug is None:
-                raise ValueError(
-                    f"{self.checkpoint}: strategy exhausted after "
-                    f"{len(out)} trials but checkpoint has "
-                    f"{len(records)} — space or strategy code changed?")
-            cfg, fid = sug
-            if _json_cfg(cfg) != rec["config"] or \
-                    abs(fid - rec.get("fidelity", FIDELITY_FULL)) > 1e-12:
-                raise ValueError(
-                    f"{self.checkpoint}: replay diverged at trial "
-                    f"{len(out)}: strategy proposed "
-                    f"{_json_cfg(cfg)}@{fid}, checkpoint recorded "
-                    f"{rec['config']}@{rec.get('fidelity')} — seed, space "
-                    "or strategy code changed since the checkpoint was "
-                    "written")
-            err = rec.get("error")
-            vals = rec.get("objectives") or {}
-            if self._ref is None and err is None:
-                # the reference point is the first *successful* trial, both
-                # live and on replay — failed trials never set it
-                self._ref = dict(vals)
-            self.strategy.tell(cfg, rec["objective"], vals, fid)
-            out.append(SearchTrial(index=len(out), config=dict(cfg),
-                                   objectives=dict(vals),
-                                   objective=rec["objective"],
-                                   fidelity=fid, result=None, error=err))
+        i = 0
+        while i < len(records):
+            gtag = records[i].get("gen") \
+                if isinstance(records[i], dict) else None
+            j = i + 1
+            while (gtag is not None and j < len(records)
+                   and isinstance(records[j], dict)
+                   and records[j].get("gen") == gtag):
+                j += 1
+            batch = records[i:j]
+            sugs = []
+            for k, rec in enumerate(batch):
+                self._check_record(rec, i + k)
+                sug = self.strategy.ask()
+                if sug is None:
+                    raise ValueError(
+                        f"{self.checkpoint}: strategy exhausted after "
+                        f"{len(out) + len(sugs)} trials but checkpoint has "
+                        f"{len(records)} — space or strategy code changed?")
+                cfg, fid = sug
+                if _json_cfg(cfg) != rec["config"] or \
+                        abs(fid - rec.get("fidelity", FIDELITY_FULL)) > 1e-12:
+                    raise ValueError(
+                        f"{self.checkpoint}: replay diverged at trial "
+                        f"{len(out) + len(sugs)}: strategy proposed "
+                        f"{_json_cfg(cfg)}@{fid}, checkpoint recorded "
+                        f"{rec['config']}@{rec.get('fidelity')} — seed, "
+                        "space or strategy code changed since the "
+                        "checkpoint was written")
+                sugs.append(sug)
+            for (cfg, fid), rec in zip(sugs, batch):
+                err = rec.get("error")
+                vals = rec.get("objectives") or {}
+                if self._ref is None and err is None:
+                    # the reference point is the first *successful* trial,
+                    # both live and on replay — failed trials never set it
+                    self._ref = dict(vals)
+                self.strategy.tell(cfg, rec["objective"], vals, fid)
+                out.append(SearchTrial(index=len(out), config=dict(cfg),
+                                       objectives=dict(vals),
+                                       objective=rec["objective"],
+                                       fidelity=fid, result=None, error=err,
+                                       gen=gtag))
+            i = j
         return out
 
     # -- driver --------------------------------------------------------------
@@ -398,28 +473,38 @@ class SearchRun:
             while self.budget is None or len(trials) < self.budget:
                 if deadline is not None and time.monotonic() >= deadline:
                     break
-                sug = self.strategy.ask()
-                if sug is None:
+                # one generation: up to `jobs` pending asks.  ask() may
+                # return None mid-generation with tells outstanding (a
+                # halving rung waiting on its own results) — that only
+                # ends the generation; exhaustion is None on an *empty*
+                # generation.
+                cap = self.jobs
+                if self.budget is not None:
+                    cap = min(cap, self.budget - len(trials))
+                gen: List[Tuple[Dict, float]] = []
+                while len(gen) < cap:
+                    sug = self.strategy.ask()
+                    if sug is None:
+                        break
+                    gen.append(sug)
+                if not gen:
                     break
-                cfg, fid = sug
-                try:
-                    res, vals = self._evaluate(cfg, fid)
-                    err = None
-                    scal = self._scalarize(vals)
-                except Exception as e:  # noqa: BLE001 — any bad config
-                    res, vals = None, {}
-                    err = f"{type(e).__name__}: {e}"
-                    scal = FAILED_OBJECTIVE
-                trial = SearchTrial(index=len(trials), config=dict(cfg),
-                                    objectives=vals, objective=scal,
-                                    fidelity=fid, result=res, error=err)
-                self.strategy.tell(cfg, scal, vals, fid)
-                trials.append(trial)
-                n_new += 1
-                if ckpt is not None:
-                    ckpt.write(json.dumps(trial.as_dict(), sort_keys=True)
-                               + "\n")
-                    ckpt.flush()
+                gen_tag = len(trials) if len(gen) > 1 else None
+                for (cfg, fid), (res, vals, err) in zip(
+                        gen, self._evaluate_batch(gen)):
+                    scal = self._scalarize(vals) if err is None \
+                        else FAILED_OBJECTIVE
+                    trial = SearchTrial(index=len(trials), config=dict(cfg),
+                                        objectives=vals, objective=scal,
+                                        fidelity=fid, result=res, error=err,
+                                        gen=gen_tag)
+                    self.strategy.tell(cfg, scal, vals, fid)
+                    trials.append(trial)
+                    n_new += 1
+                    if ckpt is not None:
+                        ckpt.write(json.dumps(trial.as_dict(),
+                                              sort_keys=True) + "\n")
+                        ckpt.flush()
         finally:
             if ckpt is not None:
                 ckpt.close()

@@ -1,0 +1,164 @@
+"""Delta re-simulation (costmodel.delta): suffix-resume results are
+bit-identical to full re-runs — the property the whole optimization
+rests on.  Randomized DAGs x random perturbation subsets (including the
+zero-changed and all-changed edges), every (overlap, keep_timeline)
+mode, plus the simulate_batch / simulate / simulate_cluster routing."""
+import random
+
+import pytest
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.costmodel import (DeltaBase, build_topology, compile_graph,
+                                  delta_base, simulate, simulate_batch,
+                                  simulate_cluster)
+from repro.core.costmodel.simulator import _override
+from test_compiled_sim import rand_graph
+
+SYS = SystemConfig(chips=16)
+TOPO = build_topology(SYS)
+
+FIELDS = ("total_time", "compute_time", "comm_time", "exposed_comm",
+          "peak_bytes", "n_nodes")
+
+
+def assert_identical(got, want):
+    for f in FIELDS:
+        assert getattr(got, f) == getattr(want, f), \
+            f"{f}: {getattr(got, f)!r} != {getattr(want, f)!r}"
+    assert got.timeline == want.timeline
+
+
+def perturb(rng: random.Random, base, k: int):
+    """k random rows changed by random factors (occasionally to zero)."""
+    picks = rng.sample(range(len(base)), k)
+    return {nid: (0.0 if rng.random() < 0.1
+                  else base[nid] * rng.uniform(0.3, 3.0))
+            for nid in picks}
+
+
+def test_delta_bit_identical_on_randomized_dags():
+    """>= 50 seeded random DAGs x random duration-subset perturbations:
+    makespan, per-node finish times (spans), exposed comm and the full
+    timeline all match the full re-run bit for bit."""
+    checked = 0
+    for seed in range(52):
+        rng = random.Random(seed)
+        n = rng.randint(20, 120)
+        g = rand_graph(rng, n)
+        cg = compile_graph(g)
+        base = cg.durations(SYS, TOPO, "auto", 0.6)
+        overlap = seed % 3 != 0
+        db = DeltaBase(cg, base, overlap=overlap, keep_timeline=True,
+                       n_checkpoints=rng.choice([1, 3, 16, 10 ** 6]))
+        # the base run itself is bit-identical to a plain run()
+        assert_identical(db.result, cg.run(base, overlap=overlap,
+                                           keep_timeline=True))
+        for k in {0, 1, rng.randint(1, n), n}:     # incl. zero/all-changed
+            ov = perturb(rng, base, k)
+            want = cg.run(_override(base, ov), overlap=overlap,
+                          keep_timeline=True)
+            assert_identical(db.run(ov), want)
+            checked += 1
+        # per-node finish times of the base run match its own spans
+        ends = {s.nid: s.end for s in db.result.spans()}
+        assert all(db.finish[nid] == e for nid, e in ends.items())
+    assert checked >= 200
+
+
+def test_delta_noop_override_is_base_copy():
+    """Overrides equal to base values (or out of range) are not changes —
+    same semantics as simulator._override — and return a fresh result."""
+    rng = random.Random(7)
+    g = rand_graph(rng, 60)
+    cg = compile_graph(g)
+    base = cg.durations(SYS, TOPO, "auto", 0.6)
+    db = DeltaBase(cg, base)
+    same = {3: base[3], 10: base[10], -1: 99.0, cg.n + 5: 99.0}
+    assert db.earliest_decision(same) == cg.n
+    r1, r2 = db.run(same), db.run({})
+    assert r1 == r2 == db.result
+    assert r1 is not db.result and r1 is not r2
+
+
+def test_delta_base_memo_and_peek():
+    g = rand_graph(random.Random(11), 40)
+    cg = compile_graph(g)
+    base = cg.durations(SYS, TOPO, "auto", 0.6)
+    assert delta_base(cg, base, build=False) is None      # cold peek: None
+    db = delta_base(cg, base)
+    assert delta_base(cg, base) is db                     # memo hit
+    assert delta_base(cg, base, build=False) is db        # warm peek
+    assert delta_base(cg, base, overlap=False) is not db  # keyed on mode
+
+
+def test_simulate_batch_delta_modes_identical():
+    rng = random.Random(21)
+    g = rand_graph(rng, 80)
+    cg = compile_graph(g)
+    base = cg.durations(SYS, TOPO, "auto", 0.6)
+    ovs = [None, {}, perturb(rng, base, 1), perturb(rng, base, 9),
+           perturb(rng, base, len(base))]
+    full = simulate_batch(g, SYS, ovs, TOPO, delta=False)
+    for mode in ("auto", True):
+        got = simulate_batch(g, SYS, ovs, TOPO, delta=mode)
+        assert got == full, mode
+
+
+def test_simulate_reuses_batch_delta_base():
+    """simulate(durations=...) picks up a base an earlier simulate_batch
+    memoized — and stays bit-identical to the delta-off path."""
+    rng = random.Random(33)
+    g = rand_graph(rng, 70)
+    cg = compile_graph(g)
+    base = cg.durations(SYS, TOPO, "auto", 0.6)
+    ov = perturb(rng, base, 5)
+    cold = simulate(g, SYS, TOPO, durations=ov)     # no base memoized yet
+    simulate_batch(g, SYS, [ov, perturb(rng, base, 3)], TOPO)
+    assert delta_base(cg, base, build=False) is not None
+    warm = simulate(g, SYS, TOPO, durations=ov)     # delta="auto" hits it
+    off = simulate(g, SYS, TOPO, durations=ov, delta=False)
+    assert cold == warm == off
+
+
+def test_simulate_cluster_delta_single_class():
+    """Uniform rank overrides coalesce to one class with no barriers —
+    the delta-eligible shape; forced-on delta matches the engine."""
+    rng = random.Random(41)
+    g = rand_graph(rng, 60)
+    cg = compile_graph(g)
+    base = cg.durations(SYS, TOPO, "auto", 0.6)
+    ov = perturb(rng, base, 6)
+    rd = {r: ov for r in range(8)}
+    want = simulate_cluster(g, SYS, TOPO, n_ranks=8, rank_durations=rd,
+                            delta=False, memoize=False)
+    got = simulate_cluster(g, SYS, TOPO, n_ranks=8, rank_durations=rd,
+                           delta=True, memoize=False)
+    assert got.step_time == want.step_time
+    assert [r.total_time for r in got.results] \
+        == [r.total_time for r in want.results]
+    assert got.results[0] == want.results[0]
+    assert got.class_barrier_wait == want.class_barrier_wait
+
+
+def test_simulate_cluster_delta_skips_multi_class():
+    """A straggler rank splits classes; delta=True must fall through to
+    the barrier engine (and still match the delta-off run)."""
+    rng = random.Random(43)
+    g = rand_graph(rng, 60)
+    cg = compile_graph(g)
+    base = cg.durations(SYS, TOPO, "auto", 0.6)
+    rd = {0: {nid: base[nid] * 2.0 for nid in range(0, cg.n, 3)}}
+    want = simulate_cluster(g, SYS, TOPO, n_ranks=8, rank_durations=rd,
+                            delta=False, memoize=False)
+    got = simulate_cluster(g, SYS, TOPO, n_ranks=8, rank_durations=rd,
+                           delta=True, memoize=False)
+    assert got.step_time == want.step_time
+    assert got.class_barrier_wait == want.class_barrier_wait
+
+
+def test_delta_rejects_wrong_length():
+    g = rand_graph(random.Random(5), 20)
+    cg = compile_graph(g)
+    with pytest.raises(ValueError, match="entries"):
+        DeltaBase(cg, [1.0] * (cg.n - 1))

@@ -1,0 +1,151 @@
+"""Process-pool DSE: map_fork ordering/error contracts, explore's pool
+path vs serial, SearchRun generation batching + gen-tagged checkpoint
+replay, and monte_carlo trial fan-out — all bit-identical to serial."""
+import os
+import random
+
+import pytest
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra, dse, pool
+from repro.search.run import SearchRun
+from test_compiled_sim import rand_graph
+
+SYS = SystemConfig(chips=16)
+
+
+def simple_graph():
+    g = chakra.Graph()
+    a = g.add("a", chakra.COMP, flops=1e9, bytes=1e7)
+    b = g.add("c", chakra.COMM_COLL, deps=[a], comm_kind="all-reduce",
+              comm_bytes=1e6, group=list(range(8)), out_bytes=8.0)
+    g.add("b", chakra.COMP, deps=[b], flops=2e9, bytes=1e7)
+    return g
+
+
+KNOBS = [dse.Knob("link_bw", [25e9, 50e9, 100e9, 200e9], layer="hardware"),
+         dse.Knob("prefetch", [None, 2], layer="software")]
+
+
+# -- map_fork ----------------------------------------------------------------
+
+def _square_or_boom(x):
+    if x == 5:
+        raise ValueError(f"boom {x}")
+    return x * x
+
+
+def test_map_fork_order_and_errors():
+    """Results come back in item order (never completion order), with
+    per-item stringified errors; the serial fallback is byte-identical."""
+    want = [(None, "ValueError: boom 5") if i == 5 else (i * i, None)
+            for i in range(11)]
+    assert pool.map_fork(_square_or_boom, range(11), jobs=3) == want
+    assert pool.map_fork(_square_or_boom, range(11), jobs=1) == want
+
+
+def test_map_fork_inherits_closures():
+    """Fork workers see the parent's heap — the whole reason the pool is
+    fork-based: graph_for lambdas and memo caches never cross a pickle
+    boundary."""
+    big = {"k": [10, 20, 30]}
+    got = pool.map_fork(lambda i: big["k"][i] + i, range(3), jobs=2)
+    assert got == [(10, None), (21, None), (32, None)]
+
+
+def test_map_fork_empty_and_single():
+    assert pool.map_fork(lambda x: x, [], jobs=4) == []
+    assert pool.map_fork(lambda x: x + 1, [41], jobs=4) == [(42, None)]
+
+
+# -- explore -----------------------------------------------------------------
+
+def test_explore_pool_matches_serial_and_raises():
+    g = rand_graph(random.Random(9), 40)
+    serial = dse.explore(lambda cfg: g, SYS, KNOBS)
+    pooled = dse.explore(lambda cfg: g, SYS, KNOBS, parallel=4)
+    assert [t.config for t in pooled] == [t.config for t in serial]
+    assert [t.objective for t in pooled] == [t.objective for t in serial]
+
+    # an evaluation-time error (invalid pipeline split) surfaces from the
+    # worker as RuntimeError naming the config and the original error
+    bad = [dse.Knob("num_stages", [1, 64], layer="workload")]
+    with pytest.raises(RuntimeError, match="failed in worker.*exceeds"):
+        dse.explore(lambda cfg: g, SYS, bad, parallel=4)
+
+
+# -- SearchRun jobs ----------------------------------------------------------
+
+def test_searchrun_jobs_identical_for_tell_independent():
+    """grid/random asks don't depend on tells, so a batched run IS the
+    serial trial sequence, objectives and all."""
+    g = simple_graph()
+    for strat in ("grid", "random"):
+        r1 = SearchRun(lambda cfg: g, SYS, KNOBS, strategy=strat, budget=8,
+                       seed=3, jobs=1).run()
+        rn = SearchRun(lambda cfg: g, SYS, KNOBS, strategy=strat, budget=8,
+                       seed=3, jobs=3).run()
+        assert [t.config for t in rn.trials] == [t.config for t in r1.trials]
+        assert [t.objective for t in rn.trials] \
+            == [t.objective for t in r1.trials]
+        assert [t.gen for t in rn.trials][:6] == [0, 0, 0, 3, 3, 3]
+        assert all(t.gen is None for t in r1.trials)
+
+
+@pytest.mark.parametrize("strategy", ["bayesian", "evolutionary", "halving"])
+def test_searchrun_batched_checkpoint_replays(tmp_path, strategy):
+    """A jobs>1 checkpoint resumes under any jobs value: gen tags let
+    replay reproduce the ask-all-then-tell-all interleaving, so even
+    tell-dependent strategies verify every recorded config."""
+    g = simple_graph()
+    ck = str(tmp_path / "ck.jsonl")
+    first = SearchRun(lambda cfg: g, SYS, KNOBS, strategy=strategy,
+                      budget=8, seed=1, checkpoint=ck, jobs=3).run()
+    assert first.n_evaluated == len(first.trials)
+    for jobs in (1, 3):
+        again = SearchRun(lambda cfg: g, SYS, KNOBS, strategy=strategy,
+                          budget=8, seed=1, checkpoint=ck, jobs=jobs).run()
+        assert again.n_resumed == len(first.trials)
+        assert [t.config for t in again.trials] \
+            == [t.config for t in first.trials]
+        assert [t.gen for t in again.trials] == [t.gen for t in first.trials]
+
+
+def test_searchrun_batch_records_failures(tmp_path):
+    """A config that explodes inside a pool worker is recorded as a failed
+    trial (error string + penalty objective), not a dead sweep — the
+    exact serial semantics."""
+    g = simple_graph()
+
+    def graph_for(cfg):
+        if cfg.get("arch") == "bad":
+            raise RuntimeError("no such arch")
+        return g
+
+    knobs = KNOBS + [dse.Knob("arch", ["ok", "bad"], layer="workload")]
+    ck = str(tmp_path / "ck.jsonl")
+    res = SearchRun(graph_for, SYS, knobs, strategy="grid", budget=16,
+                    seed=0, checkpoint=ck, jobs=4).run()
+    failed = res.failed_trials
+    assert len(failed) == 8
+    assert all("no such arch" in t.error for t in failed)
+    assert all(t.objective == 1e6 for t in failed)
+    resumed = SearchRun(graph_for, SYS, knobs, strategy="grid", budget=16,
+                        seed=0, checkpoint=ck, jobs=1).run()
+    assert resumed.n_resumed == 16
+
+
+# -- monte_carlo -------------------------------------------------------------
+
+def test_monte_carlo_jobs_bit_identical():
+    from repro.faults.montecarlo import monte_carlo
+    from repro.faults.scenario import CheckpointPolicy, FaultRates
+
+    g = simple_graph()
+    rates = FaultRates(fail_rate=2e-4, fail_downtime=2.0,
+                       slowdown_rate=5e-4)
+    pol = CheckpointPolicy(interval=10, write_cost=0.5, restore_cost=1.0)
+    r1 = monte_carlo(g, SYS, rates, pol, n_steps=40, n_trials=6, seed=4)
+    rj = monte_carlo(g, SYS, rates, pol, n_steps=40, n_trials=6, seed=4,
+                     jobs=3)
+    assert r1.as_dict() == rj.as_dict()

@@ -1,0 +1,125 @@
+"""Process-pool serialization contract: CompiledGraph / RowSpec /
+MPMDProgram / Trial survive pickle round-trips with bit-identical run()
+results, dropped volatile caches, and preserved memo-key semantics —
+what ``repro.core.pool`` workers rely on when shipping results back."""
+import pickle
+import random
+
+import pytest
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.costmodel import (MPMDProgram, build_topology, compile_graph,
+                                  simulate_cluster)
+from repro.core.costmodel.compiled import RowSpec, run_rows
+from repro.core.dse import Knob, Trial, explore
+
+SYS = SystemConfig(chips=16)
+TOPO = build_topology(SYS)
+
+
+def fsdp_stack(layers: int, width: int = 4,
+               scale: float = 1.0) -> chakra.Graph:
+    g = chakra.Graph()
+    prev = []
+    for i in range(layers):
+        c = g.add(f"comp{i}", chakra.COMP, deps=prev,
+                  flops=(i + 1) * 1e9 * scale, bytes=(width + i) * 1e6)
+        a = g.add(f"ar{i}", chakra.COMM_COLL, deps=[c],
+                  comm_kind="all-reduce", comm_bytes=(i + 1) * 1e6,
+                  group=list(range(16)), out_bytes=8.0)
+        prev = [c, a]
+    return g
+
+
+def roundtrip(obj):
+    return pickle.loads(pickle.dumps(obj))
+
+
+def test_compiled_graph_roundtrip_bit_identical():
+    g = fsdp_stack(12)
+    cg = compile_graph(g)
+    dur = cg.durations(SYS, TOPO, "auto", 0.6)
+    want = cg.run(dur, keep_timeline=True)
+    cg2 = roundtrip(cg)
+    dur2 = cg2.durations(SYS, TOPO, "auto", 0.6)
+    assert dur2 == dur
+    assert cg2.run(dur2, keep_timeline=True) == want
+    assert cg2.run(dur2, overlap=False) == cg.run(dur, overlap=False)
+
+
+def test_compiled_graph_roundtrip_drops_volatile_caches():
+    """Workers re-fill their own memo caches; the pickled payload ships
+    none of the parent's (smaller payloads, no id()-keyed staleness)."""
+    from repro.core.costmodel.simulator import simulate
+
+    g = fsdp_stack(6)
+    cg = compile_graph(g)
+    simulate(g, SYS, TOPO)                       # warm result + dur caches
+    cg.canonical_coll_order(cg.durations(SYS, TOPO, "auto", 0.6))
+    assert cg._dur_cache and cg._result_cache
+    cg2 = roundtrip(cg)
+    for cache in ("_dur_cache", "_result_cache", "_canon_cache",
+                  "_delta_cache"):
+        assert getattr(cg2, cache) == {}, cache
+    # memo-KEY semantics survive: config_key is repr-based, not identity-
+    # based, so the unpickled copy keys the same config identically
+    assert (cg2.config_key(SYS, TOPO, "auto", 0.6)
+            == cg.config_key(SYS, TOPO, "auto", 0.6))
+
+
+def test_rowspec_roundtrip_preserves_barrier_sharing():
+    """A barrier is one shared mutable list across member rows; pickling
+    the row list together must keep it shared (pickle's reference
+    preservation) or the cluster engine would deadlock."""
+    g = fsdp_stack(5)
+    cg = compile_graph(g)
+    base = cg.durations(SYS, TOPO, "auto", 0.6)
+    slow = [d * 1.5 for d in base]
+    coll = list(cg._coll_ids)
+    assert coll, "stack must have collectives"
+    order = cg.canonical_coll_order(base)
+    bmap0, bmap1 = {}, {}
+    for nid in coll:
+        bar = [2, 0.0, (0, 1), max(base[nid], slow[nid]), {},
+               {0: nid, 1: nid}]
+        bmap0[nid] = bar
+        bmap1[nid] = bar
+    rows = [RowSpec(cg, base, bmap0, order),
+            RowSpec(cg, slow, bmap1, order)]
+
+    # pickle BEFORE running: the engine consumes barrier state in place
+    rows2 = roundtrip(rows)
+    for nid in coll:
+        assert rows2[0].bmap[nid] is rows2[1].bmap[nid]
+        assert rows2[0].bmap[nid] is not rows[0].bmap[nid]
+    assert rows2[0].cg is rows2[1].cg             # shared graph too
+    assert run_rows(rows2) == run_rows(rows)
+
+
+def test_mpmd_program_roundtrip():
+    # same collective program per rank (an MPMD contract), different compute
+    ga, gb = fsdp_stack(4), fsdp_stack(4, scale=2.5)
+    prog = MPMDProgram([ga, ga, gb, gb])
+    want = simulate_cluster(prog, SYS, TOPO)
+    prog.meta["x"] = 1
+    prog2 = roundtrip(prog)
+    assert prog2.n_ranks == 4 and prog2.n_graphs == 2
+    assert prog2.graph_for(0) is prog2.graph_for(1)   # dedup survives
+    assert prog2._result_cache == {}                  # volatile memo dropped
+    assert prog2.meta == {"x": 1}
+    got = simulate_cluster(prog2, SYS, TOPO)
+    assert got.step_time == want.step_time
+    assert [r.total_time for r in got.results] \
+        == [r.total_time for r in want.results]
+
+
+def test_trial_roundtrip():
+    g = fsdp_stack(4)
+    knobs = [Knob("prefetch", [None, 2])]
+    t = explore(lambda cfg: g, SYS, knobs)[0]
+    t2 = roundtrip(t)
+    assert isinstance(t2, Trial)
+    assert t2.config == t.config and t2.objective == t.objective
+    assert t2.result.total_time == t.result.total_time
+    assert t2.result == t.result
