@@ -1,9 +1,13 @@
 """Benchmark regression gate: fail if BENCH_sim speedup ratios, the trace
 subsystem's round-trip/calibration figures, the search subsystem's
 sample-efficiency figures, the MPMD engine's exactness/coalescing figures,
-the fault subsystem's segmented-resim/Young-Daly figures or the
-parallel/delta DSE figures fall below the floors recorded in
-benchmarks/thresholds.json.
+the fault subsystem's segmented-resim/Young-Daly figures, the
+parallel/delta DSE figures or the obs instrumentation's
+overhead/blame-identity figures fall outside the bounds recorded in
+benchmarks/thresholds.json.  A plain-number threshold is a floor;
+``{"max": v}`` is a ceiling (the obs overhead percentage gates from
+above).  Every gated key is printed as one PASS/FAIL/SKIP table row and
+the table is written to artifacts/bench/BENCH_summary.json.
 
 Usage (the verify recipe's perf gate):
 
@@ -13,6 +17,7 @@ Usage (the verify recipe's perf gate):
     PYTHONPATH=.:src python -m benchmarks.mpmd_pipeline --smoke
     PYTHONPATH=.:src python -m benchmarks.fault_scenarios --smoke
     PYTHONPATH=.:src python -m benchmarks.parallel_dse --smoke
+    PYTHONPATH=.:src python -m benchmarks.obs_overhead --smoke
     PYTHONPATH=.:src python -m benchmarks.check_regression
 
 or in one shot::
@@ -60,35 +65,71 @@ DEFAULT_FAULT_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
                                    "BENCH_fault.json")
 DEFAULT_PARALLEL_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
                                       "BENCH_parallel.json")
+DEFAULT_OBS_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
+                                 "BENCH_obs.json")
 DEFAULT_THRESH = os.path.join(HERE, "thresholds.json")
 
 
-def check(bench: dict, thresholds: dict) -> list:
-    """Return a list of (key, measured, floor) violations."""
-    bad = []
+def _within(measured: float, thr) -> bool:
+    """A plain number is a floor (measured >= thr); a ``{"max": v}`` /
+    ``{"min": v}`` dict bounds from above / below (ceilings gate e.g. the
+    obs overhead percentage, where *small* is good)."""
+    if isinstance(thr, dict):
+        if "max" in thr and measured > thr["max"]:
+            return False
+        if "min" in thr and measured < thr["min"]:
+            return False
+        return True
+    return measured >= thr
 
-    def one(section: str, key: str, floor: float, measured):
-        if measured is None:
-            bad.append((f"{section}.{key}", None, floor))
-        elif measured < floor:
-            bad.append((f"{section}.{key}", measured, floor))
+
+def evaluate(bench: dict, thresholds: dict) -> list:
+    """Every gated (key, measured, threshold, status) row, status in
+    PASS / FAIL / SKIP — the consolidated table ``main`` renders and
+    writes to BENCH_summary.json."""
+    rows = []
+
+    def one(section: str, key: str, thr, measured, skip: bool = False):
+        k = f"{section}.{key}"
+        if skip:
+            rows.append((k, measured, thr, "SKIP"))
+        elif measured is None or not _within(measured, thr):
+            rows.append((k, measured, thr, "FAIL"))
+        else:
+            rows.append((k, measured, thr, "PASS"))
 
     sim_floors = thresholds.get("simulate", {})
     for size, row in sorted(bench.get("simulate", {}).items()):
-        for key, floor in sim_floors.items():
-            one(f"simulate.{size}", key, floor, row.get(key))
+        for key, thr in sim_floors.items():
+            one(f"simulate.{size}", key, thr, row.get(key))
     for section in ("straggler", "explore", "trace", "search", "mpmd",
-                    "fault"):
-        for key, floor in thresholds.get(section, {}).items():
-            one(section, key, floor, bench.get(section, {}).get(key))
+                    "fault", "obs"):
+        for key, thr in thresholds.get(section, {}).items():
+            one(section, key, thr, bench.get(section, {}).get(key))
     par = bench.get("parallel", {})
-    for key, floor in thresholds.get("parallel", {}).items():
-        if key.startswith("pool_speedup") and par.get("cpus", 1) < 4:
-            # a < 4-core box cannot show process-pool scaling; the
-            # identity and delta floors still apply unconditionally
-            continue
-        one("parallel", key, floor, par.get(key))
-    return bad
+    for key, thr in thresholds.get("parallel", {}).items():
+        # a < 4-core box cannot show process-pool scaling; the identity
+        # and delta floors still apply unconditionally
+        skip = key.startswith("pool_speedup") and par.get("cpus", 1) < 4
+        one("parallel", key, thr, par.get(key), skip=skip)
+    return rows
+
+
+def check(bench: dict, thresholds: dict) -> list:
+    """Return a list of (key, measured, threshold) violations."""
+    return [(k, m, thr) for k, m, thr, st in evaluate(bench, thresholds)
+            if st == "FAIL"]
+
+
+def _fmt_thr(thr) -> str:
+    if isinstance(thr, dict):
+        parts = []
+        if "min" in thr:
+            parts.append(f">= {thr['min']:g}")
+        if "max" in thr:
+            parts.append(f"<= {thr['max']:g}")
+        return " and ".join(parts) or "?"
+    return f">= {thr:g}"
 
 
 def main(argv=None) -> int:
@@ -105,24 +146,25 @@ def main(argv=None) -> int:
                     help="BENCH_fault.json path")
     ap.add_argument("--parallel-bench", default=DEFAULT_PARALLEL_BENCH,
                     help="BENCH_parallel.json path")
+    ap.add_argument("--obs-bench", default=DEFAULT_OBS_BENCH,
+                    help="BENCH_obs.json path")
     ap.add_argument("--thresholds", default=DEFAULT_THRESH)
     ap.add_argument("--run-smoke", action="store_true",
-                    help="run `sim_bench --smoke` + `trace_roundtrip "
-                         "--smoke` + `search_bench --smoke` + "
-                         "`mpmd_pipeline --smoke` + `fault_scenarios "
-                         "--smoke` + `parallel_dse --smoke` first to "
+                    help="run every bench module with --smoke first to "
                          "produce the bench files")
     args = ap.parse_args(argv)
 
     if args.run_smoke:
-        from benchmarks import (fault_scenarios, mpmd_pipeline, parallel_dse,
-                                search_bench, sim_bench, trace_roundtrip)
+        from benchmarks import (fault_scenarios, mpmd_pipeline, obs_overhead,
+                                parallel_dse, search_bench, sim_bench,
+                                trace_roundtrip)
         sim_bench.main(["--smoke"])
         trace_roundtrip.main(["--smoke"])
         search_bench.main(["--smoke"])
         mpmd_pipeline.main(["--smoke"])
         fault_scenarios.main(["--smoke"])
         parallel_dse.main(["--smoke"])
+        obs_overhead.main(["--smoke"])
 
     bench = {}
     for path, key, producer in ((args.bench, None, "sim_bench"),
@@ -135,7 +177,9 @@ def main(argv=None) -> int:
                                 (args.fault_bench, "fault",
                                  "fault_scenarios"),
                                 (args.parallel_bench, "parallel",
-                                 "parallel_dse")):
+                                 "parallel_dse"),
+                                (args.obs_bench, "obs",
+                                 "obs_overhead")):
         if not os.path.exists(path):
             print(f"check_regression: no bench file at {path} "
                   f"(run benchmarks.{producer} first, or pass --run-smoke)")
@@ -150,16 +194,33 @@ def main(argv=None) -> int:
         thresholds = {k: v for k, v in json.load(f).items()
                       if not k.startswith("_")}
 
-    bad = check(bench, thresholds)
+    rows = evaluate(bench, thresholds)
     mode = "smoke" if bench.get("smoke") else "full"
-    if bad:
-        for key, measured, floor in bad:
-            shown = "missing" if measured is None else f"{measured:.2f}x"
-            print(f"check_regression: FAIL {key}: {shown} < floor "
-                  f"{floor:.2f}x ({mode} run)")
+    n_fail = sum(1 for r in rows if r[3] == "FAIL")
+    n_skip = sum(1 for r in rows if r[3] == "SKIP")
+
+    width = max((len(r[0]) for r in rows), default=10)
+    print(f"check_regression — {mode} run, {len(rows)} gated keys")
+    for key, measured, thr, st in rows:
+        shown = "missing" if measured is None else f"{measured:10.3f}"
+        print(f"  {st:<4} {key:<{width}} {shown:>10}  bound {_fmt_thr(thr)}")
+
+    from benchmarks.common import write_json
+    summary_path = write_json("BENCH_summary.json", {
+        "mode": mode,
+        "n_pass": len(rows) - n_fail - n_skip,
+        "n_fail": n_fail, "n_skip": n_skip,
+        "rows": [{"key": k, "measured": m, "threshold": thr, "status": st}
+                 for k, m, thr, st in rows]})
+    print(f"wrote {summary_path}")
+
+    if n_fail:
+        print(f"check_regression: FAIL — {n_fail} of {len(rows)} gated "
+              f"keys out of bounds ({mode} run)")
         return 1
-    print(f"check_regression: OK — all speedup floors hold ({mode} run, "
-          f"{len(thresholds)} sections)")
+    print(f"check_regression: OK — all {len(rows)} gated keys within "
+          f"bounds ({mode} run"
+          + (f", {n_skip} skipped" if n_skip else "") + ")")
     return 0
 
 

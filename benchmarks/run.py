@@ -26,13 +26,18 @@
                            vs serial (bit-identity checked) + delta
                            re-simulation speedup/exactness on a 10k-node
                            graph with 1% of rows perturbed
+  obs_overhead     (ours)  obs instrumentation: modeled disabled-primitive
+                           overhead of a 10k-node simulate (< 3% ceiling)
+                           + explain() blame-sums-to-makespan exactness
   check_regression (gate)  fails if BENCH_sim speedups, BENCH_trace
                            round-trip/calibration, BENCH_search
                            sample-efficiency, BENCH_mpmd
                            exactness/coalescing, BENCH_fault
-                           segmented/recovery or BENCH_parallel
-                           pool/delta figures fall below
-                           benchmarks/thresholds.json floors
+                           segmented/recovery, BENCH_parallel pool/delta
+                           or BENCH_obs overhead/blame figures fall
+                           outside benchmarks/thresholds.json bounds;
+                           writes the consolidated PASS/FAIL table to
+                           BENCH_summary.json
 
 Each bench runs in its own subprocess so it controls its fake-device count
 before importing jax."""
@@ -45,7 +50,7 @@ BENCHES = ["opcounts", "e2e_validation", "fsdp_reorder", "bandwidth_sweep",
            "wafer_tacos", "nic_degradation", "roofline", "sim_bench",
            "hetero_cluster", "trace_roundtrip", "search_bench",
            "mpmd_pipeline", "fault_scenarios", "parallel_dse",
-           "check_regression"]
+           "obs_overhead", "check_regression"]
 
 
 def main() -> None:

@@ -1,0 +1,91 @@
+"""Observability walkthrough: instrument a sweep, explain a simulated run,
+and attribute a step-time delta between two configurations.
+
+  python examples/explain_walkthrough.py
+
+Covers, without any accelerator:
+  1. obs.enable() + a pooled SearchRun -> metrics JSON you can inspect
+     with `python -m repro.obs report`
+  2. explain(): critical path + bit-exact blame (compute busy / exposed
+     comm / barrier wait / fault stall sum to the makespan)
+  3. explain_diff(): which node classes and ranks a config change moved
+  4. Chrome-trace export with per-rank utilization counter tracks
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import SystemConfig  # noqa: E402
+from repro.core import chakra, convert  # noqa: E402
+from repro.core.costmodel import build_topology, simulate  # noqa: E402
+from repro.core.costmodel.simulator import simulate_cluster  # noqa: E402
+from repro.core.dse import Knob  # noqa: E402
+from repro.obs import record as obs  # noqa: E402
+from repro.obs.explain import explain, explain_diff  # noqa: E402
+from repro.obs.explain import export_explain_trace  # noqa: E402
+from repro.search.run import SearchRun  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts", "obs")
+os.makedirs(OUT, exist_ok=True)
+
+
+def layer_stack(n_layers=24, flops=2e10, comm=2e7):
+    """FSDP-ish stack: matmul + all-reduce per layer."""
+    g = chakra.Graph()
+    prev = None
+    for i in range(n_layers):
+        c = g.add(f"mm{i}", chakra.COMP,
+                  deps=[prev] if prev is not None else [], flops=flops,
+                  bytes=1e8, out_bytes=1e5)
+        a = g.add(f"ar{i}", chakra.COMM_COLL, deps=[c],
+                  comm_kind="all-reduce", comm_bytes=comm,
+                  group=list(range(16)))
+        prev = a
+    return g
+
+
+def main():
+    sysc = SystemConfig(chips=16)
+    topo = build_topology(sysc)
+
+    # -- 1. an instrumented sweep ------------------------------------------
+    print("=== instrumented sweep ===")
+    obs.enable()
+    knobs = [Knob("prefetch", [0, 2, 4, 8]),
+             Knob("bucket_bytes", [None, 32e6, 64e6])]
+    res = SearchRun(lambda cfg: layer_stack(), sysc, knobs,
+                    strategy="grid", budget=12, jobs=4,
+                    progress=lambda p: print(
+                        f"  {p['trials']}/{p['budget']} trials, "
+                        f"best={p['best']}"),
+                    progress_interval=0.0).run()
+    metrics_path = os.path.join(OUT, "sweep_metrics.json")
+    obs.dump_metrics(metrics_path)
+    obs.disable()
+    print(res.summary())
+    print(f"metrics -> {metrics_path}")
+    print(f"  (inspect with: python -m repro.obs report {metrics_path})\n")
+
+    # -- 2. explain one run ------------------------------------------------
+    print("=== explain: slow-interconnect pipeline ===")
+    g = layer_stack()
+    prog = convert.split_pipeline_stages(g, 2)
+    cres = simulate_cluster(prog, sysc, topo, keep_timeline=True)
+    e = explain(cres, graph=prog)
+    print(e.table())
+    trace_path = os.path.join(OUT, "pipeline_trace.json")
+    export_explain_trace(cres, trace_path, graph=prog)
+    print(f"chrome trace (slices + utilization tracks) -> {trace_path}\n")
+
+    # -- 3. diff two configurations ----------------------------------------
+    print("=== explain_diff: 4x slower collectives ===")
+    a = simulate(g, sysc, topo, keep_timeline=True)
+    g2 = layer_stack(comm=8e7)                    # 4x the all-reduce bytes
+    b = simulate(g2, sysc, topo, keep_timeline=True)
+    d = explain_diff(a, b, graph_a=g, graph_b=g2)
+    print(d.table())
+
+
+if __name__ == "__main__":
+    main()

@@ -71,6 +71,7 @@ import numpy as np
 from repro.core import chakra
 from repro.core.costmodel.collectives import collective_time
 from repro.core.costmodel.topology import Topology, build_topology
+from repro.obs import record as obs
 
 _TYPE_CODES = {chakra.COMP: 0, chakra.COMM_COLL: 1, chakra.COMM_SEND: 2,
                chakra.COMM_RECV: 3, chakra.MEM: 4}
@@ -265,7 +266,9 @@ class CompiledGraph:
         key = self.config_key(system, topo, algo, compute_derate)
         hit = self._dur_cache.get(key)
         if hit is not None:
+            obs.counter("compile.durations.hit")
             return hit
+        obs.counter("compile.durations.miss")
         dur = np.zeros(self.n, dtype=np.float64)
         comp = self.type_code == 0
         if comp.any():
@@ -352,9 +355,11 @@ class CompiledGraph:
         vector agreeing with the original on all nodes scheduled so far —
         the delta re-simulation contract (``costmodel.delta``).
         """
-        st = self._fresh_state(overlap, keep_timeline)
-        self._run_span(st, dur, overlap, self.n)
-        return self._finalize(st)
+        obs.counter("engine.runs")
+        with obs.span("engine.run"):
+            st = self._fresh_state(overlap, keep_timeline)
+            self._run_span(st, dur, overlap, self.n)
+            return self._finalize(st)
 
     def _fresh_state(self, overlap: bool = True,
                      keep_timeline: bool = False) -> "_RunState":
@@ -526,7 +531,7 @@ class CompiledGraph:
         if hit is None or hit[0] is not dur:   # id() can be reused; verify
             is_coll = self._is_coll
             tl = self.run(dur, overlap=overlap, keep_timeline=True).timeline
-            hit = (dur, [nid for nid, _, _, _, _ in tl if is_coll[nid]])
+            hit = (dur, [sp[0] for sp in tl if is_coll[sp[0]]])
             self._canon_cache[key] = hit
         return hit[1]
 
@@ -757,7 +762,8 @@ def run_rows(rows: List[RowSpec], overlap: bool = True,
         st.scheduled += 1
         if st.timeline is not None:
             st.timeline.append(Span(nid, spec.cg._names[nid],
-                                    "comm" if sw else "comp", arr, end))
+                                    "comm" if sw else "comp", arr, end,
+                                    b[1] - arr))
         ob = spec.cg._out_bytes[nid]
         if ob:
             st.mem_events.append((arr, ob))
@@ -876,7 +882,7 @@ def run_rows(rows: List[RowSpec], overlap: bool = True,
                     if timeline is not None:
                         timeline.append(Span(nid, names[nid],
                                              "comm" if s else "comp",
-                                             start, end))
+                                             start, end, b[1] - start))
                     ob = out_b[nid]
                     if ob:
                         mem_events.append((start, ob))
@@ -986,9 +992,15 @@ def result_cache_put(cache: Dict, key, value, cap: int = RESULT_CACHE_CAP):
     cache[key] = value
 
 
+def _build_compiled(g: chakra.Graph) -> CompiledGraph:
+    obs.counter("compile.graphs")
+    with obs.span("compile.graph"):
+        return CompiledGraph(g)
+
+
 def compile_graph(g: chakra.Graph) -> CompiledGraph:
     """Lower `g` to a CompiledGraph, memoized on the Graph's edit token."""
     cached = getattr(g, "_cached", None)
     if cached is not None:                     # chakra.Graph (has cache infra)
-        return g._cached("compiled", lambda: CompiledGraph(g))
-    return CompiledGraph(g)
+        return g._cached("compiled", lambda: _build_compiled(g))
+    return _build_compiled(g)

@@ -47,6 +47,7 @@ from bisect import bisect_right
 from typing import Dict, List, Optional
 
 from repro.core.costmodel.compiled import CompiledGraph, result_cache_put
+from repro.obs import record as obs
 
 # per-CompiledGraph cap on memoized DeltaBase instances (each holds
 # n_checkpoints O(n) snapshots — a handful of configs is plenty)
@@ -75,6 +76,7 @@ class DeltaBase:
         self.dur = list(dur)
         self.overlap = bool(overlap)
         self.keep_timeline = bool(keep_timeline)
+        obs.counter("delta.base_builds")
         n = cg.n
         record: List = []
         snaps = []
@@ -126,12 +128,17 @@ class DeltaBase:
         if t_star >= n:
             # nothing changed: the base result, as a fresh copy (callers may
             # post-process in place, mirroring simulate()'s memo contract)
+            obs.counter("delta.zero_change")
             res = dataclasses.replace(self.result)
             if res.timeline is not None:
                 res.timeline = list(res.timeline)
             return res
         k = bisect_right(self._snap_idx, t_star) - 1
         st = self._snaps[k][1].copy()
+        # replay fraction: (n - resumed-at) / n of the schedule re-decided
+        obs.counter("delta.replays")
+        obs.counter("delta.replayed_decisions", n - st.scheduled)
+        obs.counter("delta.total_decisions", n)
         dur = self.dur[:]
         for nid, v in overrides.items():
             if 0 <= nid < n:
@@ -157,9 +164,11 @@ def delta_base(cg: CompiledGraph, dur: List[float], overlap: bool = True,
           bool(overlap), bool(keep_timeline))
     hit = cg._delta_cache.get(ck)
     if hit is not None and (key is not None or hit._src is dur):
+        obs.counter("delta.memo.hit")
         return hit
     if not build:
         return None
+    obs.counter("delta.memo.miss")
     db = DeltaBase(cg, dur, overlap=overlap, keep_timeline=keep_timeline,
                    n_checkpoints=n_checkpoints)
     result_cache_put(cg._delta_cache, ck, db, cap=DELTA_CACHE_CAP)

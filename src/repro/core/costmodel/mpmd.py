@@ -62,6 +62,7 @@ from repro.core.costmodel.simulator import (ClusterSimResult,
                                             _parse_rank_durations,
                                             _parse_rank_profiles, _rank_row)
 from repro.core.costmodel.topology import RankProfile, Topology, build_topology
+from repro.obs import record as obs
 
 
 class ClusterProgramError(ValueError):
@@ -202,7 +203,9 @@ def simulate_mpmd(prog: MPMDProgram, system,
                              for r, od in rdur.items())))
         hit = prog._result_cache.get(ckey)
         if hit is not None:
+            obs.counter("mpmd.memo.hit")
             return _copy_cluster_result(hit)
+        obs.counter("mpmd.memo.miss")
 
     bases = [cg.durations(system, topo, algo, compute_derate) for cg in cgs]
 
@@ -237,6 +240,9 @@ def simulate_mpmd(prog: MPMDProgram, system,
     else:
         colors = list(range(K))
     n_classes = max(colors) + 1
+    # coalescing effectiveness: event-loop rows actually paid vs ranks
+    obs.counter("mpmd.coalesce.classes", n_classes)
+    obs.counter("mpmd.coalesce.ranks", K)
     reps: List[Optional[int]] = [None] * n_classes
     for r in range(K):
         if reps[colors[r]] is None:

@@ -67,6 +67,7 @@ import numpy as np
 
 from repro.core import chakra
 from repro.core.costmodel.collectives import collective_time
+from repro.obs import record as obs
 from repro.core.costmodel.compiled import (CompiledGraph, compile_graph,
                                            result_cache_put)
 from repro.core.costmodel.topology import (RankProfile, Topology,
@@ -76,12 +77,16 @@ from repro.core.costmodel.topology import (RankProfile, Topology,
 class Span(NamedTuple):
     """One scheduled node occurrence — the unit the trace subsystem
     (repro.trace) exports.  Tuple-compatible with the historical timeline
-    entries ``(nid, name, stream, start, end)``."""
+    entries ``(nid, name, stream, start, end)``; ``wait`` is the barrier
+    wait included in ``[start, end)`` (nonzero only for collectives gated
+    by a cross-rank barrier in cluster runs — ``repro.obs.explain`` uses
+    it to split waited time from transfer cost)."""
     nid: int
     name: str
     stream: str                   # "comp" | "comm"
     start: float                  # seconds
     end: float                    # seconds
+    wait: float = 0.0             # seconds blocked at a barrier, in-span
 
     @property
     def duration(self) -> float:
@@ -175,7 +180,9 @@ def simulate(g: chakra.Graph, system, topo: Optional[Topology] = None,
         if hit is not None:
             # fresh instance per call: SimResult is mutable and callers may
             # post-process in place — never hand out the cached object
+            obs.counter("sim.result_cache.hit")
             return dataclasses.replace(hit)
+        obs.counter("sim.result_cache.miss")
     dur = cg.durations(system, topo, algo, compute_derate)
     if durations:
         # the memoized base-duration list is the delta memo's identity key,
@@ -738,7 +745,9 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
                              for r, od in rdur.items())))
         hit = cg._result_cache.get(ckey)
         if hit is not None:
+            obs.counter("sim.cluster_cache.hit")
             return _copy_cluster_result(hit)
+        obs.counter("sim.cluster_cache.miss")
 
     init_keys = []
     for r in range(K):

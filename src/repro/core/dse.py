@@ -371,13 +371,17 @@ def explore(graph_for: Callable[[Dict], chakra.Graph], system,
     # memoized, so pool workers fork with warm caches (copy-on-write) and
     # graph mutation never races
     from repro.core.costmodel.compiled import compile_graph
-    for cfg in cfgs:
-        compile_graph(memo.transformed(cfg))
+    from repro.obs import record as obs
+    with obs.span("dse.precompile"):
+        for cfg in cfgs:
+            compile_graph(memo.transformed(cfg))
 
     def run_trial(cfg: Dict) -> Trial:
-        res = _simulate_cfg(memo.transformed(cfg), system, cfg,
-                            compute_derate, topo)
-        return Trial(cfg, res, getattr(res, objective))
+        obs.counter("dse.trials")
+        with obs.span("dse.trial"):
+            res = _simulate_cfg(memo.transformed(cfg), system, cfg,
+                                compute_derate, topo)
+            return Trial(cfg, res, getattr(res, objective))
 
     if parallel and parallel > 1:
         from repro.core import pool as _pool

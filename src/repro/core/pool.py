@@ -27,7 +27,10 @@ from __future__ import annotations
 
 import multiprocessing as mp
 import os
+import time
 from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.obs import record as obs
 
 # (fn, items) published for fork children; set only for the lifetime of
 # one map_fork call in the parent
@@ -49,16 +52,29 @@ def cpu_count() -> int:
         return os.cpu_count() or 1
 
 
-def _run_chunk(bounds: Tuple[int, int]) -> List[Tuple[int, object, Optional[str]]]:
+def _run_chunk(bounds: Tuple[int, int]):
+    """Worker body: ``([(i, result, error)], obs_payload)``.
+
+    If the parent was recording (the forked child inherits its live
+    recorder), a fresh per-chunk recorder captures the chunk's counters,
+    spans and busy time; the payload rides the result tuple back and the
+    parent merges it — counters stay additive, so pooled totals match
+    serial ones."""
     lo, hi = bounds
     fn, items = _WORK
+    rec = obs.fork_child_begin()
+    t0 = time.perf_counter()
     out = []
     for i in range(lo, hi):
         try:
             out.append((i, fn(items[i]), None))
         except Exception as e:  # stringified: worker exceptions may not pickle
             out.append((i, None, f"{type(e).__name__}: {e}"))
-    return out
+    payload = None
+    if rec is not None:
+        payload = obs.fork_child_payload(rec, time.perf_counter() - t0,
+                                         hi - lo)
+    return out, payload
 
 
 def map_fork(fn: Callable, items: Sequence, jobs: Optional[int] = None,
@@ -90,12 +106,15 @@ def map_fork(fn: Callable, items: Sequence, jobs: Optional[int] = None,
     bounds = [(lo, min(n, lo + step)) for lo in range(0, n, step)]
     results: List = [None] * n
     _WORK = (fn, items)
+    t0 = time.perf_counter()
     try:
         ctx = mp.get_context("fork")
         with ctx.Pool(processes=workers) as p:
-            for part in p.imap_unordered(_run_chunk, bounds):
+            for part, payload in p.imap_unordered(_run_chunk, bounds):
                 for i, val, err in part:
                     results[i] = (val, err)
+                obs.merge_child(payload)
     finally:
         _WORK = None
+        obs.pool_stats(time.perf_counter() - t0, workers)
     return results

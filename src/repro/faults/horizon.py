@@ -47,6 +47,7 @@ from repro.core.costmodel.simulator import (_parse_rank_profiles,
                                             simulate_cluster)
 from repro.core.costmodel.topology import RankProfile, Topology, build_topology
 from repro.faults.scenario import CheckpointPolicy, FaultScenario
+from repro.obs import record as obs
 
 _INF = float("inf")
 
@@ -170,7 +171,9 @@ def simulate_horizon(workload, system, scenario: FaultScenario,
         if memoize:
             hit = sig_cache.get(sig)
             if hit is not None:
+                obs.counter("faults.memo_served")
                 return hit
+        obs.counter("faults.segment_sim")
         prof: Dict[int, RankProfile] = {}
         if base_profs:
             if remap is not None:
@@ -185,10 +188,11 @@ def simulate_horizon(workload, system, scenario: FaultScenario,
             else:
                 p = p.scaled(link_scale=mag)
             prof[rank] = p
-        res = simulate_cluster(
-            workload, system, topo, n_ranks=Kc if is_graph else None,
-            rank_profiles=prof or None, algo=algo,
-            compute_derate=compute_derate, memoize=memoize)
+        with obs.span("faults.segment_sim"):
+            res = simulate_cluster(
+                workload, system, topo, n_ranks=Kc if is_graph else None,
+                rank_profiles=prof or None, algo=algo,
+                compute_derate=compute_derate, memoize=memoize)
         s = float(res.total_time)
         if not s > 0.0:
             raise ValueError(f"non-positive step time {s} for signature {sig}")

@@ -27,7 +27,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+import time
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import chakra
 from repro.core.costmodel.simulator import simulate_cluster
@@ -86,7 +87,9 @@ def monte_carlo(workload, system, rates: FaultRates,
                 algo: str = "auto", compute_derate: float = 0.6,
                 memoize: bool = True,
                 keep_trials: bool = False,
-                jobs: Optional[int] = None) -> MonteCarloResult:
+                jobs: Optional[int] = None,
+                progress: Optional[Callable[[Dict], None]] = None,
+                progress_interval: float = 1.0) -> MonteCarloResult:
     """Expected fault metrics for `workload` under exponential `rates`.
 
     Deterministic in (inputs, seed): trial i samples its scenario with
@@ -142,6 +145,22 @@ def monte_carlo(workload, system, rates: FaultRates,
             rank_profiles=rank_profiles, algo=algo,
             compute_derate=compute_derate, memoize=memoize)
 
+    # `progress` observes trial completion: called with
+    # {"trials", "total", "elapsed", "done"}, rate-limited to one call per
+    # `progress_interval` seconds plus a final done=True call
+    t0 = time.monotonic()
+    last_prog = t0
+
+    def _tick(done_trials: int) -> None:
+        nonlocal last_prog
+        if progress is None:
+            return
+        now = time.monotonic()
+        if now - last_prog >= progress_interval:
+            last_prog = now
+            progress({"trials": done_trials, "total": n_trials,
+                      "elapsed": now - t0, "done": False})
+
     results: List[HorizonResult] = []
     if jobs is not None and jobs > 1:
         from repro.core import pool as _pool
@@ -151,8 +170,14 @@ def monte_carlo(workload, system, rates: FaultRates,
                 raise RuntimeError(
                     f"monte_carlo trial {i} failed in worker: {err}")
             results.append(hr)
+            _tick(len(results))
     else:
-        results = [_trial(i) for i in range(n_trials)]
+        for i in range(n_trials):
+            results.append(_trial(i))
+            _tick(len(results))
+    if progress is not None:
+        progress({"trials": len(results), "total": n_trials,
+                  "elapsed": time.monotonic() - t0, "done": True})
     pooled: Dict[float, int] = {}
     for hr in results:
         for s, c in hr.step_records:

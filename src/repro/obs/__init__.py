@@ -1,0 +1,43 @@
+"""repro.obs — observability for the whole stack.
+
+Side A (self-tracing): ``enable()`` a recorder, run anything —
+simulate / explore / SearchRun / monte_carlo — and every instrumented
+layer (compile, engine runs, result caches, delta replays, MPMD memo,
+pool workers, search generations, fault segments) emits counters and
+spans; ``dump_metrics`` / ``dump_trace`` export them and
+``python -m repro.obs report`` summarizes.  All primitives are no-ops
+(one global load) while disabled.
+
+Side B (workload attribution): ``repro.obs.explain`` decomposes a
+simulated timeline into compute / exposed-comm / barrier-wait / stall
+blame that sums to the makespan bit-exactly, walks the critical path,
+and ``explain_diff`` attributes a step-time delta between two configs.
+Import the functions from the submodule (the package keeps import-time
+dependencies minimal so the instrumented core can import it):
+
+    from repro.obs.explain import explain, explain_diff
+"""
+from repro.obs.record import (Recorder, counter, current, disable,
+                              dump_metrics, dump_trace, enable, gauge,
+                              hit_rates, merge_child, metrics_dict,
+                              recording, span, span_summary)
+
+__all__ = ["Recorder", "counter", "current", "disable", "dump_metrics",
+           "dump_trace", "enable", "gauge", "hit_rates", "merge_child",
+           "metrics_dict", "recording", "span", "span_summary",
+           "explain_diff", "explain_result", "explain_cluster"]
+
+_EXPLAIN_NAMES = {"explain_diff", "explain_result", "explain_cluster",
+                  "critical_path", "utilization_counters",
+                  "export_explain_trace"}
+
+
+def __getattr__(name):
+    # lazy: repro.obs.explain imports the simulator, which imports this
+    # package for its counters — eager import would be a cycle
+    if name in _EXPLAIN_NAMES:
+        from repro.obs import explain as _explain
+        if name in ("explain_result", "explain_cluster"):
+            return _explain.explain
+        return getattr(_explain, name)
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

@@ -1,0 +1,5 @@
+"""Entry point: ``python -m repro.obs report <metrics.json>``."""
+from repro.obs.report import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

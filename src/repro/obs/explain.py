@@ -1,0 +1,466 @@
+"""Critical-path "explain" attribution for simulated runs.
+
+Answers *why* a simulated step takes as long as it does.  Two products:
+
+Blame decomposition
+    Every instant of ``[0, makespan]`` on every rank is charged to exactly
+    one of four components — ``compute_busy`` (compute-class work running),
+    ``exposed_comm`` (communication cost not hidden by compute),
+    ``barrier_wait`` (arrived at a cross-rank collective, blocked on a
+    straggler — the engine records per-span wait, see ``Span.wait``), or
+    ``stall`` (nothing running: dependency gaps, early-finish tail,
+    fault-induced idle).  The partition is *bit-exact*: interval lengths
+    are kept as exact two-float (Knuth TwoSum) term pairs and summed with
+    ``math.fsum``, so the components provably sum to the makespan to the
+    last ulp (``identity_ok``; property-tested on randomized DAGs and MPMD
+    programs).  The same terms re-keyed by node class (``all-gather``,
+    ``p2p``, ``compute``, ...) give per-op-class blame.
+
+Critical path
+    A best-effort longest chain walked back from the last-finishing span —
+    each step jumps to the latest-ending span that gated the current one
+    (same-rank predecessor, or the gating rank across a collective
+    barrier).  Diagnostic, not part of the bit-exact contract.
+
+``explain_diff(a, b)`` attributes a step-time delta between two configs to
+components, node classes and ranks — the "why" behind a DSE Pareto point.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import chakra
+from repro.core.costmodel.simulator import (ClusterSimResult, SimResult,
+                                            Span)
+
+COMPONENTS = ("compute_busy", "exposed_comm", "barrier_wait", "stall")
+_COMM_TYPES = (chakra.COMM_COLL, chakra.COMM_SEND, chakra.COMM_RECV)
+STALL_CLASS = "(stall)"
+
+
+def _two_diff(b: float, a: float) -> Tuple[float, float]:
+    """(d, e) with ``d + e == b - a`` exactly (TwoSum on (b, -a))."""
+    y = -a
+    s = b + y
+    bv = s - b
+    return s, (b - (s - bv)) + (y - bv)
+
+
+def node_class(graph: Optional[chakra.Graph], nid: int,
+               stream: str) -> str:
+    """Attribution class of one span: collective kind / p2p / compute /
+    mem when the graph is known, else the stream name."""
+    if graph is None:
+        return stream
+    n = graph.node(nid)
+    if n.type == chakra.COMP:
+        return "compute"
+    if n.type == chakra.COMM_COLL:
+        return n.attrs.get("comm_kind", "collective")
+    if n.type in (chakra.COMM_SEND, chakra.COMM_RECV):
+        return "p2p"
+    return n.type                      # "MEM" etc.
+
+
+@dataclass
+class RankBlame:
+    """Blame decomposition of one rank over ``[0, makespan]``.
+
+    ``components[c]`` / ``by_class[k]`` are ``math.fsum`` reductions of
+    exact interval terms; ``total()`` re-sums every term in one pass, so
+    ``identity_ok()`` (``total() == makespan``) is the bit-exact contract.
+    """
+    rank: int
+    makespan: float
+    components: Dict[str, float]
+    by_class: Dict[str, float]
+    terms: Dict[str, List[float]] = field(repr=False, default_factory=dict)
+
+    @property
+    def compute_busy(self) -> float:
+        return self.components["compute_busy"]
+
+    @property
+    def exposed_comm(self) -> float:
+        return self.components["exposed_comm"]
+
+    @property
+    def barrier_wait(self) -> float:
+        return self.components["barrier_wait"]
+
+    @property
+    def stall(self) -> float:
+        return self.components["stall"]
+
+    def total(self) -> float:
+        return math.fsum(t for ts in self.terms.values() for t in ts)
+
+    def identity_ok(self) -> bool:
+        return self.total() == self.makespan
+
+    def fractions(self) -> Dict[str, float]:
+        m = self.makespan
+        return {c: (v / m if m else 0.0) for c, v in self.components.items()}
+
+
+def _portions(spans: List[Span], graph: Optional[chakra.Graph],
+              makespan: float):
+    """Split spans into labeled portions (a, b, kind, nid, stream) with
+    kind in {"comp", "cost", "wait"}, clipped to [0, makespan]."""
+    out = []
+    for s in spans:
+        if graph is not None:
+            is_comm = graph.node(s.nid).type in _COMM_TYPES
+        else:
+            is_comm = s.stream == "comm"
+        wait = getattr(s, "wait", 0.0)
+        if is_comm and wait > 0.0:
+            mid = min(s.start + wait, s.end)
+            out.append((s.start, mid, "wait", s.nid, s.stream))
+            out.append((mid, s.end, "cost", s.nid, s.stream))
+        elif is_comm:
+            out.append((s.start, s.end, "cost", s.nid, s.stream))
+        else:
+            out.append((s.start, s.end, "comp", s.nid, s.stream))
+    clipped = []
+    for a, b, kind, nid, stream in out:
+        a, b = max(0.0, a), min(makespan, b)
+        if b > a:
+            clipped.append((a, b, kind, nid, stream))
+    return clipped
+
+
+_KIND_TO_COMPONENT = {"comp": "compute_busy", "cost": "exposed_comm",
+                      "wait": "barrier_wait"}
+
+
+def blame(spans: List[Span], makespan: float,
+          graph: Optional[chakra.Graph] = None, rank: int = 0) -> RankBlame:
+    """Decompose one rank's timeline over ``[0, makespan]``.
+
+    Sweep over the elementary intervals induced by all span boundaries;
+    each interval is charged by priority compute > comm cost > comm wait >
+    stall (comm running under compute is *hidden*, hence not exposed).
+    Interval lengths enter as exact TwoSum pairs so the reduction is
+    bit-exact (see module docstring).
+    """
+    portions = _portions(spans, graph, makespan)
+    events: List[Tuple[float, int, int]] = []   # (t, +1/-1, portion index)
+    for i, (a, b, _k, _n, _s) in enumerate(portions):
+        events.append((a, 1, i))
+        events.append((b, -1, i))
+    bounds = sorted({0.0, makespan} | {t for t, _d, _i in events})
+    ev_at: Dict[float, List[Tuple[int, int]]] = {}
+    for t, d, i in events:
+        ev_at.setdefault(t, []).append((d, i))
+
+    active: Dict[str, Dict[int, Tuple[int, str]]] = \
+        {"comp": {}, "cost": {}, "wait": {}}
+    comp_terms: Dict[str, List[float]] = {c: [] for c in COMPONENTS}
+    class_terms: Dict[str, List[float]] = {}
+
+    for j, a in enumerate(bounds):
+        for d, i in ev_at.get(a, ()):
+            _pa, _pb, kind, nid, stream = portions[i]
+            if d > 0:
+                active[kind][i] = (nid, stream)
+            else:
+                active[kind].pop(i, None)
+        if j + 1 >= len(bounds):
+            break
+        b = bounds[j + 1]
+        for kind in ("comp", "cost", "wait"):
+            if active[kind]:
+                comp = _KIND_TO_COMPONENT[kind]
+                nid, stream = next(iter(active[kind].values()))
+                cls = node_class(graph, nid, stream)
+                break
+        else:
+            comp, cls = "stall", STALL_CLASS
+        d, e = _two_diff(b, a)
+        comp_terms[comp] += (d, e)
+        class_terms.setdefault(cls, []).append(d)
+        class_terms[cls].append(e)
+
+    return RankBlame(
+        rank=rank, makespan=makespan,
+        components={c: math.fsum(ts) for c, ts in comp_terms.items()},
+        by_class={k: math.fsum(ts) for k, ts in class_terms.items()},
+        terms=comp_terms)
+
+
+# ------------------------------------------------------------ critical path
+
+@dataclass
+class CPItem:
+    """One hop of the (best-effort) critical path, chronological order."""
+    rank: int
+    nid: int
+    name: str
+    cls: str
+    start: float
+    end: float
+    gap_before: float                  # idle between predecessor end and start
+    note: str = ""
+
+
+def _walk_rank(spans: List[Span], graph: Optional[chakra.Graph],
+               rank: int, limit: int) -> List[CPItem]:
+    """Longest chain ending at the last-finishing span of one rank."""
+    if not spans:
+        return []
+    by_end = sorted(spans, key=lambda s: (s.end, s.start))
+    cur = by_end[-1]
+    path: List[CPItem] = []
+    k = len(by_end) - 1
+    while len(path) < limit:
+        wait = getattr(cur, "wait", 0.0)
+        note = f"barrier wait {wait:.3e}s" if wait > 0.0 else ""
+        item = CPItem(rank=rank, nid=cur.nid, name=cur.name,
+                      cls=node_class(graph, cur.nid, cur.stream),
+                      start=cur.start, end=cur.end, gap_before=0.0,
+                      note=note)
+        path.append(item)
+        if cur.start <= 0.0:
+            break
+        # `is cur` guard: a zero-duration span satisfies end <= own start
+        # and would pick itself forever
+        while k >= 0 and (by_end[k] is cur or by_end[k].end > cur.start):
+            k -= 1
+        if k < 0:
+            break
+        pred = by_end[k]
+        item.gap_before = cur.start - pred.end
+        cur = pred
+    path.reverse()
+    return path
+
+
+def critical_path(result, graph=None, limit: int = 10_000) -> List[CPItem]:
+    """Best-effort critical path of a timeline-carrying result.
+
+    For clusters the walk starts on the slowest rank and hops to the
+    barrier-gating rank (the participant that arrived last, i.e. whose
+    matching collective span carries no wait) when it reaches a waited-on
+    collective.  ``graph`` (Graph / MPMDProgram / {rank: Graph}) enriches
+    hop classes."""
+    from repro.trace.export import graph_for_rank
+    if isinstance(result, SimResult):
+        return _walk_rank(result.spans(), graph_for_rank(graph, 0), 0, limit)
+    if not isinstance(result, ClusterSimResult):
+        raise TypeError(f"expected SimResult or ClusterSimResult, "
+                        f"got {type(result).__name__}")
+    rank = result.slowest_rank
+    path: List[CPItem] = []
+    visited = set()
+    while len(path) < limit and rank not in visited:
+        visited.add(rank)
+        seg = _walk_rank(result.rank_spans(rank),
+                         graph_for_rank(graph, rank), rank,
+                         limit - len(path))
+        path = seg + path
+        if not seg:
+            break
+        head = seg[0]
+        if head.start <= 0.0 or "barrier" not in head.note:
+            break
+        # the gating rank arrived last: its matching span ends with ours
+        # but carries zero wait
+        gate = None
+        for r in range(result.n_ranks):
+            if r in visited:
+                continue
+            for sp in result.rank_spans(r):
+                if (sp.stream == "comm" and sp.end == head.end
+                        and getattr(sp, "wait", 0.0) == 0.0):
+                    gate = r
+                    break
+            if gate is not None:
+                break
+        if gate is None:
+            break
+        rank = gate
+    return path
+
+
+# ------------------------------------------------------------- explanations
+
+@dataclass
+class Explanation:
+    """Blame + critical path for one simulated result.  ``ranks`` maps
+    rank id -> RankBlame over ``[0, makespan]`` (a plain ``SimResult`` is
+    rank 0); every rank's components sum to the cluster makespan
+    bit-exactly (the early-finish tail lands in its ``stall``)."""
+    makespan: float
+    ranks: Dict[int, RankBlame]
+    critical_path: List[CPItem]
+    slowest_rank: int = 0
+
+    def blame(self, rank: Optional[int] = None) -> RankBlame:
+        return self.ranks[self.slowest_rank if rank is None else rank]
+
+    def identity_ok(self) -> bool:
+        return all(b.identity_ok() for b in self.ranks.values())
+
+    def by_class(self) -> Dict[str, float]:
+        """Class blame in rank-seconds, summed over ranks."""
+        out: Dict[str, float] = {}
+        for b in self.ranks.values():
+            for k, v in b.by_class.items():
+                out[k] = out.get(k, 0.0) + v
+        return out
+
+    def components(self) -> Dict[str, float]:
+        """Component blame averaged over ranks (sums to makespan up to
+        the 1/n division; per-rank views are the bit-exact ones)."""
+        n = len(self.ranks) or 1
+        return {c: math.fsum(b.components[c] for b in self.ranks.values()) / n
+                for c in COMPONENTS}
+
+    def table(self) -> str:
+        lines = [f"makespan {self.makespan:.6e} s   "
+                 f"ranks {len(self.ranks)}   slowest rank {self.slowest_rank}",
+                 "component blame (slowest rank | mean over ranks):"]
+        slow = self.blame()
+        mean = self.components()
+        for c in COMPONENTS:
+            fr = slow.components[c] / self.makespan if self.makespan else 0.0
+            lines.append(f"  {c:<13} {slow.components[c]:>12.6e} s "
+                         f"({fr:6.1%})   mean {mean[c]:>12.6e} s")
+        lines.append("per-class blame (rank-seconds, all ranks):")
+        for k, v in sorted(self.by_class().items(), key=lambda kv: -kv[1]):
+            lines.append(f"  {k:<20} {v:>12.6e}")
+        if self.critical_path:
+            lines.append(f"critical path ({len(self.critical_path)} hops, "
+                         "last 8 shown):")
+            for it in self.critical_path[-8:]:
+                gap = f" (+{it.gap_before:.2e}s gap)" if it.gap_before else ""
+                note = f"  [{it.note}]" if it.note else ""
+                lines.append(f"  r{it.rank} {it.name:<24} {it.cls:<12} "
+                             f"{it.start:.3e}->{it.end:.3e}{gap}{note}")
+        return "\n".join(lines)
+
+
+def explain(result, graph=None, with_critical_path: bool = True
+            ) -> Explanation:
+    """Full attribution of a timeline-carrying ``SimResult`` /
+    ``ClusterSimResult``.  ``graph`` may be the workload Graph, an
+    ``MPMDProgram``, or a ``{rank: Graph}`` dict (MPMD runs)."""
+    from repro.trace.export import graph_for_rank
+    if isinstance(result, SimResult):
+        m = result.total_time
+        ranks = {0: blame(result.spans(), m, graph_for_rank(graph, 0), 0)}
+        slowest = 0
+    elif isinstance(result, ClusterSimResult):
+        m = result.step_time
+        ranks = {r: blame(result.rank_spans(r), m,
+                          graph_for_rank(graph, r), r)
+                 for r in range(result.n_ranks)}
+        slowest = result.slowest_rank
+    else:
+        raise TypeError(f"expected SimResult or ClusterSimResult, "
+                        f"got {type(result).__name__}")
+    cp = critical_path(result, graph) if with_critical_path else []
+    return Explanation(makespan=m, ranks=ranks, critical_path=cp,
+                       slowest_rank=slowest)
+
+
+# ---------------------------------------------------------------- explain_diff
+
+@dataclass
+class ExplainDiff:
+    """Attribution of ``b.makespan - a.makespan`` between two configs.
+
+    ``by_component`` / ``by_class`` are signed fsum reductions over both
+    runs' slowest-rank terms, so ``total()`` equals ``delta_makespan``
+    bit-exactly.  ``by_rank`` lists per-rank component deltas for ranks
+    present in both runs."""
+    delta_makespan: float
+    by_component: Dict[str, float]
+    by_class: Dict[str, float]
+    by_rank: Dict[int, Dict[str, float]]
+    terms: Dict[str, List[float]] = field(repr=False, default_factory=dict)
+
+    def total(self) -> float:
+        return math.fsum(t for ts in self.terms.values() for t in ts)
+
+    def identity_ok(self) -> bool:
+        return self.total() == self.delta_makespan
+
+    def table(self) -> str:
+        lines = [f"step-time delta {self.delta_makespan:+.6e} s "
+                 "(b - a, slowest-rank attribution):"]
+        for c in COMPONENTS:
+            lines.append(f"  {c:<13} {self.by_component[c]:+12.6e} s")
+        lines.append("by node class:")
+        for k, v in sorted(self.by_class.items(),
+                           key=lambda kv: -abs(kv[1])):
+            lines.append(f"  {k:<20} {v:+12.6e} s")
+        if len(self.by_rank) > 1:
+            worst = sorted(self.by_rank.items(),
+                           key=lambda kv: -abs(math.fsum(kv[1].values())))
+            lines.append("largest per-rank shifts:")
+            for r, comps in worst[:4]:
+                tot = math.fsum(comps.values())
+                lines.append(f"  rank {r:<5} {tot:+12.6e} s")
+        return "\n".join(lines)
+
+
+def explain_diff(a, b, graph_a=None, graph_b=None) -> ExplainDiff:
+    """Attribute the step-time difference between two simulated configs
+    (``b`` minus ``a``) to blame components, node classes and ranks.
+    Accepts results or ready-made ``Explanation``s."""
+    ea = a if isinstance(a, Explanation) else explain(
+        a, graph_a, with_critical_path=False)
+    eb = b if isinstance(b, Explanation) else explain(
+        b, graph_b, with_critical_path=False)
+    ba, bb = ea.blame(), eb.blame()
+    terms = {c: list(bb.terms[c]) + [-t for t in ba.terms[c]]
+             for c in COMPONENTS}
+    by_component = {c: math.fsum(ts) for c, ts in terms.items()}
+    keys = set(ba.by_class) | set(bb.by_class)
+    by_class = {k: bb.by_class.get(k, 0.0) - ba.by_class.get(k, 0.0)
+                for k in keys}
+    by_rank = {r: {c: eb.ranks[r].components[c] - ea.ranks[r].components[c]
+                   for c in COMPONENTS}
+               for r in set(ea.ranks) & set(eb.ranks)}
+    return ExplainDiff(delta_makespan=eb.makespan - ea.makespan,
+                       by_component=by_component, by_class=by_class,
+                       by_rank=by_rank, terms=terms)
+
+
+# ------------------------------------------------- utilization counter tracks
+
+def utilization_counters(result, scale: float = 1e6) -> List[Dict]:
+    """Per-rank 0/1 utilization counter tracks (Chrome ``C`` events):
+    ``util_compute`` / ``util_comm`` step to 1 while the stream is busy.
+    Append to a ``to_chrome_trace`` event list or use
+    ``export_explain_trace``."""
+    from repro.trace.export import _merged, _per_rank_spans
+    events: List[Dict] = []
+    for rank, spans in _per_rank_spans(result):
+        for stream, track in (("comp", "util_compute"), ("comm", "util_comm")):
+            merged = _merged([(s.start, s.end) for s in spans
+                              if s.stream == stream and s.end > s.start])
+            for a, b in merged:
+                events.append({"ph": "C", "pid": rank, "name": track,
+                               "ts": a * scale, "args": {"busy": 1}})
+                events.append({"ph": "C", "pid": rank, "name": track,
+                               "ts": b * scale, "args": {"busy": 0}})
+    return events
+
+
+def export_explain_trace(result, path: str, graph=None,
+                         meta: Optional[Dict] = None) -> Dict:
+    """Chrome trace of the simulated timeline *plus* per-rank utilization
+    counter tracks; returns the trace dict."""
+    import json as _json
+    from repro.trace.export import to_chrome_trace
+    trace = to_chrome_trace(result, graph, meta)
+    trace["traceEvents"].extend(utilization_counters(result))
+    with open(path, "w") as f:
+        _json.dump(trace, f)
+        f.write("\n")
+    return trace

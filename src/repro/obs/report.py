@@ -1,0 +1,98 @@
+"""``python -m repro.obs report`` — summarize a recorded run.
+
+Reads a metrics JSON written by ``obs.dump_metrics`` (e.g. via
+``python -m repro.search run --obs metrics.json``) and prints the things
+one actually asks of a sweep: where wall-clock went (top spans), how the
+caches did (hit rates), how busy the pool workers were (utilization),
+and the raw counters.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import List
+
+
+def render(metrics: dict, top: int = 12) -> str:
+    """Human-readable report of one ``metrics_dict`` snapshot."""
+    lines: List[str] = []
+    wall = metrics.get("wall_s", 0.0)
+    lines.append(f"obs report — wall {wall:.3f} s, "
+                 f"{int(metrics.get('n_events', 0))} events recorded")
+
+    spans = metrics.get("spans", {})
+    by_name = spans.get("by_name", {})
+    if by_name:
+        lines.append("")
+        lines.append(f"top spans by total time ({spans.get('n', 0)} spans"
+                     + (f", {spans['dropped']} dropped"
+                        if spans.get("dropped") else "") + "):")
+        lines.append(f"  {'span':<28} {'n':>6} {'total_s':>10} "
+                     f"{'mean_ms':>9} {'max_ms':>9}")
+        ranked = sorted(by_name.items(),
+                        key=lambda kv: -kv[1]["total_s"])[:top]
+        for name, s in ranked:
+            mean_ms = s["total_s"] / s["n"] * 1e3 if s["n"] else 0.0
+            lines.append(f"  {name:<28} {int(s['n']):>6} "
+                         f"{s['total_s']:>10.4f} {mean_ms:>9.3f} "
+                         f"{s['max_s'] * 1e3:>9.3f}")
+
+    rates = metrics.get("hit_rates", {})
+    if rates:
+        lines.append("")
+        lines.append("cache hit rates:")
+        for base, hm in sorted(rates.items()):
+            tot = hm["hit"] + hm["miss"]
+            lines.append(f"  {base:<28} {hm['rate']:>7.1%}  "
+                         f"({int(hm['hit'])}/{int(tot)})")
+
+    pool = metrics.get("pool", {})
+    workers = metrics.get("workers", {})
+    if pool or workers:
+        lines.append("")
+        util = pool.get("utilization")
+        head = "pool utilization:"
+        if util is not None:
+            head += (f" {util:.1%} of {pool.get('capacity_s', 0.0):.3f} "
+                     f"worker-seconds "
+                     f"({int(pool.get('sections', 0))} sections)")
+        lines.append(head)
+        for pid, w in sorted(workers.items()):
+            lines.append(f"  worker {pid:<8} busy {w['busy_s']:>8.4f} s  "
+                         f"items {int(w['items']):>5}  "
+                         f"chunks {int(w['chunks']):>4}")
+
+    counters = metrics.get("counters", {})
+    if counters:
+        lines.append("")
+        lines.append("counters:")
+        for name, v in sorted(counters.items()):
+            lines.append(f"  {name:<32} {v:g}")
+    gauges = metrics.get("gauges", {})
+    if gauges:
+        lines.append("gauges:")
+        for name, v in sorted(gauges.items()):
+            lines.append(f"  {name:<32} {v:g}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Observability tooling (see repro.obs).")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    rp = sub.add_parser("report", help="summarize a metrics JSON")
+    rp.add_argument("metrics", help="path written by obs.dump_metrics / "
+                    "search run --obs")
+    rp.add_argument("--top", type=int, default=12,
+                    help="span rows to show (default 12)")
+    args = ap.parse_args(argv)
+    if args.cmd == "report":
+        with open(args.metrics) as f:
+            metrics = json.load(f)
+        print(render(metrics, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

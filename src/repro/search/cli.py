@@ -63,6 +63,17 @@ def parse_knob(spec: str) -> Knob:
     return Knob(name.strip(), values, layer=layer)
 
 
+def _print_progress(p: dict) -> None:
+    """Default ``--progress`` sink: one status line per report, stderr so
+    result output stays parseable."""
+    total = p["budget"] if p["budget"] is not None else "?"
+    best = f"{p['best']:.4g}" if p["best"] is not None else "-"
+    failed = f" failed={p['failed']}" if p["failed"] else ""
+    tail = " done" if p.get("done") else ""
+    print(f"progress: {p['trials']}/{total} trials best={best}{failed} "
+          f"elapsed={p['elapsed']:.1f}s{tail}", file=sys.stderr)
+
+
 def _cmd_run(args) -> int:
     try:
         return _run_checked(args)
@@ -97,12 +108,24 @@ def _run_checked(args) -> int:
     weights = None
     if args.weights:
         weights = [float(w) for w in args.weights.split(",")]
+    progress = _print_progress if args.progress else None
+    if args.obs:
+        from repro.obs import record as obsrec
+        obsrec.enable()
     run = SearchRun(lambda cfg: g, sysc, knobs, strategy=args.strategy,
                     objectives=objectives, weights=weights,
                     budget=args.budget, wall_clock=args.wall_clock,
                     seed=args.seed, checkpoint=args.checkpoint,
-                    compute_derate=derate, jobs=args.jobs)
-    res = run.run()
+                    compute_derate=derate, jobs=args.jobs,
+                    progress=progress)
+    try:
+        res = run.run()
+    finally:
+        if args.obs:
+            from repro.obs import record as obsrec
+            obsrec.dump_metrics(args.obs)
+            obsrec.disable()
+            print(f"wrote obs metrics to {args.obs}", file=sys.stderr)
     print(res.summary())
     if len(objectives) > 1:
         for t in sorted(res.pareto_trials(), key=lambda t: t.objective):
@@ -189,6 +212,13 @@ def main(argv=None) -> int:
                          "without re-evaluating (same strategy/seed/"
                          "budget/knobs required)")
     rn.add_argument("--out", default=None, help="write result JSON")
+    rn.add_argument("--progress", action="store_true",
+                    help="print a rate-limited status line per generation "
+                         "to stderr")
+    rn.add_argument("--obs", default=None, metavar="JSON",
+                    help="record instrumentation (repro.obs) around the "
+                         "run and write the metrics JSON here; inspect "
+                         "with `python -m repro.obs report`")
     rn.add_argument("--system", default=None, metavar="JSON",
                     help="calibrated system from `repro.trace calibrate -o`")
     rn.add_argument("--chips", type=int, default=None)

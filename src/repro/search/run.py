@@ -56,6 +56,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core import chakra, dse
 from repro.core.costmodel.simulator import simulate, simulate_analytic
 from repro.core.costmodel.topology import Topology, build_topology
+from repro.obs import record as obs
 from repro.search import objectives as objmod
 from repro.search.space import SearchSpace
 from repro.search.strategies import (FIDELITY_FULL, FIDELITY_SYMMETRIC,
@@ -234,7 +235,9 @@ class SearchRun:
                  compute_derate: float = 0.6,
                  topo: Optional[Topology] = None,
                  strategy_opts: Optional[Dict] = None,
-                 jobs: int = 1):
+                 jobs: int = 1,
+                 progress: Optional[Callable[[Dict], None]] = None,
+                 progress_interval: float = 1.0):
         self.graph_for = graph_for
         self.system = system
         self.space = space if isinstance(space, SearchSpace) \
@@ -250,6 +253,13 @@ class SearchRun:
         self.budget = budget
         self.wall_clock = wall_clock
         self.jobs = max(1, int(jobs or 1))
+        # optional observer of search progress: called with a summary dict
+        # after a generation's tells land, rate-limited to one call per
+        # `progress_interval` seconds (plus always one final call when the
+        # loop ends).  Progress is advisory — exceptions in the callback
+        # propagate (a broken observer should be loud, not silent).
+        self.progress = progress
+        self.progress_interval = float(progress_interval)
         self.seed = int(seed)
         self.checkpoint = checkpoint
         self.compute_derate = compute_derate
@@ -439,6 +449,21 @@ class SearchRun:
         return out
 
     # -- driver --------------------------------------------------------------
+    def _progress_payload(self, trials: List[SearchTrial], t0: float,
+                          n_new: int, n_resumed: int,
+                          done: bool) -> Dict:
+        best = None
+        for t in trials:
+            if t.is_full and t.ok and (best is None
+                                       or t.objective < best.objective):
+                best = t
+        return {"trials": len(trials), "budget": self.budget,
+                "evaluated": n_new, "resumed": n_resumed,
+                "failed": sum(1 for t in trials if not t.ok),
+                "best": best.objective if best is not None else None,
+                "best_index": best.index if best is not None else None,
+                "elapsed": time.monotonic() - t0, "done": done}
+
     def run(self) -> SearchResult:
         t0 = time.monotonic()
         trials: List[SearchTrial] = []
@@ -469,6 +494,7 @@ class SearchRun:
         n_new = 0
         deadline = (t0 + self.wall_clock) if self.wall_clock is not None \
             else None
+        last_prog = t0
         try:
             while self.budget is None or len(trials) < self.budget:
                 if deadline is not None and time.monotonic() >= deadline:
@@ -482,32 +508,49 @@ class SearchRun:
                 if self.budget is not None:
                     cap = min(cap, self.budget - len(trials))
                 gen: List[Tuple[Dict, float]] = []
-                while len(gen) < cap:
-                    sug = self.strategy.ask()
-                    if sug is None:
-                        break
-                    gen.append(sug)
+                with obs.span("search.ask"):
+                    while len(gen) < cap:
+                        sug = self.strategy.ask()
+                        if sug is None:
+                            break
+                        gen.append(sug)
                 if not gen:
                     break
+                obs.counter("search.generations")
+                obs.counter("search.gen_trials", len(gen))
                 gen_tag = len(trials) if len(gen) > 1 else None
-                for (cfg, fid), (res, vals, err) in zip(
-                        gen, self._evaluate_batch(gen)):
-                    scal = self._scalarize(vals) if err is None \
-                        else FAILED_OBJECTIVE
-                    trial = SearchTrial(index=len(trials), config=dict(cfg),
-                                        objectives=vals, objective=scal,
-                                        fidelity=fid, result=res, error=err,
-                                        gen=gen_tag)
-                    self.strategy.tell(cfg, scal, vals, fid)
-                    trials.append(trial)
-                    n_new += 1
-                    if ckpt is not None:
-                        ckpt.write(json.dumps(trial.as_dict(),
-                                              sort_keys=True) + "\n")
-                        ckpt.flush()
+                with obs.span("search.evaluate"):
+                    evaluated = self._evaluate_batch(gen)
+                with obs.span("search.tell"):
+                    for (cfg, fid), (res, vals, err) in zip(gen, evaluated):
+                        scal = self._scalarize(vals) if err is None \
+                            else FAILED_OBJECTIVE
+                        if err is not None:
+                            obs.counter("search.failed_trials")
+                        trial = SearchTrial(index=len(trials),
+                                            config=dict(cfg),
+                                            objectives=vals, objective=scal,
+                                            fidelity=fid, result=res,
+                                            error=err, gen=gen_tag)
+                        self.strategy.tell(cfg, scal, vals, fid)
+                        trials.append(trial)
+                        n_new += 1
+                        if ckpt is not None:
+                            ckpt.write(json.dumps(trial.as_dict(),
+                                                  sort_keys=True) + "\n")
+                            ckpt.flush()
+                if self.progress is not None:
+                    now = time.monotonic()
+                    if now - last_prog >= self.progress_interval:
+                        last_prog = now
+                        self.progress(self._progress_payload(
+                            trials, t0, n_new, n_resumed, done=False))
         finally:
             if ckpt is not None:
                 ckpt.close()
+        if self.progress is not None:
+            self.progress(self._progress_payload(trials, t0, n_new,
+                                                 n_resumed, done=True))
         return SearchResult(trials=trials,
                             objective_names=self.objective_names,
                             strategy=self.strategy_name,

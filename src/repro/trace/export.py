@@ -102,6 +102,30 @@ def _exposed_counters(rank: int, spans: List[Span],
     return events
 
 
+def _p2p_flow_events(channels: Dict[Tuple[int, ...], Dict[str, List]],
+                     scale: float) -> List[Dict]:
+    """Flow ("s"/"f") events binding each matched p2p send slice to its
+    recv slice.  Channels key on the pair's rank group; within a channel
+    the k-th send pairs with the k-th recv in commit order — the FIFO
+    discipline ``convert.split_pipeline_stages`` enforces with ctrl-edge
+    chains and the MPMD engine's (group, occurrence) barrier keying."""
+    events: List[Dict] = []
+    fid = 0
+    for key in sorted(channels):
+        ch = channels[key]
+        for send, recv in zip(ch.get("send", []), ch.get("recv", [])):
+            srank, ss = send
+            rrank, rs = recv
+            fid += 1
+            events.append({"ph": "s", "pid": srank, "tid": _TID[ss.stream],
+                           "ts": ss.start * scale, "id": fid,
+                           "name": "p2p", "cat": "p2p"})
+            events.append({"ph": "f", "bp": "e", "pid": rrank,
+                           "tid": _TID[rs.stream], "ts": rs.start * scale,
+                           "id": fid, "name": "p2p", "cat": "p2p"})
+    return events
+
+
 def to_chrome_trace(result, graph: Optional[chakra.Graph] = None,
                     meta: Optional[Dict] = None) -> Dict:
     """Render a timeline-carrying sim result as a Chrome-trace dict.
@@ -110,16 +134,29 @@ def to_chrome_trace(result, graph: Optional[chakra.Graph] = None,
     fingerprints, op classes and payload bytes — pass it whenever you have
     it; round-trip validation relies on the fingerprints.  For MPMD runs
     pass the ``MPMDProgram`` (or a ``{rank: Graph}`` dict) and each rank's
-    process is annotated from its *own* graph."""
+    process is annotated from its *own* graph.  Matched p2p send/recv
+    pairs (``comm_kind="p2p"``, from ``split_pipeline_stages``) get Chrome
+    flow events so Perfetto draws the cross-rank arrow.
+
+    Event ordering is deterministic: all process/thread metadata first
+    (sorted by pid, with ``process_sort_index`` pinning rank order in the
+    viewer), then per-rank slices, counters and flows."""
     scale = 1e6                        # seconds -> Chrome microseconds
+    meta_events: List[Dict] = []
     events: List[Dict] = []
+    # (src_rank, dst_rank) channel -> {"send": [(rank, span)], "recv": ...}
+    channels: Dict[Tuple[int, ...], Dict[str, List]] = {}
     for rank, spans in _per_rank_spans(result):
         g_r = graph_for_rank(graph, rank)
-        events.append({"ph": "M", "pid": rank, "name": "process_name",
-                       "args": {"name": f"rank {rank}"}})
+        meta_events.append({"ph": "M", "pid": rank, "name": "process_name",
+                            "args": {"name": f"rank {rank}"}})
+        meta_events.append({"ph": "M", "pid": rank,
+                            "name": "process_sort_index",
+                            "args": {"sort_index": rank}})
         for tid, tname in _THREAD_NAMES.items():
-            events.append({"ph": "M", "pid": rank, "tid": tid,
-                           "name": "thread_name", "args": {"name": tname}})
+            meta_events.append({"ph": "M", "pid": rank, "tid": tid,
+                                "name": "thread_name",
+                                "args": {"name": tname}})
         for s in sorted(spans, key=lambda s: (s.start, _TID[s.stream])):
             args: Dict = {"nid": s.nid}
             cat = s.stream
@@ -130,11 +167,20 @@ def to_chrome_trace(result, graph: Optional[chakra.Graph] = None,
                 cb = n.attrs.get("comm_bytes", 0.0)
                 if cb:
                     args["comm_bytes"] = cb
+                if n.attrs.get("comm_kind") == "p2p":
+                    pg = tuple(n.attrs.get("group") or ())
+                    if len(pg) == 2 and rank in pg:
+                        side = "send" if rank == pg[0] else "recv"
+                        channels.setdefault(pg, {}) \
+                            .setdefault(side, []).append((rank, s))
             events.append({"ph": "X", "pid": rank, "tid": _TID[s.stream],
                            "ts": s.start * scale,
                            "dur": (s.end - s.start) * scale,
                            "name": s.name, "cat": cat, "args": args})
         events.extend(_exposed_counters(rank, spans, g_r, scale))
+    events.extend(_p2p_flow_events(channels, scale))
+    meta_events.sort(key=lambda e: (e["pid"], e.get("tid", -1), e["name"]))
+    events = meta_events + events
     md = {"schema": TRACE_SCHEMA, "time_unit": "us"}
     if isinstance(graph, chakra.Graph):
         md["n_nodes"] = len(graph)
@@ -158,3 +204,34 @@ def export_chrome_trace(result, path: str,
         json.dump(trace, f)
         f.write("\n")
     return trace
+
+
+def obs_chrome_trace(recorder, meta: Optional[Dict] = None) -> Dict:
+    """Render a ``repro.obs`` recorder's self-spans as a Chrome-trace dict:
+    one process per OS pid (the parent plus any pool workers), spans as
+    complete events on a single thread, counters/gauges in the metadata.
+    Same event layout conventions as ``to_chrome_trace`` (metadata first,
+    sorted, with ``process_sort_index``)."""
+    scale = 1e6
+    spans = list(recorder.spans)
+    pids = sorted({p for _, _, _, p in spans})
+    t0 = min((start for _, start, _, _ in spans), default=recorder.t0)
+    meta_events: List[Dict] = []
+    for i, p in enumerate(pids):
+        label = "main" if i == 0 else f"worker {p}"
+        meta_events.append({"ph": "M", "pid": p, "name": "process_name",
+                            "args": {"name": f"{label} (pid {p})"}})
+        meta_events.append({"ph": "M", "pid": p, "name": "process_sort_index",
+                            "args": {"sort_index": i}})
+    meta_events.sort(key=lambda e: (e["pid"], e["name"]))
+    events = meta_events + [
+        {"ph": "X", "pid": p, "tid": 0, "ts": (start - t0) * scale,
+         "dur": (end - start) * scale, "name": name, "cat": "obs"}
+        for name, start, end, p in sorted(spans, key=lambda s: s[1])]
+    md = {"schema": TRACE_SCHEMA, "time_unit": "us", "obs": True,
+          "counters": dict(sorted(recorder.counters.items())),
+          "gauges": dict(sorted(recorder.gauges.items())),
+          "dropped_spans": recorder.dropped_spans}
+    if meta:
+        md.update(meta)
+    return {"traceEvents": events, "displayTimeUnit": "ms", "metadata": md}

@@ -1,0 +1,408 @@
+"""Observability layer: disabled-overhead bound, fork-safe counter
+identity, bit-exact blame attribution, explain diffs, flow events and the
+report CLI."""
+import json
+import random
+
+import pytest
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra, convert
+from repro.core.costmodel import build_topology, compile_graph, simulate
+from repro.core.costmodel.simulator import simulate_cluster
+from repro.core.dse import Knob
+from repro.obs import record as obs
+from repro.obs.explain import (COMPONENTS, blame, critical_path, explain,
+                               explain_diff, utilization_counters)
+from repro.search.run import SearchRun
+
+SYS = SystemConfig(chips=16)
+TOPO = build_topology(SYS)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_recorder():
+    """Tests must not leak a live recorder into the rest of the suite."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+def rand_graph(rng: random.Random, n: int) -> chakra.Graph:
+    """Random DAG over all node types (mirrors test_compiled_sim)."""
+    g = chakra.Graph()
+    for i in range(n):
+        k = min(i, 4)
+        deps = rng.sample(range(i), rng.randint(0, k)) if i else []
+        ctrl = rng.sample(range(i), rng.randint(0, k)) if i else []
+        r = rng.random()
+        if r < 0.5 or i == 0:
+            g.add(f"n{i}", chakra.COMP, deps=deps, ctrl_deps=ctrl,
+                  flops=rng.uniform(0, 1e9), bytes=rng.uniform(0, 1e8),
+                  out_bytes=rng.choice([0.0, rng.uniform(1, 100)]))
+        elif r < 0.8:
+            g.add(f"c{i}", chakra.COMM_COLL, deps=deps, ctrl_deps=ctrl,
+                  comm_kind=rng.choice(["all-gather", "all-reduce",
+                                        "reduce-scatter"]),
+                  comm_bytes=rng.uniform(1, 1e7), out_bytes=8.0,
+                  group=list(range(rng.choice([2, 4, 8, 16]))))
+        else:
+            g.add(f"m{i}", chakra.MEM, deps=deps, ctrl_deps=ctrl,
+                  out_bytes=4.0)
+    return g
+
+
+def layer_stack(n_layers: int) -> chakra.Graph:
+    g = chakra.Graph()
+    prev = None
+    for i in range(n_layers):
+        c = g.add(f"mm{i}", chakra.COMP,
+                  deps=[prev] if prev is not None else [], flops=1e9,
+                  bytes=1e7, out_bytes=1e4)
+        a = g.add(f"ar{i}", chakra.COMM_COLL, deps=[c],
+                  comm_kind="all-reduce", comm_bytes=4e6,
+                  group=list(range(16)))
+        prev = a
+    return g
+
+
+# ---------------------------------------------------------------------------
+# recording primitives
+# ---------------------------------------------------------------------------
+
+def test_disabled_primitives_are_noops_and_cheap():
+    import time
+    assert not obs.recording()
+    obs.counter("x")
+    obs.gauge("x", 1.0)
+    with obs.span("x"):
+        pass
+    assert obs.current() is None
+
+    # modeled overhead bound (<3% of a 10k-node simulate): primitives
+    # reached per engine run x measured disabled cost per primitive
+    g = layer_stack(2500)
+    simulate(g, SYS, TOPO)                        # warm
+    cg = compile_graph(g)
+    dur = cg.durations(SYS, TOPO)
+    t0 = time.perf_counter()
+    cg.run(dur)
+    t_sim = time.perf_counter() - t0
+
+    rec = obs.enable()
+    cg.run(dur)
+    n_events = rec.n_events
+    obs.disable()
+    assert n_events > 0
+
+    n = 50_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        obs.counter("noop")
+    per_call = (time.perf_counter() - t0) / n
+    overhead = n_events * per_call / t_sim * 100.0
+    assert overhead < 3.0
+
+
+def test_counters_spans_and_hit_rates():
+    rec = obs.enable()
+    obs.counter("a.hit")
+    obs.counter("a.hit")
+    obs.counter("a.miss")
+    obs.counter("weighted", 2.5)
+    obs.gauge("g", 7.0)
+    with obs.span("work"):
+        pass
+    assert rec.counters["a.hit"] == 2.0
+    assert rec.counters["weighted"] == 2.5
+    hr = obs.hit_rates(rec.counters)
+    assert hr["a"]["rate"] == pytest.approx(2.0 / 3.0)
+    m = obs.metrics_dict()
+    assert m["schema"] == obs.METRICS_SCHEMA
+    assert m["gauges"]["g"] == 7.0
+    assert m["spans"]["by_name"]["work"]["n"] == 1
+    obs.disable()
+
+
+def test_span_cap_drops_and_counts():
+    rec = obs.enable(span_cap=3)
+    for _ in range(5):
+        with obs.span("s"):
+            pass
+    assert len(rec.spans) == 3
+    assert rec.dropped_spans == 2
+    obs.disable()
+
+
+def test_sim_stack_counters():
+    """The instrumented engine paths produce the advertised counters."""
+    g = layer_stack(10)
+    rec = obs.enable()
+    simulate(g, SYS, TOPO)
+    simulate(g, SYS, TOPO)                        # second run hits the memo
+    c = rec.counters
+    assert c["compile.graphs"] == 1.0
+    assert c["engine.runs"] == 1.0
+    assert c["sim.result_cache.miss"] == 1.0
+    assert c["sim.result_cache.hit"] == 1.0
+    assert any(s[0] == "engine.run" for s in rec.spans)
+    obs.disable()
+
+
+def test_counter_identity_serial_vs_pooled():
+    """A pooled sweep reports the same counter totals as a serial one."""
+    knobs = [Knob("prefetch", [0, 2, 4]), Knob("bucket_bytes", [None, 64e6])]
+
+    def sweep(jobs: int):
+        # fresh graphs per run so neither sweep sees the other's caches
+        def graph_for(cfg):
+            return layer_stack(8)
+        rec = obs.enable()
+        SearchRun(graph_for, SYS, knobs, strategy="grid", budget=6,
+                  seed=0, jobs=jobs).run()
+        obs.disable()
+        return rec
+
+    serial = sweep(1)
+    pooled = sweep(4)
+    # generation *count* is a batching observable (6x1 serial vs 4+2
+    # pooled) — every work counter must match exactly
+    sc = {k: v for k, v in serial.counters.items()
+          if k != "search.generations"}
+    pc = {k: v for k, v in pooled.counters.items()
+          if k != "search.generations"}
+    assert sc == pc
+    assert serial.counters["search.gen_trials"] == \
+        pooled.counters["search.gen_trials"] == 6.0
+    # pool/worker stats live outside counters; a forked run records them
+    from repro.core.pool import pool_available
+    if pool_available():
+        assert pooled.pool.get("sections")
+        assert pooled.workers
+        assert sum(w["items"] for w in pooled.workers.values()) == 6
+    assert serial.pool == {}
+
+
+def test_search_and_fault_counters():
+    from repro.faults import CheckpointPolicy, FaultRates
+    from repro.faults.montecarlo import monte_carlo
+    g = layer_stack(6)
+    rec = obs.enable()
+    s0 = float(simulate_cluster(g, SYS, TOPO).total_time)
+    rates = FaultRates(fail_rate=1.0 / (100 * s0), fail_downtime=20 * s0)
+    pol = CheckpointPolicy(interval=10, write_cost=s0, restore_cost=s0)
+    monte_carlo(g, SYS, rates, pol, topo=TOPO, n_steps=40, n_trials=3,
+                seed=1)
+    c = rec.counters
+    assert c.get("faults.segment_sim", 0) >= 1
+    assert c.get("faults.memo_served", 0) >= 1
+    obs.disable()
+
+
+# ---------------------------------------------------------------------------
+# blame attribution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("overlap", [True, False])
+def test_blame_sums_to_makespan_random_dags(seed, overlap):
+    rng = random.Random(seed)
+    g = rand_graph(rng, 120)
+    res = simulate(g, SYS, TOPO, overlap=overlap, keep_timeline=True)
+    e = explain(res, graph=g, with_critical_path=False)
+    b = e.blame()
+    assert b.total() == res.total_time            # bit-exact, not approx
+    assert b.identity_ok()
+    assert all(v >= 0.0 for v in b.components.values())
+    # per-class terms are the same partition
+    import math
+    assert math.fsum(v for v in b.by_class.values()) == \
+        pytest.approx(res.total_time, rel=1e-12)
+
+
+def test_blame_identity_mpmd_pipeline():
+    g = layer_stack(24)
+    prog = convert.split_pipeline_stages(g, 2)
+    res = simulate_cluster(prog, SYS, TOPO, keep_timeline=True)
+    e = explain(res, graph=prog)
+    assert e.identity_ok()
+    for r, b in e.ranks.items():
+        assert b.makespan == res.step_time
+        assert b.total() == res.step_time         # every rank, bit-exact
+    # a pipeline run has cross-stage dependencies: someone waits or stalls
+    total_idle = sum(b.barrier_wait + b.stall for b in e.ranks.values())
+    assert total_idle > 0.0
+
+
+def test_blame_wait_split_and_stall():
+    # hand-built spans: comp [0,2), comm with 3s wait [2,6), stall to 10
+    from repro.core.costmodel.simulator import Span
+    spans = [Span(0, "a", "comp", 0.0, 2.0),
+             Span(1, "b", "comm", 2.0, 6.0, 3.0)]
+    b = blame(spans, 10.0)
+    assert b.components["compute_busy"] == 2.0
+    assert b.components["barrier_wait"] == 3.0
+    assert b.components["exposed_comm"] == 1.0
+    assert b.components["stall"] == 4.0
+    assert b.total() == 10.0
+
+
+def test_explain_diff_identity():
+    g = layer_stack(20)
+    a = simulate(g, SYS, TOPO, keep_timeline=True)
+    b = simulate(g, SYS, TOPO, keep_timeline=True, compute_derate=0.3)
+    d = explain_diff(a, b, graph_a=g, graph_b=g)
+    assert d.total() == b.total_time - a.total_time
+    assert d.identity_ok()
+    assert set(d.by_component) == set(COMPONENTS)
+    # slower compute shows up as a positive compute/class delta
+    assert d.delta_makespan > 0
+    assert max(d.by_class.values()) > 0
+
+
+def test_critical_path_terminates_and_chains():
+    g = layer_stack(15)
+    res = simulate(g, SYS, TOPO, keep_timeline=True)
+    cp = critical_path(res, graph=g)
+    assert 0 < len(cp) <= 2 * 15
+    assert cp[-1].end == pytest.approx(res.total_time)
+    for prev, cur in zip(cp, cp[1:]):
+        assert cur.start >= prev.end - 1e-12
+
+    prog = convert.split_pipeline_stages(g, 2)
+    cres = simulate_cluster(prog, SYS, TOPO, keep_timeline=True)
+    cpc = critical_path(cres, graph=prog)
+    assert cpc
+    assert cpc[-1].rank == cres.slowest_rank
+
+
+def test_utilization_counters():
+    g = layer_stack(10)
+    res = simulate(g, SYS, TOPO, keep_timeline=True)
+    evs = utilization_counters(res)
+    assert evs
+    names = {e["name"] for e in evs}
+    assert "util_compute" in names
+    assert all(e["ph"] == "C" for e in evs)
+
+
+# ---------------------------------------------------------------------------
+# trace export: metadata ordering + p2p flow events
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_metadata_sorted_first_and_p2p_flows():
+    from repro.trace.export import to_chrome_trace
+    g = layer_stack(16)
+    prog = convert.split_pipeline_stages(g, 2)
+    res = simulate_cluster(prog, SYS, TOPO, keep_timeline=True)
+    tr = to_chrome_trace(res, graph=prog)
+    evs = tr["traceEvents"]
+    n_meta = sum(1 for e in evs if e["ph"] == "M")
+    assert all(e["ph"] == "M" for e in evs[:n_meta])
+    assert not any(e["ph"] == "M" for e in evs[n_meta:])
+    meta_pids = [e["pid"] for e in evs[:n_meta]]
+    assert meta_pids == sorted(meta_pids)
+    assert any(e["name"] == "process_sort_index" for e in evs[:n_meta])
+
+    flows = [e for e in evs if e["ph"] in ("s", "f")]
+    assert flows, "pipeline trace must carry p2p flow events"
+    starts = {e["id"]: e for e in flows if e["ph"] == "s"}
+    finishes = {e["id"]: e for e in flows if e["ph"] == "f"}
+    assert set(starts) == set(finishes)
+    for fid, s in starts.items():
+        f = finishes[fid]
+        assert s["pid"] != f["pid"]               # crosses ranks
+        assert f["bp"] == "e"
+        assert s["cat"] == f["cat"] == "p2p"
+
+
+def test_obs_chrome_trace_roundtrip(tmp_path):
+    obs.enable()
+    with obs.span("outer"):
+        with obs.span("inner"):
+            pass
+    obs.counter("k.hit")
+    path = str(tmp_path / "trace.json")
+    obs.dump_trace(path)
+    obs.disable()
+    tr = json.load(open(path))
+    names = [e["name"] for e in tr["traceEvents"] if e["ph"] == "X"]
+    assert set(names) == {"outer", "inner"}
+    assert tr["metadata"]["counters"]["k.hit"] == 1.0
+    assert tr["traceEvents"][0]["ph"] == "M"
+
+
+# ---------------------------------------------------------------------------
+# progress callbacks + report CLI
+# ---------------------------------------------------------------------------
+
+def test_searchrun_progress_callback():
+    knobs = [Knob("prefetch", [0, 2, 4, 8])]
+    calls = []
+    r = SearchRun(lambda cfg: layer_stack(6), SYS, knobs, strategy="grid",
+                  budget=4, seed=0, progress=calls.append,
+                  progress_interval=0.0)
+    res = r.run()
+    assert calls, "progress must fire"
+    assert calls[-1]["done"] is True
+    assert calls[-1]["trials"] == len(res.trials) == 4
+    assert calls[-1]["best"] == res.best.objective
+    assert all(c["budget"] == 4 for c in calls)
+    # rate limiting: a huge interval suppresses all but the final call
+    calls2 = []
+    SearchRun(lambda cfg: layer_stack(6), SYS, knobs, strategy="grid",
+              budget=4, seed=0, progress=calls2.append,
+              progress_interval=3600.0).run()
+    assert len(calls2) == 1 and calls2[0]["done"] is True
+
+
+def test_monte_carlo_progress_callback():
+    from repro.faults import CheckpointPolicy, FaultRates
+    from repro.faults.montecarlo import monte_carlo
+    g = layer_stack(6)
+    s0 = float(simulate_cluster(g, SYS, TOPO).total_time)
+    rates = FaultRates(fail_rate=1.0 / (100 * s0))
+    calls = []
+    monte_carlo(g, SYS, rates, CheckpointPolicy(), topo=TOPO, n_steps=20,
+                n_trials=3, seed=0, progress=calls.append,
+                progress_interval=0.0)
+    assert calls[-1] == {"trials": 3, "total": 3,
+                         "elapsed": calls[-1]["elapsed"], "done": True}
+    assert [c["trials"] for c in calls[:-1]] == sorted(
+        c["trials"] for c in calls[:-1])
+
+
+def test_report_cli_renders_real_sweep(tmp_path, capsys):
+    """`python -m repro.obs report` on metrics from a pooled SearchRun
+    shows cache hit rates and (when a pool ran) worker utilization."""
+    from repro.obs.report import main as report_main
+    knobs = [Knob("prefetch", [0, 2, 4]), Knob("bucket_bytes", [None, 64e6])]
+    obs.enable()
+    SearchRun(lambda cfg: layer_stack(8), SYS, knobs, strategy="grid",
+              budget=6, seed=0, jobs=3).run()
+    path = str(tmp_path / "metrics.json")
+    obs.dump_metrics(path)
+    obs.disable()
+    assert report_main(["report", path]) == 0
+    out = capsys.readouterr().out
+    assert "top spans by total time" in out
+    assert "cache hit rates" in out
+    assert "sim.result_cache" in out
+    from repro.core.pool import pool_available
+    if pool_available():
+        assert "pool utilization" in out
+
+
+def test_search_cli_progress_and_obs(tmp_path, capsys):
+    from repro.search.cli import main as cli_main
+    gpath = str(tmp_path / "g.json")
+    layer_stack(6).save(gpath)
+    mpath = str(tmp_path / "m.json")
+    rc = cli_main(["run", gpath, "--knob", "prefetch=0,2", "--budget", "2",
+                   "--strategy", "grid", "--progress", "--obs", mpath])
+    assert rc == 0
+    err = capsys.readouterr().err
+    assert "progress:" in err
+    m = json.load(open(mpath))
+    assert m["counters"]["search.gen_trials"] == 2.0
+    assert not obs.recording()                    # CLI cleaned up
