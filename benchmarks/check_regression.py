@@ -2,12 +2,13 @@
 subsystem's round-trip/calibration figures, the search subsystem's
 sample-efficiency figures, the MPMD engine's exactness/coalescing figures,
 the fault subsystem's segmented-resim/Young-Daly figures, the
-parallel/delta DSE figures or the obs instrumentation's
-overhead/blame-identity figures fall outside the bounds recorded in
+parallel/delta DSE figures, the obs instrumentation's
+overhead/blame-identity figures or the memory-timeline
+identity/overhead/OOM-sweep figures fall outside the bounds recorded in
 benchmarks/thresholds.json.  A plain-number threshold is a floor;
-``{"max": v}`` is a ceiling (the obs overhead percentage gates from
-above).  Every gated key is printed as one PASS/FAIL/SKIP table row and
-the table is written to artifacts/bench/BENCH_summary.json.
+``{"max": v}`` is a ceiling (the obs and memory overhead percentages
+gate from above).  Every gated key is printed as one PASS/FAIL/SKIP
+table row and the table is written to artifacts/bench/BENCH_summary.json.
 
 Usage (the verify recipe's perf gate):
 
@@ -18,6 +19,7 @@ Usage (the verify recipe's perf gate):
     PYTHONPATH=.:src python -m benchmarks.fault_scenarios --smoke
     PYTHONPATH=.:src python -m benchmarks.parallel_dse --smoke
     PYTHONPATH=.:src python -m benchmarks.obs_overhead --smoke
+    PYTHONPATH=.:src python -m benchmarks.memory_timeline --smoke
     PYTHONPATH=.:src python -m benchmarks.check_regression
 
 or in one shot::
@@ -25,9 +27,10 @@ or in one shot::
     PYTHONPATH=.:src python -m benchmarks.check_regression --run-smoke
 
 Reads artifacts/bench/BENCH_sim.json, BENCH_trace.json, BENCH_search.json,
-BENCH_mpmd.json, BENCH_fault.json and BENCH_parallel.json (``--bench`` /
-``--trace-bench`` / ``--search-bench`` / ``--mpmd-bench`` /
-``--fault-bench`` / ``--parallel-bench`` to override).
+BENCH_mpmd.json, BENCH_fault.json, BENCH_parallel.json, BENCH_obs.json and
+BENCH_memory.json (``--bench`` / ``--trace-bench`` / ``--search-bench`` /
+``--mpmd-bench`` / ``--fault-bench`` / ``--parallel-bench`` /
+``--obs-bench`` / ``--memory-bench`` to override).
 The speedup floors are deliberately conservative — they hold for both the
 full and ``--smoke`` matrices on a loaded machine — so a failure means the
 engine actually regressed, not that the box was busy; the trace floors are
@@ -43,7 +46,12 @@ parallel floors gate the process-pool + delta re-simulation PR
 (pool_identity/delta_identity are exactness contracts enforced
 everywhere; the ``pool_speedup`` floor only applies when the box reports
 >= 4 usable cores, since a smaller box physically cannot show pool
-scaling).  Exit code 1 on regression, 2 on missing inputs.
+scaling), and the memory floors gate the memory-timeline PR
+(occupancy-curve identity and blame coverage are bit-exactness
+contracts, the overhead ceiling bounds the observability-attributable
+cost of a lean simulate, and oom_sweep_ok requires an
+hbm_bytes-constrained search to record OOM-infeasible trials without
+crashing).  Exit code 1 on regression, 2 on missing inputs.
 """
 from __future__ import annotations
 
@@ -67,6 +75,8 @@ DEFAULT_PARALLEL_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
                                       "BENCH_parallel.json")
 DEFAULT_OBS_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
                                  "BENCH_obs.json")
+DEFAULT_MEMORY_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
+                                    "BENCH_memory.json")
 DEFAULT_THRESH = os.path.join(HERE, "thresholds.json")
 
 
@@ -103,7 +113,7 @@ def evaluate(bench: dict, thresholds: dict) -> list:
         for key, thr in sim_floors.items():
             one(f"simulate.{size}", key, thr, row.get(key))
     for section in ("straggler", "explore", "trace", "search", "mpmd",
-                    "fault", "obs"):
+                    "fault", "obs", "memory"):
         for key, thr in thresholds.get(section, {}).items():
             one(section, key, thr, bench.get(section, {}).get(key))
     par = bench.get("parallel", {})
@@ -148,6 +158,8 @@ def main(argv=None) -> int:
                     help="BENCH_parallel.json path")
     ap.add_argument("--obs-bench", default=DEFAULT_OBS_BENCH,
                     help="BENCH_obs.json path")
+    ap.add_argument("--memory-bench", default=DEFAULT_MEMORY_BENCH,
+                    help="BENCH_memory.json path")
     ap.add_argument("--thresholds", default=DEFAULT_THRESH)
     ap.add_argument("--run-smoke", action="store_true",
                     help="run every bench module with --smoke first to "
@@ -155,9 +167,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.run_smoke:
-        from benchmarks import (fault_scenarios, mpmd_pipeline, obs_overhead,
-                                parallel_dse, search_bench, sim_bench,
-                                trace_roundtrip)
+        from benchmarks import (fault_scenarios, memory_timeline,
+                                mpmd_pipeline, obs_overhead, parallel_dse,
+                                search_bench, sim_bench, trace_roundtrip)
         sim_bench.main(["--smoke"])
         trace_roundtrip.main(["--smoke"])
         search_bench.main(["--smoke"])
@@ -165,6 +177,7 @@ def main(argv=None) -> int:
         fault_scenarios.main(["--smoke"])
         parallel_dse.main(["--smoke"])
         obs_overhead.main(["--smoke"])
+        memory_timeline.main(["--smoke"])
 
     bench = {}
     for path, key, producer in ((args.bench, None, "sim_bench"),
@@ -179,7 +192,9 @@ def main(argv=None) -> int:
                                 (args.parallel_bench, "parallel",
                                  "parallel_dse"),
                                 (args.obs_bench, "obs",
-                                 "obs_overhead")):
+                                 "obs_overhead"),
+                                (args.memory_bench, "memory",
+                                 "memory_timeline")):
         if not os.path.exists(path):
             print(f"check_regression: no bench file at {path} "
                   f"(run benchmarks.{producer} first, or pass --run-smoke)")

@@ -29,12 +29,17 @@
   obs_overhead     (ours)  obs instrumentation: modeled disabled-primitive
                            overhead of a 10k-node simulate (< 3% ceiling)
                            + explain() blame-sums-to-makespan exactness
+  memory_timeline  (ours)  memory-timeline subsystem: bit-exact occupancy
+                           curve/blame identities across engines, lean-run
+                           observability overhead (< 3% ceiling), and the
+                           hbm_bytes OOM-infeasible search sweep
   check_regression (gate)  fails if BENCH_sim speedups, BENCH_trace
                            round-trip/calibration, BENCH_search
                            sample-efficiency, BENCH_mpmd
                            exactness/coalescing, BENCH_fault
-                           segmented/recovery, BENCH_parallel pool/delta
-                           or BENCH_obs overhead/blame figures fall
+                           segmented/recovery, BENCH_parallel pool/delta,
+                           BENCH_obs overhead/blame or BENCH_memory
+                           identity/overhead/OOM-sweep figures fall
                            outside benchmarks/thresholds.json bounds;
                            writes the consolidated PASS/FAIL table to
                            BENCH_summary.json
@@ -50,7 +55,7 @@ BENCHES = ["opcounts", "e2e_validation", "fsdp_reorder", "bandwidth_sweep",
            "wafer_tacos", "nic_degradation", "roofline", "sim_bench",
            "hetero_cluster", "trace_roundtrip", "search_bench",
            "mpmd_pipeline", "fault_scenarios", "parallel_dse",
-           "obs_overhead", "check_regression"]
+           "obs_overhead", "memory_timeline", "check_regression"]
 
 
 def main() -> None:

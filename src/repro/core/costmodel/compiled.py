@@ -64,6 +64,7 @@ contract).
 from __future__ import annotations
 
 import heapq
+import math
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -75,6 +76,114 @@ from repro.obs import record as obs
 
 _TYPE_CODES = {chakra.COMP: 0, chakra.COMM_COLL: 1, chakra.COMM_SEND: 2,
                chakra.COMM_RECV: 3, chakra.MEM: 4}
+
+
+class ExactSum:
+    """Incremental exact float accumulator (Shewchuk partials).
+
+    ``add(x)`` folds x into a list of non-overlapping partials;
+    ``value()`` returns ``math.fsum(partials)``, which equals the
+    correctly-rounded sum of *every* value added so far — i.e. the same
+    double ``math.fsum`` would produce over the full prefix.  This gives
+    O(n·k) exact prefix sums (k = partial count, tiny in practice)
+    instead of O(n²) repeated fsum, and it is what makes the engines'
+    ``peak_bytes`` agree bit-exactly with ``obs.memory``'s occupancy
+    curve: both are correctly-rounded sums of the same event deltas."""
+    __slots__ = ("partials",)
+
+    def __init__(self):
+        self.partials: List[float] = []
+
+    def add(self, x: float) -> None:
+        ps = self.partials
+        i = 0
+        for y in ps:
+            if abs(x) < abs(y):
+                x, y = y, x
+            hi = x + y
+            lo = y - (hi - x)
+            if lo:
+                ps[i] = lo
+                i += 1
+            x = hi
+        ps[i:] = [x]
+
+    def value(self) -> float:
+        return math.fsum(self.partials)
+
+
+def exact_peak(mem_events: List, integral: Optional[bool] = None) -> float:
+    """Exact scheduled peak occupancy (bytes) from ``(t, delta, nid)``
+    liveness events: the max over elementary-interval breakpoints of the
+    correctly-rounded running occupancy.  Within a timestamp group the
+    sort order puts frees (negative deltas) first, so the running value
+    dips then rises and per-event maxima equal per-breakpoint maxima —
+    the same argument the historical float scan relied on.  The floor of
+    0.0 also matches the historical scan.
+
+    Runs in the engine hot path, so there are two exact strategies:
+
+    * **integral fast path** — when every delta is an integer-valued
+      float and the total allocation stays below 2**53, every running
+      partial sum is an integer that a double represents exactly, so the
+      plain ``live += d`` scan *is* the exact scan at pre-instrumentation
+      cost.  ``integral=True`` is a caller-side certificate of that
+      precondition (``CompiledGraph._mem_integral`` checks its byte
+      arrays once, vectorised); ``integral=None`` derives it from the
+      events themselves (one cheap pass).
+
+    * **integer-scaled fallback** — otherwise every delta is still a
+      dyadic rational (``float.as_integer_ratio``), so scaling by the
+      largest denominator makes the running sum an exact Python int.
+      The final ``int / 2**shift`` division is correctly rounded, and
+      rounding is monotone, so the rounded max equals the max of the
+      per-breakpoint correctly-rounded sums.
+
+    Either way the result is bit-identical to what ``obs.memory``'s
+    ``ExactSum`` curve reports (property-tested in tests/test_memory.py).
+    """
+    if not mem_events:
+        return 0.0
+    events = sorted(mem_events)
+    if integral is None:
+        tot = 0.0
+        integral = True
+        for e in events:
+            d = e[1]
+            if not d.is_integer():
+                integral = False
+                break
+            tot += d if d >= 0.0 else -d
+        # conservative: naive |d| sum may itself round, so demand a
+        # whole factor-of-2 margin below the 2**53 exactness bound
+        integral = integral and tot < 2.0 ** 52
+    if integral:
+        live = 0.0
+        peak = 0.0
+        for e in events:
+            live += e[1]
+            if live > peak:
+                peak = live
+        return peak
+    shift = 0
+    scaled = []
+    for e in events:
+        num, den = e[1].as_integer_ratio()
+        b = den.bit_length() - 1
+        if b > shift:
+            shift = b
+        scaled.append((e[0], num, b))
+    acc = 0
+    peak = 0
+    i, m = 0, len(scaled)
+    while i < m:
+        t = scaled[i][0]
+        while i < m and scaled[i][0] == t:
+            acc += scaled[i][1] << (shift - scaled[i][2])
+            i += 1
+        if acc > peak:
+            peak = acc
+    return peak / (1 << shift) if peak else 0.0
 
 
 def _csr(adj: List, n: int):
@@ -111,6 +220,15 @@ class CompiledGraph:
                                     for nd in nodes], dtype=np.float64)
         self.out_bytes = np.array([nd.attrs.get("out_bytes", 0.0)
                                    for nd in nodes], dtype=np.float64)
+        # exact_peak fast-path certificate: byte sizes integer-valued and
+        # total allocation comfortably below 2**53 means every running
+        # occupancy is an exactly-representable integer, so the plain
+        # float scan is already exact (NaN/inf fail the checks -> fallback)
+        _ob, _cb = np.abs(self.out_bytes), np.abs(self.comm_bytes)
+        self._mem_integral = bool(
+            np.all(np.floor(self.out_bytes) == self.out_bytes)
+            and np.all(np.floor(self.comm_bytes) == self.comm_bytes)
+            and float(_ob.sum() + _cb.sum()) * 2.0 < 2.0 ** 53)
 
         deps_l, ddeps_l, cons_l = [], [], [[] for _ in range(n)]
         for nd in nodes:
@@ -130,6 +248,7 @@ class CompiledGraph:
         self._is_comm = self.is_comm.astype(np.int64).tolist()
         self._is_coll = (self.type_code == 1).astype(np.int64).tolist()
         self._out_bytes = self.out_bytes.tolist()
+        self._comm_bytes = self.comm_bytes.tolist()
         self._deps = deps_l
         self._ddeps = ddeps_l
         self._cons = [tuple(c) for c in cons_l]
@@ -404,6 +523,7 @@ class CompiledGraph:
         ddeps = self._ddeps
         cons = self._cons
         out_b = self._out_bytes
+        comm_b = self._comm_bytes
         is_comm = self._is_comm
         scode = is_comm if overlap else self._zeros
         remaining = st.remaining
@@ -471,7 +591,14 @@ class CompiledGraph:
                                      "comm" if s else "comp", start, end))
             ob = out_b[nid]
             if ob:
-                mem_events.append((start, ob))
+                mem_events.append((start, ob, nid))
+            if is_comm[nid]:
+                cb = comm_b[nid]
+                if cb:
+                    # transient comm buffer: live only for the span; the
+                    # bitwise-complement id tags it as node ~nid's buffer
+                    mem_events.append((start, cb, ~nid))
+                    mem_events.append((end, -cb, ~nid))
             for c in cons[nid]:
                 r = remaining[c] - 1
                 remaining[c] = r
@@ -496,29 +623,31 @@ class CompiledGraph:
                 if r <= 0:
                     ob = out_b[dd]
                     if ob:
-                        mem_events.append((end, -ob))
+                        mem_events.append((end, -ob, dd))
 
         st.total = total
         st.sf0, st.sf1 = sf0, sf1
         st.busy0, st.busy1 = busy0, busy1
         st.scheduled = scheduled
 
-    def _finalize(self, st: "_RunState"):
-        """SimResult from a fully-run state (st.scheduled == self.n)."""
+    def _finalize(self, st: "_RunState", peak_bytes: Optional[float] = None):
+        """SimResult from a fully-run state (st.scheduled == self.n).
+        ``peak_bytes`` short-circuits the event scan when the caller
+        already holds the exact peak (delta re-simulation's incremental
+        prefix/tail split, costmodel.delta)."""
         from repro.core.costmodel.simulator import SimResult
 
-        live = peak = 0.0
-        for _, delta in sorted(st.mem_events):
-            live += delta
-            if live > peak:
-                peak = live
         exposed = st.total - st.busy0
         if exposed < 0.0:
             exposed = 0.0
+        if peak_bytes is None:
+            peak_bytes = exact_peak(st.mem_events, self._mem_integral)
         return SimResult(total_time=st.total, compute_time=st.busy0,
                          comm_time=st.busy1, exposed_comm=exposed,
-                         peak_bytes=peak, n_nodes=self.n,
-                         timeline=st.timeline)
+                         peak_bytes=peak_bytes,
+                         n_nodes=self.n, timeline=st.timeline,
+                         mem_events=(st.mem_events
+                                     if st.timeline is not None else None))
 
     def canonical_coll_order(self, dur: List[float],
                              overlap: bool = True) -> List[int]:
@@ -740,7 +869,7 @@ def run_rows(rows: List[RowSpec], overlap: bool = True,
             if r <= 0:
                 ob = out_b[dd]
                 if ob:
-                    st.mem_events.append((end, -ob))
+                    st.mem_events.append((end, -ob, dd))
 
     def _complete_suspended(w, b, end):
         """Finish the commit a suspended row w started when it arrived at
@@ -766,7 +895,11 @@ def run_rows(rows: List[RowSpec], overlap: bool = True,
                                     b[1] - arr))
         ob = spec.cg._out_bytes[nid]
         if ob:
-            st.mem_events.append((arr, ob))
+            st.mem_events.append((arr, ob, nid))
+        cb = spec.cg._comm_bytes[nid]
+        if cb:
+            st.mem_events.append((arr, cb, ~nid))
+            st.mem_events.append((end, -cb, ~nid))
         _deliver(st, spec, nid, end)
 
     ready = list(range(J))
@@ -784,6 +917,7 @@ def run_rows(rows: List[RowSpec], overlap: bool = True,
         ddeps = cg._ddeps
         cons = cg._cons
         out_b = cg._out_bytes
+        comm_b = cg._comm_bytes
         is_comm = cg._is_comm
         names = cg._names
         scode = is_comm if overlap else cg._zeros
@@ -885,7 +1019,11 @@ def run_rows(rows: List[RowSpec], overlap: bool = True,
                                              start, end, b[1] - start))
                     ob = out_b[nid]
                     if ob:
-                        mem_events.append((start, ob))
+                        mem_events.append((start, ob, nid))
+                    cb = comm_b[nid]
+                    if cb:
+                        mem_events.append((start, cb, ~nid))
+                        mem_events.append((end, -cb, ~nid))
                     # consumer/ddep bookkeeping reads the stream clocks
                     st.sf0, st.sf1 = sf0, sf1
                     _deliver(st, spec, nid, end)
@@ -908,7 +1046,12 @@ def run_rows(rows: List[RowSpec], overlap: bool = True,
                                      "comm" if s else "comp", start, end))
             ob = out_b[nid]
             if ob:
-                mem_events.append((start, ob))
+                mem_events.append((start, ob, nid))
+            if is_comm[nid]:
+                cb = comm_b[nid]
+                if cb:
+                    mem_events.append((start, cb, ~nid))
+                    mem_events.append((end, -cb, ~nid))
             for c in cons[nid]:
                 r = remaining[c] - 1
                 remaining[c] = r
@@ -933,7 +1076,7 @@ def run_rows(rows: List[RowSpec], overlap: bool = True,
                 if r <= 0:
                     ob = out_b[dd]
                     if ob:
-                        mem_events.append((end, -ob))
+                        mem_events.append((end, -ob, dd))
 
         st.sf0, st.sf1 = sf0, sf1
         st.busy0, st.busy1 = busy0, busy1
@@ -959,18 +1102,17 @@ def run_rows(rows: List[RowSpec], overlap: bool = True,
 
     out, waits = [], []
     for spec, st in zip(rows, states):
-        live = peak = 0.0
-        for _, delta in sorted(st.mem_events):
-            live += delta
-            if live > peak:
-                peak = live
         exposed = st.total - st.busy0
         if exposed < 0.0:
             exposed = 0.0
         out.append(SimResult(total_time=st.total, compute_time=st.busy0,
                              comm_time=st.busy1, exposed_comm=exposed,
-                             peak_bytes=peak, n_nodes=spec.cg.n,
-                             timeline=st.timeline))
+                             peak_bytes=exact_peak(st.mem_events,
+                                                   spec.cg._mem_integral),
+                             n_nodes=spec.cg.n, timeline=st.timeline,
+                             mem_events=(st.mem_events
+                                         if st.timeline is not None
+                                         else None)))
         waits.append(st.wait)
     return out, waits
 

@@ -89,6 +89,7 @@ class DeltaBase:
         self.result = cg._finalize(st)
         self._snaps = snaps
         self._snap_idx = [i for i, _ in snaps]
+        self._peak_cache: Dict[int, tuple] = {}   # lazy, see _prefix_peak
         self.schedule: List[int] = [nid for nid, _ in record]
         self.finish: List[float] = [0.0] * n
         pos_of = [0] * n
@@ -119,6 +120,37 @@ class DeltaBase:
                         t = p
         return t
 
+    def _prefix_peak(self, k: int):
+        """Lazy per-checkpoint summary for incremental exact peaks:
+        ``(n_prefix_events, live_at_T, peak_low, high_events)``.
+
+        ``T = min(sf0, sf1)`` at the checkpoint: every event a suffix
+        replay appends has ``t >= T`` (a replayed node starts at or after
+        its stream's clock, and frees/transients carry times at or after
+        that start), so the liveness events split cleanly into the fixed
+        prefix strictly below ``T`` — scanned once here — and a tail
+        (``high_events`` + whatever the replay appends) that each delta
+        run re-scans from the carried-over occupancy ``live_at_T``.  No
+        timestamp group straddles the split, so per-breakpoint maxima
+        compose exactly.  Only used under the ``_mem_integral``
+        certificate, where every running sum is exact (see exact_peak)."""
+        hit = self._peak_cache.get(k)
+        if hit is None:
+            snap = self._snaps[k][1]
+            t_split = snap.sf0 if snap.sf0 < snap.sf1 else snap.sf1
+            low, high = [], []
+            for e in snap.mem_events:
+                (low if e[0] < t_split else high).append(e)
+            low.sort()
+            live = peak = 0.0
+            for e in low:
+                live += e[1]
+                if live > peak:
+                    peak = live
+            hit = self._peak_cache[k] = (len(snap.mem_events), live, peak,
+                                         high)
+        return hit
+
     def run(self, overrides: Optional[Dict] = None):
         """SimResult under ``base durations + overrides``, bit-identical to
         ``cg.run(_override(base, overrides), overlap, keep_timeline)``."""
@@ -132,6 +164,8 @@ class DeltaBase:
             res = dataclasses.replace(self.result)
             if res.timeline is not None:
                 res.timeline = list(res.timeline)
+            if res.mem_events is not None:
+                res.mem_events = list(res.mem_events)
             return res
         k = bisect_right(self._snap_idx, t_star) - 1
         st = self._snaps[k][1].copy()
@@ -144,7 +178,18 @@ class DeltaBase:
             if 0 <= nid < n:
                 dur[nid] = v
         cg._run_span(st, dur, self.overlap, n)
-        return cg._finalize(st)
+        if not cg._mem_integral:
+            return cg._finalize(st)
+        # incremental exact peak: scan only the checkpoint's boundary
+        # events + the replayed suffix instead of the whole event list
+        n_prefix, live, peak, high = self._prefix_peak(k)
+        tail = high + st.mem_events[n_prefix:]
+        tail.sort()
+        for e in tail:
+            live += e[1]
+            if live > peak:
+                peak = live
+        return cg._finalize(st, peak_bytes=peak)
 
 
 def delta_base(cg: CompiledGraph, dur: List[float], overlap: bool = True,

@@ -69,7 +69,7 @@ from repro.core import chakra
 from repro.core.costmodel.collectives import collective_time
 from repro.obs import record as obs
 from repro.core.costmodel.compiled import (CompiledGraph, compile_graph,
-                                           result_cache_put)
+                                           exact_peak, result_cache_put)
 from repro.core.costmodel.topology import (RankProfile, Topology,
                                            build_topology)
 
@@ -99,13 +99,23 @@ class SimResult:
     compute_time: float           # busy time of COMP/MEM nodes
     comm_time: float              # busy time of COMM_* nodes
     exposed_comm: float           # comm time not hidden by compute
-    peak_bytes: float             # activations + comm buffers (no params)
+    peak_bytes: float             # schedule-aware peak occupancy (bytes):
+                                  # exact max of the liveness curve over the
+                                  # *scheduled* timeline, incl. transient
+                                  # comm buffers (analytic engines report
+                                  # the topo-order proxy instead)
     n_nodes: int
     timeline: Optional[List] = None
+    # (t, delta_bytes, nid) liveness events behind peak_bytes; nid >= 0 is
+    # the producing node's out_bytes tensor, nid < 0 a transient comm
+    # buffer of node ~nid.  Kept only with keep_timeline=True — the raw
+    # material of ``repro.obs.memory``'s occupancy curves.
+    mem_events: Optional[List] = None
 
     def as_dict(self):
         d = dataclasses.asdict(self)
         d.pop("timeline")
+        d.pop("mem_events")
         return d
 
     def spans(self) -> List[Span]:
@@ -221,6 +231,15 @@ def simulate_analytic(g: chakra.Graph, system,
     ``simulate()`` reduced to a roofline bound (step >= busier stream's busy
     time with overlap, >= their sum without), and ``peak_bytes`` from the
     topo-order liveness proxy instead of the scheduled timeline.
+
+    The proxy/scheduled relation (property-tested in tests/test_memory.py):
+    ``peak_bytes`` here equals ``peak_memory_proxy(g)`` exactly.  Under
+    ``overlap=False`` the event engines visit exactly the canonical topo
+    order (one stream, greedy lowest-position), so their out_bytes-only
+    peak equals the proxy and their full ``peak_bytes`` — which adds
+    transient comm buffers — is ``>=`` it.  Under ``overlap=True`` the
+    two-stream schedule may reorder allocations, so the proxy is a
+    *schedule-independent estimate*, not a bound.
 
     A strict lower bound on ``simulate()``'s ``total_time`` for the same
     config (dependencies can only add idle gaps), ~10-100x cheaper, and it
@@ -367,7 +386,13 @@ def _simulate_reference(g: chakra.Graph, system,
             timeline.append(Span(n.id, n.name, s, start, end))
         out_b = n.attrs.get("out_bytes", 0.0)
         if out_b:
-            mem_events.append((start, out_b))
+            mem_events.append((start, out_b, nid))
+        if n.type in _COMM_TYPES:
+            cb = n.attrs.get("comm_bytes", 0.0)
+            if cb:
+                # transient comm buffer, tagged by the complement node id
+                mem_events.append((start, cb, ~nid))
+                mem_events.append((end, -cb, ~nid))
         for c in set(consumers[nid]):
             remaining[c] -= 1
             if remaining[c] == 0:
@@ -380,17 +405,15 @@ def _simulate_reference(g: chakra.Graph, system,
             if data_consumers[d] <= 0:
                 ob = g.node(d).attrs.get("out_bytes", 0.0)
                 if ob:
-                    mem_events.append((end, -ob))
+                    mem_events.append((end, -ob, d))
 
     total = max(finish.values(), default=0.0)
-    live = peak = 0.0
-    for t, delta in sorted(mem_events):
-        live += delta
-        peak = max(peak, live)
     exposed = max(0.0, total - busy["comp"])
     return SimResult(total_time=total, compute_time=busy["comp"],
                      comm_time=busy["comm"], exposed_comm=exposed,
-                     peak_bytes=peak, n_nodes=len(g.nodes), timeline=timeline)
+                     peak_bytes=exact_peak(mem_events), n_nodes=len(g.nodes),
+                     timeline=timeline,
+                     mem_events=mem_events if keep_timeline else None)
 
 
 # ---------------------------------------------------------------------------

@@ -32,12 +32,19 @@ class RankProfile:
     ``peak_flops``/``hbm_bw`` are absolute overrides (None -> SystemConfig
     value); ``compute_scale`` multiplies both (a 1.5x-slower degraded host is
     ``compute_scale=1/1.5``); ``link_scale`` multiplies this rank's link
-    bandwidth in every collective/p2p it participates in."""
+    bandwidth in every collective/p2p it participates in.
+
+    ``hbm_bytes`` is this rank's memory *capacity* (for OOM feasibility
+    checks against the schedule-aware ``peak_bytes``, see ``core.dse`` and
+    ``obs.memory``).  Like ``tag`` it does not affect timing, so it is
+    excluded from ``is_default()`` — a capacity-only profile must stay on
+    the symmetric/coalesced simulation path."""
     peak_flops: Optional[float] = None
     hbm_bw: Optional[float] = None
     compute_scale: float = 1.0
     link_scale: float = 1.0
     tag: str = ""
+    hbm_bytes: Optional[float] = None
 
     def is_default(self) -> bool:
         return (self.peak_flops is None and self.hbm_bw is None

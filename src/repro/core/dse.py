@@ -41,6 +41,13 @@ per-rank ``RankProfile``s and the objective reads the slowest rank's step
 time, so ``explore``/``greedy_descent`` sweep mixed-generation or
 partially-degraded clusters exactly like any other hardware knob.
 
+Memory-capacity knob: ``hbm_bytes`` sets the per-rank HBM capacity.  A
+trial whose schedule-aware ``peak_bytes`` exceeds it raises
+``OOMInfeasible`` — ``SearchRun`` records the trial as failed (excluded
+from ``best`` and the Pareto front) instead of crashing the sweep, so
+memory-constrained searches are just one more knob (see
+``check_memory_feasible`` and ``RankProfile.hbm_bytes``).
+
 Pipeline knobs: ``num_stages`` / ``stage_assignment`` split the
 software-transformed graph into an S-stage MPMD pipeline program
 (``convert.split_pipeline_stages``, memoized per graph) with
@@ -121,6 +128,34 @@ _HETERO_KNOBS = ("degraded_fraction", "degraded_link_scale",
 # p99_step_time_under_faults / makespan_inflation from a small seeded
 # Monte-Carlo — composable with the hetero and pipeline knobs above
 _FAULT_KNOBS = ("checkpoint_interval", "fault_rate", "spare_ranks")
+
+
+class OOMInfeasible(RuntimeError):
+    """A trial whose schedule-aware peak occupancy exceeds the per-rank HBM
+    capacity (``hbm_bytes`` config key, cf. ``RankProfile.hbm_bytes``).
+
+    Deliberately an *exception*, not a penalty value: ``SearchRun``'s
+    failed-trial machinery records it (error string + ``FAILED_OBJECTIVE``)
+    without killing the sweep, and the trial is excluded from ``best`` /
+    ``full_trials`` / the Pareto front — exactly how a real cluster job
+    that OOMs burns its allocation without producing a measurement."""
+
+    def __init__(self, peak_bytes: float, capacity: float):
+        self.peak_bytes = peak_bytes
+        self.capacity = capacity
+        super().__init__(
+            f"peak occupancy {peak_bytes:.6g} B exceeds hbm_bytes "
+            f"capacity {capacity:.6g} B "
+            f"({peak_bytes / capacity:.2%} of HBM)")
+
+
+def check_memory_feasible(res, config: Dict) -> None:
+    """Raise ``OOMInfeasible`` when the trial's ``peak_bytes`` (schedule-
+    aware: exact occupancy-curve max incl. transient comm buffers) exceeds
+    the ``hbm_bytes`` capacity in `config`.  No capacity -> no check."""
+    cap = config.get("hbm_bytes")
+    if cap is not None and res.peak_bytes > cap:
+        raise OOMInfeasible(res.peak_bytes, float(cap))
 
 
 def rank_profiles_for(n_ranks: int, config: Dict) -> Optional[Dict]:
@@ -279,6 +314,9 @@ def _simulate_cfg(g2: chakra.Graph, system, config: Dict,
         workload = g2
         res = simulate(g2, sys2, topo, algo=sys2.collective_algo,
                        compute_derate=compute_derate)
+    # OOM feasibility gate before the (expensive) fault Monte-Carlo: an
+    # infeasible trial raises, and SearchRun records it as failed
+    check_memory_feasible(res, config)
     if any(config.get(k) is not None for k in _FAULT_KNOBS):
         from repro.faults.montecarlo import fault_metrics
         res = fault_metrics(workload, sys2, topo, config, res,

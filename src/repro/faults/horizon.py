@@ -72,6 +72,12 @@ class HorizonResult:
     n_checkpoints: int
     n_segments: int
     n_signatures: int
+    # worst per-survivor memory-occupancy inflation over executed segments:
+    # an elastic rescale to Kc survivors redistributes the failed ranks'
+    # shards, inflating each survivor's occupancy by ~K/Kc (1.0 = never
+    # rescaled).  Multiply the nominal schedule-aware ``peak_bytes`` by
+    # this before checking an ``hbm_bytes`` capacity (see ``obs.memory``).
+    survivor_mem_inflation: float = 1.0
     # (step_time, count) pairs of executed steps — Monte-Carlo pools these
     # across trials for aggregate percentiles
     step_records: List[Tuple[float, int]] = dataclasses.field(
@@ -217,6 +223,7 @@ def simulate_horizon(workload, system, scenario: FaultScenario,
     lost_steps = 0
     lost_s = ckpt_s = restore_s = stall_s = downtime_s = 0.0
     n_fail = n_ckpt = 0
+    mem_infl = 1.0
 
     guard = 0
     while True:
@@ -296,6 +303,10 @@ def simulate_horizon(workload, system, scenario: FaultScenario,
             t = nb
             continue
 
+        if failed and is_graph:
+            infl = K / float(K - len(failed))
+            if infl > mem_infl:
+                mem_infl = infl
         s = step_time(frozenset(failed), active)
         room = max(1, int((nb - t) / s)) if nb < _INF else _INF
         chunk = policy.interval - since
@@ -344,5 +355,6 @@ def simulate_horizon(workload, system, scenario: FaultScenario,
         checkpoint_s=ckpt_s, restore_s=restore_s, stall_s=stall_s,
         downtime_s=downtime_s, n_failures=n_fail, n_checkpoints=n_ckpt,
         n_segments=len(segments), n_signatures=len(sigs_seen),
+        survivor_mem_inflation=mem_infl,
         step_records=sorted(records.items()),
         segments=[tuple(sg) for sg in segments] if keep_segments else None)

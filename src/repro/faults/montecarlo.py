@@ -68,6 +68,11 @@ class MonteCarloResult:
     p99_step_time: float
     mean_failures: float
     n_trials: int
+    # worst survivor memory-occupancy inflation seen in any trial (elastic
+    # rescale packs failed ranks' shards onto survivors, ~K/Kc; 1.0 = no
+    # rescale happened) — multiply the nominal peak_bytes by this when
+    # checking hbm_bytes capacity under faults
+    max_survivor_mem_inflation: float = 1.0
     trials: Optional[List[HorizonResult]] = None
 
     def as_dict(self) -> dict:
@@ -197,6 +202,8 @@ def monte_carlo(workload, system, rates: FaultRates,
         p99_step_time=_weighted_pct(pooled, 0.99),
         mean_failures=sum(hr.n_failures for hr in results) / len(results),
         n_trials=n_trials,
+        max_survivor_mem_inflation=max(
+            (hr.survivor_mem_inflation for hr in results), default=1.0),
         trials=results if keep_trials else None)
 
 

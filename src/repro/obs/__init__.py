@@ -12,10 +12,15 @@ Side B (workload attribution): ``repro.obs.explain`` decomposes a
 simulated timeline into compute / exposed-comm / barrier-wait / stall
 blame that sums to the makespan bit-exactly, walks the critical path,
 and ``explain_diff`` attributes a step-time delta between two configs.
-Import the functions from the submodule (the package keeps import-time
-dependencies minimal so the instrumented core can import it):
+``repro.obs.memory`` is the bytes-axis counterpart: schedule-resolved
+per-rank occupancy curves with a bit-exact class decomposition,
+``memory_blame`` (live tensors at the peak) and ``memory_diff``
+(peak-delta attribution between configs).  Import the functions from
+the submodules (the package keeps import-time dependencies minimal so
+the instrumented core can import it):
 
     from repro.obs.explain import explain, explain_diff
+    from repro.obs.memory import memory_timeline, memory_blame
 """
 from repro.obs.record import (Recorder, counter, current, disable,
                               dump_metrics, dump_trace, enable, gauge,
@@ -25,19 +30,27 @@ from repro.obs.record import (Recorder, counter, current, disable,
 __all__ = ["Recorder", "counter", "current", "disable", "dump_metrics",
            "dump_trace", "enable", "gauge", "hit_rates", "merge_child",
            "metrics_dict", "recording", "span", "span_summary",
-           "explain_diff", "explain_result", "explain_cluster"]
+           "explain_diff", "explain_result", "explain_cluster",
+           "memory_timeline", "memory_blame", "memory_diff"]
 
 _EXPLAIN_NAMES = {"explain_diff", "explain_result", "explain_cluster",
                   "critical_path", "utilization_counters",
                   "export_explain_trace"}
 
+_MEMORY_NAMES = {"memory_timeline", "memory_blame", "memory_diff",
+                 "memory_counters", "export_memory_trace"}
+
 
 def __getattr__(name):
-    # lazy: repro.obs.explain imports the simulator, which imports this
-    # package for its counters — eager import would be a cycle
+    # lazy: repro.obs.explain / repro.obs.memory import the simulator,
+    # which imports this package for its counters — eager import would
+    # be a cycle
     if name in _EXPLAIN_NAMES:
         from repro.obs import explain as _explain
         if name in ("explain_result", "explain_cluster"):
             return _explain.explain
         return getattr(_explain, name)
+    if name in _MEMORY_NAMES:
+        from repro.obs import memory as _memory
+        return getattr(_memory, name)
     raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

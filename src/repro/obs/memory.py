@@ -1,0 +1,469 @@
+"""Memory-timeline observability: schedule-resolved occupancy curves.
+
+The engines' ``peak_bytes`` is a single scalar; this module reconstructs
+the *whole curve* behind it — per-rank occupancy over time, resolved
+against the actual simulated schedule (overlap, barrier stalls and MPMD
+skew all move what is live when) — and makes it attributable:
+
+Occupancy curves (``memory_timeline``)
+    Each engine records ``(t, delta_bytes, nid)`` liveness events
+    (``SimResult.mem_events``, kept with ``keep_timeline=True``): a
+    tensor's ``out_bytes`` allocates at its producer's start and frees
+    when its last data consumer finishes; a COMM node's ``comm_bytes``
+    is a transient buffer live exactly for the span, tagged with the
+    bitwise-complement node id ``~nid``.  The curve is evaluated at the
+    elementary-interval breakpoints those events induce, with Shewchuk
+    ``ExactSum`` accumulators per memory class (weights / activations /
+    comm), so two identities hold **bit-exactly** at every breakpoint:
+
+      (a) the class decomposition sums to the total occupancy — the
+          union of the class accumulators' exact partials ``fsum``s to
+          the very float the total accumulator reports;
+      (b) the curve max equals the engine's ``peak_bytes`` to the last
+          ulp (both are correctly-rounded sums of the same deltas,
+          computed by independent walks).
+
+Peak blame (``memory_blame``)
+    The live tensors at the instant of peak.  A freed tensor's alloc and
+    free deltas are exact negations, so the live tensors' bytes ``fsum``
+    to the peak bit-exactly (``identity_ok``) — coverage is total, not
+    best-effort.
+
+Peak diff (``memory_diff``)
+    Attributes ``b.peak - a.peak`` between two configs to memory classes
+    (mirroring ``explain_diff``): per-run class terms are chosen so they
+    sum *exactly* (in real arithmetic) to that run's float peak — class
+    curve values plus an explicit ``(rounding)`` residual captured with
+    ``ExactSum`` — so the signed term union ``fsum``s to the IEEE
+    difference of the two peaks bit-exactly.
+
+Classification: a node's ``mem_class`` attr wins; an all-gather's output
+is ``weights`` (the FSDP gathered-parameter shape); any other
+``out_bytes`` is ``activations``; ``~nid`` transients are ``comm``.
+
+``memory_counters`` / ``export_memory_trace`` render the per-rank curves
+as Chrome trace counter tracks; ``memory_timeline`` publishes per-rank
+peak (and time-above-90%-capacity when ``hbm_bytes`` is given) as obs
+gauges, which ``python -m repro.obs report --memory`` prints.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import chakra
+from repro.core.costmodel.compiled import ExactSum
+from repro.core.costmodel.simulator import ClusterSimResult, SimResult
+from repro.obs import record as obs
+
+MEM_CLASSES = ("weights", "activations", "comm")
+_ROUNDING = "(rounding)"
+
+
+def mem_class(graph: Optional[chakra.Graph], nid: int) -> str:
+    """Memory class of one liveness event's tensor.  ``nid < 0`` is the
+    transient comm buffer of node ``~nid``; for real tensors an explicit
+    ``mem_class`` node attr wins, an all-gather's output counts as
+    gathered weights, everything else is an activation."""
+    if nid < 0:
+        return "comm"
+    if graph is None:
+        return "activations"
+    n = graph.node(nid)
+    mc = n.attrs.get("mem_class")
+    if mc:
+        return str(mc)
+    if (n.type == chakra.COMM_COLL
+            and n.attrs.get("comm_kind") == "all-gather"):
+        return "weights"
+    return "activations"
+
+
+def _mem_events_of(result: SimResult) -> List[Tuple]:
+    if result.mem_events is None:
+        raise ValueError("no mem_events recorded: re-run the simulation "
+                         "with keep_timeline=True")
+    return result.mem_events
+
+
+@dataclass
+class RankMemory:
+    """One rank's occupancy curve over its scheduled timeline.
+
+    ``times[i]`` are the elementary-interval breakpoints (every distinct
+    event time); ``total[i]`` / ``by_class[c][i]`` the occupancy in force
+    on ``[times[i], times[i+1])``.  ``peak_bytes`` replicates the
+    engine's exact scan (floor 0.0), so ``identity_ok()`` certifies both
+    bit-exact contracts: per-breakpoint class decomposition == total
+    (checked during construction) and curve max == the engine's
+    ``peak_bytes``."""
+    rank: int
+    times: List[float]
+    total: List[float]
+    by_class: Dict[str, List[float]]
+    peak_bytes: float
+    peak_time: float
+    engine_peak: float
+    hbm_bytes: Optional[float] = None
+    events: List[Tuple] = field(repr=False, default_factory=list)
+    _decomp_ok: bool = field(repr=False, default=True)
+
+    def identity_ok(self) -> bool:
+        return self._decomp_ok and self.peak_bytes == self.engine_peak
+
+    def class_at(self, t: float) -> Dict[str, float]:
+        """Class occupancy in force at time ``t`` (step function)."""
+        i = _step_index(self.times, t)
+        if i < 0:
+            return {c: 0.0 for c in self.by_class}
+        return {c: vs[i] for c, vs in self.by_class.items()}
+
+    def time_above(self, threshold: float) -> float:
+        """Total seconds the occupancy strictly exceeds ``threshold``
+        (the step function holds each value until the next breakpoint;
+        the final value is a point in time, i.e. contributes nothing)."""
+        s = 0.0
+        for i in range(len(self.times) - 1):
+            if self.total[i] > threshold:
+                s += self.times[i + 1] - self.times[i]
+        return s
+
+    def utilization(self) -> Optional[float]:
+        """peak / capacity, when ``hbm_bytes`` is known."""
+        if not self.hbm_bytes:
+            return None
+        return self.peak_bytes / self.hbm_bytes
+
+
+def _step_index(times: List[float], t: float) -> int:
+    from bisect import bisect_right
+    return bisect_right(times, t) - 1
+
+
+def _build_rank(mem_events: List[Tuple], graph: Optional[chakra.Graph],
+                rank: int, engine_peak: float,
+                hbm_bytes: Optional[float]) -> RankMemory:
+    """Sweep one rank's events into an exact occupancy curve."""
+    events = sorted(mem_events)
+    cls_of: Dict[int, str] = {}
+    for _t, _d, nid in events:
+        if nid not in cls_of:
+            cls_of[nid] = mem_class(graph, nid)
+    classes = [c for c in MEM_CLASSES if c in cls_of.values()]
+    for c in sorted(set(cls_of.values())):
+        if c not in classes:                     # custom mem_class attrs
+            classes.append(c)
+
+    accs = {c: ExactSum() for c in classes}
+    total_acc = ExactSum()
+    times: List[float] = []
+    total: List[float] = []
+    by_class: Dict[str, List[float]] = {c: [] for c in classes}
+    decomp_ok = True
+    peak = 0.0
+    peak_time = 0.0
+    i, m = 0, len(events)
+    while i < m:
+        t = events[i][0]
+        while i < m and events[i][0] == t:
+            _t, d, nid = events[i]
+            accs[cls_of[nid]].add(d)
+            total_acc.add(d)
+            i += 1
+        v = total_acc.value()
+        times.append(t)
+        total.append(v)
+        for c in classes:
+            by_class[c].append(accs[c].value())
+        # identity (a): the union of the class accumulators' exact
+        # partials is an exact representation of the same real sum the
+        # total accumulator holds — fsum of the union must reproduce the
+        # total's float bit-for-bit
+        parts = [p for c in classes for p in accs[c].partials]
+        if math.fsum(parts) != v:
+            decomp_ok = False
+        if v > peak:
+            peak = v
+            peak_time = t
+    return RankMemory(rank=rank, times=times, total=total, by_class=by_class,
+                      peak_bytes=peak, peak_time=peak_time,
+                      engine_peak=engine_peak, hbm_bytes=hbm_bytes,
+                      events=events, _decomp_ok=decomp_ok)
+
+
+@dataclass
+class MemoryTimeline:
+    """Per-rank occupancy curves of one simulated result.  ``ranks`` maps
+    rank id -> RankMemory (classes expanded for cluster results, so
+    coalesced and naive runs produce identical per-rank curves)."""
+    ranks: Dict[int, RankMemory]
+    hbm_bytes: Optional[float] = None
+
+    @property
+    def peak_bytes(self) -> float:
+        return max(rm.peak_bytes for rm in self.ranks.values())
+
+    @property
+    def peak_rank(self) -> int:
+        pk = self.peak_bytes
+        return min(r for r, rm in self.ranks.items() if rm.peak_bytes == pk)
+
+    def identity_ok(self) -> bool:
+        return all(rm.identity_ok() for rm in self.ranks.values())
+
+    def table(self) -> str:
+        cap = self.hbm_bytes
+        lines = [f"peak occupancy {self.peak_bytes:.6e} B on rank "
+                 f"{self.peak_rank} ({len(self.ranks)} ranks)"]
+        for r in sorted(self.ranks):
+            rm = self.ranks[r]
+            at_peak = rm.class_at(rm.peak_time)
+            cls = "  ".join(f"{c}={v:.3e}" for c, v in at_peak.items() if v)
+            line = (f"  rank {r:<4} peak {rm.peak_bytes:>12.6e} B "
+                    f"@ t={rm.peak_time:.3e}s   {cls}")
+            if cap:
+                hot = rm.time_above(0.9 * cap)
+                line += (f"   {rm.peak_bytes / cap:6.1%} of HBM, "
+                         f">90% for {hot:.3e}s")
+            lines.append(line)
+        return "\n".join(lines)
+
+
+def memory_timeline(result, graph=None,
+                    hbm_bytes: Optional[float] = None) -> MemoryTimeline:
+    """Occupancy curves for a timeline-carrying ``SimResult`` /
+    ``ClusterSimResult``.  ``graph`` (Graph / MPMDProgram / {rank: Graph})
+    enriches tensor classes; ``hbm_bytes`` (per-rank capacity) enables
+    utilization / time-above-90% reporting.  Publishes per-rank gauges
+    when obs recording is on."""
+    from repro.trace.export import graph_for_rank
+    if isinstance(result, SimResult):
+        rm = _build_rank(_mem_events_of(result), graph_for_rank(graph, 0),
+                         0, result.peak_bytes, hbm_bytes)
+        ranks = {0: rm}
+    elif isinstance(result, ClusterSimResult):
+        ranks = {}
+        for r in range(result.n_ranks):
+            rr = result.rank_result(r)
+            ranks[r] = _build_rank(_mem_events_of(rr),
+                                   graph_for_rank(graph, r), r,
+                                   rr.peak_bytes, hbm_bytes)
+    else:
+        raise TypeError(f"expected SimResult or ClusterSimResult, "
+                        f"got {type(result).__name__}")
+    tl = MemoryTimeline(ranks=ranks, hbm_bytes=hbm_bytes)
+    if obs.recording():
+        for r, rm in tl.ranks.items():
+            obs.gauge(f"memory.rank{r}.peak_bytes", rm.peak_bytes)
+            if hbm_bytes:
+                obs.gauge(f"memory.rank{r}.time_at_90pct",
+                          rm.time_above(0.9 * hbm_bytes))
+                obs.gauge(f"memory.rank{r}.hbm_bytes", float(hbm_bytes))
+    return tl
+
+
+# ------------------------------------------------------------------ blame
+
+@dataclass
+class LiveTensor:
+    """One tensor live at the instant of peak."""
+    nid: int                  # producing node id (< 0: comm buffer of ~nid)
+    name: str
+    cls: str
+    bytes: float
+    alloc_t: float
+    free_t: Optional[float]   # None: never freed inside the step
+
+
+@dataclass
+class MemoryBlame:
+    """The live-tensor set at one rank's occupancy peak.  The tensors'
+    bytes ``fsum`` to ``peak_bytes`` bit-exactly (freed tensors' alloc and
+    free deltas cancel exactly), so coverage is provably total."""
+    rank: int
+    peak_bytes: float
+    peak_time: float
+    tensors: List[LiveTensor]
+
+    def total(self) -> float:
+        return math.fsum(t.bytes for t in self.tensors)
+
+    def identity_ok(self) -> bool:
+        return self.total() == self.peak_bytes
+
+    def by_class(self) -> Dict[str, float]:
+        out: Dict[str, List[float]] = {}
+        for t in self.tensors:
+            out.setdefault(t.cls, []).append(t.bytes)
+        return {c: math.fsum(vs) for c, vs in out.items()}
+
+    def table(self, top: int = 12) -> str:
+        lines = [f"rank {self.rank} peak {self.peak_bytes:.6e} B at "
+                 f"t={self.peak_time:.3e}s — {len(self.tensors)} live "
+                 f"tensors (top {min(top, len(self.tensors))}):"]
+        for t in self.tensors[:top]:
+            freed = "step end" if t.free_t is None else f"{t.free_t:.3e}s"
+            lines.append(f"  {t.name:<28} {t.cls:<12} {t.bytes:>12.6e} B  "
+                         f"[{t.alloc_t:.3e}s -> {freed}]")
+        return "\n".join(lines)
+
+
+def memory_blame(result, graph=None, rank: Optional[int] = None,
+                 hbm_bytes: Optional[float] = None) -> MemoryBlame:
+    """Live tensors at the instant of peak occupancy.  ``rank=None``
+    picks the peak rank of a cluster result (rank 0 for a plain
+    ``SimResult``).  Also accepts a ready-made ``MemoryTimeline``."""
+    from repro.trace.export import graph_for_rank
+    tl = (result if isinstance(result, MemoryTimeline)
+          else memory_timeline(result, graph, hbm_bytes))
+    r = tl.peak_rank if rank is None else rank
+    rm = tl.ranks[r]
+    g_r = graph_for_rank(graph, r)
+
+    alloc: Dict[int, Tuple[float, float]] = {}    # nid -> (t, bytes)
+    free: Dict[int, float] = {}
+    pt = rm.peak_time
+    for t, d, nid in rm.events:
+        if t <= pt:
+            if d > 0:
+                alloc[nid] = (t, d)
+            else:
+                free[nid] = t
+        elif d < 0 and nid in alloc:
+            free.setdefault(nid, t)
+    tensors = []
+    for nid, (t0, b) in alloc.items():
+        ft = free.get(nid)
+        if ft is not None and ft <= pt:
+            continue                               # freed before the peak
+        if nid >= 0:
+            name = g_r.node(nid).name if g_r is not None else f"n{nid}"
+        else:
+            base = (g_r.node(~nid).name if g_r is not None else f"n{~nid}")
+            name = f"{base} (comm buffer)"
+        tensors.append(LiveTensor(nid=nid, name=name,
+                                  cls=mem_class(g_r, nid), bytes=b,
+                                  alloc_t=t0, free_t=ft))
+    tensors.sort(key=lambda t: (-t.bytes, t.nid))
+    return MemoryBlame(rank=r, peak_bytes=rm.peak_bytes,
+                       peak_time=rm.peak_time, tensors=tensors)
+
+
+# ------------------------------------------------------------------- diff
+
+def _peak_terms(rm: RankMemory) -> Dict[str, List[float]]:
+    """Per-class terms that sum *exactly* (real arithmetic) to this
+    rank's float ``peak_bytes``: the class curve values at the peak
+    breakpoint plus an explicit rounding residual (``ExactSum`` of
+    ``peak - sum(class values)``; empty when bytes sum exactly, e.g.
+    integer-valued sizes)."""
+    at_peak = rm.class_at(rm.peak_time) if rm.times else {}
+    terms: Dict[str, List[float]] = {c: [v] for c, v in at_peak.items()}
+    acc = ExactSum()
+    acc.add(rm.peak_bytes)
+    for v in at_peak.values():
+        acc.add(-v)
+    resid = [p for p in acc.partials if p]
+    if resid:
+        terms[_ROUNDING] = resid
+    return terms
+
+
+@dataclass
+class MemoryDiff:
+    """Attribution of ``b.peak - a.peak`` between two configs.
+
+    ``by_class`` is a signed fsum reduction over both runs' peak terms,
+    so ``total()`` equals ``delta_peak`` (the IEEE difference of the two
+    float peaks) bit-exactly.  ``gained`` / ``lost`` name the largest
+    tensors live at one peak but not the other — descriptive, not part
+    of the identity."""
+    delta_peak: float
+    peak_a: float
+    peak_b: float
+    by_class: Dict[str, float]
+    gained: List[LiveTensor]
+    lost: List[LiveTensor]
+    terms: Dict[str, List[float]] = field(repr=False, default_factory=dict)
+
+    def total(self) -> float:
+        return math.fsum(t for ts in self.terms.values() for t in ts)
+
+    def identity_ok(self) -> bool:
+        return self.total() == self.delta_peak
+
+    def table(self, top: int = 6) -> str:
+        lines = [f"peak delta {self.delta_peak:+.6e} B "
+                 f"({self.peak_a:.6e} -> {self.peak_b:.6e}, b - a):"]
+        for c, v in sorted(self.by_class.items(), key=lambda kv: -abs(kv[1])):
+            lines.append(f"  {c:<14} {v:+12.6e} B")
+        if self.gained:
+            lines.append("largest tensors live only at b's peak:")
+            for t in self.gained[:top]:
+                lines.append(f"  + {t.name:<28} {t.cls:<12} {t.bytes:.3e} B")
+        if self.lost:
+            lines.append("largest tensors live only at a's peak:")
+            for t in self.lost[:top]:
+                lines.append(f"  - {t.name:<28} {t.cls:<12} {t.bytes:.3e} B")
+        return "\n".join(lines)
+
+
+def memory_diff(a, b, graph_a=None, graph_b=None) -> MemoryDiff:
+    """Attribute the peak-occupancy difference between two simulated
+    configs (``b`` minus ``a``, peak ranks) to memory classes.  Accepts
+    results or ready-made ``MemoryTimeline``s."""
+    ta = a if isinstance(a, MemoryTimeline) else memory_timeline(a, graph_a)
+    tb = b if isinstance(b, MemoryTimeline) else memory_timeline(b, graph_b)
+    ra, rb = ta.ranks[ta.peak_rank], tb.ranks[tb.peak_rank]
+    terms_a, terms_b = _peak_terms(ra), _peak_terms(rb)
+    keys = sorted(set(terms_a) | set(terms_b))
+    terms = {c: list(terms_b.get(c, ())) + [-t for t in terms_a.get(c, ())]
+             for c in keys}
+    ba = memory_blame(ta, graph_a)
+    bb = memory_blame(tb, graph_b)
+    key = lambda t: (t.nid, t.cls)
+    in_a = {key(t) for t in ba.tensors}
+    in_b = {key(t) for t in bb.tensors}
+    gained = [t for t in bb.tensors if key(t) not in in_a]
+    lost = [t for t in ba.tensors if key(t) not in in_b]
+    return MemoryDiff(delta_peak=rb.peak_bytes - ra.peak_bytes,
+                      peak_a=ra.peak_bytes, peak_b=rb.peak_bytes,
+                      by_class={c: math.fsum(ts) for c, ts in terms.items()},
+                      gained=gained, lost=lost, terms=terms)
+
+
+# -------------------------------------------------- Chrome counter tracks
+
+def memory_counters(result, graph=None, scale: float = 1e6,
+                    timeline: Optional[MemoryTimeline] = None) -> List[Dict]:
+    """Per-rank occupancy counter tracks (Chrome ``C`` events): one
+    ``memory_bytes`` track per rank whose stacked series are the memory
+    classes — append to a ``to_chrome_trace`` event list or use
+    ``export_memory_trace``."""
+    tl = timeline or memory_timeline(result, graph)
+    events: List[Dict] = []
+    for r in sorted(tl.ranks):
+        rm = tl.ranks[r]
+        classes = sorted(rm.by_class)
+        for i, t in enumerate(rm.times):
+            events.append({"ph": "C", "pid": r, "name": "memory_bytes",
+                           "ts": t * scale,
+                           "args": {c: rm.by_class[c][i] for c in classes}})
+    return events
+
+
+def export_memory_trace(result, path: str, graph=None,
+                        meta: Optional[Dict] = None) -> Dict:
+    """Chrome trace of the simulated timeline *plus* per-rank occupancy
+    counter tracks (process metadata stays sorted with
+    ``process_sort_index``, as ``to_chrome_trace`` emits it); returns
+    the trace dict."""
+    import json as _json
+    from repro.trace.export import to_chrome_trace
+    trace = to_chrome_trace(result, graph, meta)
+    trace["traceEvents"].extend(memory_counters(result, graph))
+    with open(path, "w") as f:
+        _json.dump(trace, f)
+        f.write("\n")
+    return trace

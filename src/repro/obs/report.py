@@ -13,6 +13,39 @@ import json
 from typing import List
 
 
+def render_memory(metrics: dict) -> str:
+    """Memory section: per-rank peak occupancy gauges published by
+    ``obs.memory.memory_timeline`` (``memory.rank<r>.peak_bytes``), plus
+    HBM utilization and time-above-90%-capacity when the run recorded a
+    capacity (``hbm_bytes`` set)."""
+    gauges = metrics.get("gauges", {})
+    ranks = {}
+    for name, v in gauges.items():
+        if not name.startswith("memory.rank"):
+            continue
+        rank_part, _, metric = name[len("memory."):].partition(".")
+        try:
+            r = int(rank_part[len("rank"):])
+        except ValueError:
+            continue
+        ranks.setdefault(r, {})[metric] = v
+    if not ranks:
+        return ("memory: no memory.rank*.peak_bytes gauges in this "
+                "metrics file (record a run that calls "
+                "obs.memory.memory_timeline)")
+    lines = [f"memory occupancy ({len(ranks)} ranks):"]
+    for r in sorted(ranks):
+        g = ranks[r]
+        pk = g.get("peak_bytes", 0.0)
+        line = f"  rank {r:<4} peak {pk:>12.6e} B"
+        cap = g.get("hbm_bytes")
+        if cap:
+            line += (f"  {pk / cap:6.1%} of HBM"
+                     f"  >90% for {g.get('time_at_90pct', 0.0):.3e} s")
+        lines.append(line)
+    return "\n".join(lines)
+
+
 def render(metrics: dict, top: int = 12) -> str:
     """Human-readable report of one ``metrics_dict`` snapshot."""
     lines: List[str] = []
@@ -86,11 +119,17 @@ def main(argv=None) -> int:
                     "search run --obs")
     rp.add_argument("--top", type=int, default=12,
                     help="span rows to show (default 12)")
+    rp.add_argument("--memory", action="store_true",
+                    help="append the per-rank memory-occupancy section "
+                         "(memory.rank*.peak_bytes gauges)")
     args = ap.parse_args(argv)
     if args.cmd == "report":
         with open(args.metrics) as f:
             metrics = json.load(f)
         print(render(metrics, top=args.top))
+        if args.memory:
+            print()
+            print(render_memory(metrics))
     return 0
 
 

@@ -30,6 +30,35 @@ DEFAULT_OBJECTIVES = ("total_time",)
 #: objective names that do not live on the sim result
 _GRAPH_METRICS = ("peak_memory_proxy",)
 
+#: result-attribute aliases: ``peak_memory_bytes`` is the schedule-aware
+#: peak (``SimResult.peak_bytes`` — exact occupancy-curve max including
+#: transient comm buffers), named to sit unambiguously beside the static
+#: ``peak_memory_proxy``.
+OBJECTIVE_ALIASES = {"peak_memory_bytes": "peak_bytes"}
+
+#: the vetted objective names a search may request: SimResult /
+#: ClusterSimResult fields, graph metrics, aliases, and the fault
+#: subsystem's FaultSimResult attributes.  ``validate_objectives``
+#: checks requests against this set up front so a typo fails at
+#: SearchRun construction, not deep inside the first evaluation.
+KNOWN_OBJECTIVES = frozenset({
+    "total_time", "step_time", "compute_time", "comm_time",
+    "exposed_comm", "peak_bytes", "peak_memory_bytes",
+    "peak_memory_proxy", "max_barrier_wait",
+    "expected_goodput", "goodput", "worst_goodput", "goodput_std",
+    "p99_step_time_under_faults", "makespan_inflation",
+})
+
+
+def validate_objectives(names: Sequence[str]) -> None:
+    """Raise ``ValueError`` listing the valid options if any requested
+    objective name is not in ``KNOWN_OBJECTIVES``."""
+    unknown = [n for n in names if n not in KNOWN_OBJECTIVES]
+    if unknown:
+        raise ValueError(
+            f"unknown objective(s) {sorted(unknown)!r}: valid names are "
+            f"{sorted(KNOWN_OBJECTIVES)}")
+
 #: objectives that are maximized (larger is better); everything else is
 #: minimized.  These live on ``FaultSimResult`` (repro.faults) — a trial
 #: config needs a fault knob (checkpoint_interval / fault_rate /
@@ -61,7 +90,8 @@ def trial_objectives(result, names: Sequence[str], graph=None) -> Dict:
             out[name] = float(peak_memory_proxy(graph))
         else:
             try:
-                out[name] = float(getattr(result, name))
+                out[name] = float(getattr(result,
+                                          OBJECTIVE_ALIASES.get(name, name)))
             except AttributeError:
                 hint = ""
                 if name in ("expected_goodput",

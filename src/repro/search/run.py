@@ -245,6 +245,7 @@ class SearchRun:
         self.objective_names = tuple(objectives)
         if not self.objective_names:
             raise ValueError("need at least one objective")
+        objmod.validate_objectives(self.objective_names)
         self.weights = list(weights) if weights is not None \
             else objmod.default_weights(self.objective_names)
         if len(self.weights) != len(self.objective_names):

@@ -1,0 +1,414 @@
+"""Memory-timeline observability (repro.obs.memory) + OOM-aware DSE.
+
+Bit-exact contracts, property-tested over randomized DAGs x overlap
+modes x all three engines (simulate / simulate_cluster / MPMD):
+  * per-breakpoint class decomposition (weights/activations/comm) sums
+    to the total occupancy bit-exactly,
+  * the curve max equals the engine's schedule-aware ``peak_bytes``,
+  * ``memory_blame``'s live tensors fsum to the peak exactly,
+  * ``memory_diff``'s signed terms fsum to the IEEE peak delta exactly,
+  * coalesced and naive cluster runs produce identical per-rank curves,
+  * the static ``peak_memory_proxy`` relation documented on
+    ``simulate_analytic`` (equality under overlap=False, out_bytes only).
+Plus the DSE surface: objective-name validation, the
+``peak_memory_bytes`` objective, OOM-infeasible trials recorded (not
+crashed) and excluded from the Pareto front, and the fault layer's
+survivor-occupancy inflation under elastic rescale.
+"""
+import json
+import math
+import random
+
+import pytest
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra, convert
+from repro.core.costmodel.compiled import ExactSum, exact_peak
+from repro.core.costmodel.simulator import (peak_memory_proxy, simulate,
+                                            simulate_analytic,
+                                            simulate_cluster)
+from repro.core.costmodel.topology import RankProfile, build_topology
+from repro.obs.memory import (memory_blame, memory_counters, memory_diff,
+                              memory_timeline, export_memory_trace)
+
+SYS = SystemConfig(chips=16)
+TOPO = build_topology(SYS)
+
+
+def rand_graph(rng, n):
+    """Random DAG over all node types (the test-suite shape; float bytes
+    so the exact-arithmetic identities are actually exercised)."""
+    g = chakra.Graph()
+    for i in range(n):
+        k = min(i, 4)
+        deps = rng.sample(range(i), rng.randint(0, k)) if i else []
+        ctrl = rng.sample(range(i), rng.randint(0, k)) if i else []
+        r = rng.random()
+        if r < 0.5 or i == 0:
+            g.add(f"n{i}", chakra.COMP, deps=deps, ctrl_deps=ctrl,
+                  flops=rng.uniform(0, 1e9), bytes=rng.uniform(0, 1e8),
+                  out_bytes=rng.choice([0.0, rng.uniform(1, 100)]))
+        elif r < 0.8:
+            g.add(f"c{i}", chakra.COMM_COLL, deps=deps, ctrl_deps=ctrl,
+                  comm_kind=rng.choice(["all-gather", "all-reduce",
+                                        "reduce-scatter"]),
+                  comm_bytes=rng.uniform(1, 1e7), out_bytes=8.0,
+                  group=list(range(rng.choice([2, 4, 8, 16]))))
+        else:
+            g.add(f"m{i}", chakra.MEM, deps=deps, ctrl_deps=ctrl,
+                  out_bytes=4.0)
+    return g
+
+
+def chain_graph(n_layers=12, group=16, comm_mb=8.0):
+    """FSDP-ish chain: all-gather feeding a compute per layer."""
+    g = chakra.Graph()
+    prev = None
+    for i in range(n_layers):
+        ag = g.add(f"ag{i}", chakra.COMM_COLL, comm_kind="all-gather",
+                   comm_bytes=comm_mb * 1e6, out_bytes=comm_mb * 1e6,
+                   group=list(range(group)))
+        deps = [ag] + ([prev] if prev is not None else [])
+        prev = g.add(f"comp{i}", chakra.COMP, deps=deps, flops=5e10,
+                     out_bytes=1e6)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# occupancy-curve identities
+# ---------------------------------------------------------------------------
+
+def test_identity_randomized_dags_both_overlap_modes():
+    """Class decomposition == total and curve max == engine peak_bytes,
+    bit-exactly, on every randomized DAG in both overlap modes."""
+    for seed in range(12):
+        rng = random.Random(seed)
+        g = rand_graph(rng, rng.randint(5, 150))
+        for overlap in (True, False):
+            res = simulate(g, SYS, TOPO, overlap=overlap, keep_timeline=True)
+            tl = memory_timeline(res, graph=g)
+            assert tl.identity_ok(), f"seed={seed} overlap={overlap}"
+            assert tl.peak_bytes == res.peak_bytes
+            rm = tl.ranks[0]
+            # spot-check the decomposition at every breakpoint via fsum
+            # of raw class values too (weaker than the partials check the
+            # builder does, but catches sign/placement bugs)
+            for i in range(len(rm.times)):
+                by = [vs[i] for vs in rm.by_class.values()]
+                assert abs(math.fsum(by) - rm.total[i]) <= \
+                    1e-9 * max(1.0, abs(rm.total[i]))
+
+
+def test_identity_cluster_hetero_and_mpmd_pipeline():
+    """Same identities through the cluster engine (hetero profiles) and
+    the 2-stage MPMD pipeline; every rank's curve max equals its own
+    engine peak."""
+    rng = random.Random(3)
+    g = rand_graph(rng, 80)
+    profs = {1: RankProfile(compute_scale=0.5),
+             5: RankProfile(link_scale=0.25)}
+    cr = simulate_cluster(g, SYS, TOPO, n_ranks=8, rank_profiles=profs,
+                          keep_timeline=True)
+    tl = memory_timeline(cr, graph=g)
+    assert tl.identity_ok()
+    assert len(tl.ranks) == 8
+    for r, rm in tl.ranks.items():
+        assert rm.peak_bytes == cr.rank_result(r).peak_bytes
+    assert tl.peak_bytes == cr.peak_bytes
+
+    prog = convert.split_pipeline_stages(chain_graph(8), 2)
+    cres = simulate_cluster(prog, SYS, TOPO, keep_timeline=True)
+    tlp = memory_timeline(cres, graph=prog)
+    assert tlp.identity_ok()
+    assert tlp.peak_bytes == cres.peak_bytes
+
+
+def test_coalesced_equals_naive_per_rank_curves():
+    """Coalescing is invisible to the memory timeline: per-rank curves
+    (breakpoints, totals, every class series) are identical between the
+    coalesced and naive cluster engines."""
+    rng = random.Random(7)
+    g = rand_graph(rng, 60)
+    profs = {2: RankProfile(compute_scale=0.5)}
+    a = simulate_cluster(g, SYS, TOPO, n_ranks=6, rank_profiles=profs,
+                         coalesce=True, keep_timeline=True)
+    b = simulate_cluster(g, SYS, TOPO, n_ranks=6, rank_profiles=profs,
+                         coalesce=False, keep_timeline=True)
+    ta, tb = memory_timeline(a, graph=g), memory_timeline(b, graph=g)
+    for r in range(6):
+        ra, rb = ta.ranks[r], tb.ranks[r]
+        assert ra.times == rb.times
+        assert ra.total == rb.total
+        assert ra.by_class == rb.by_class
+        assert ra.peak_bytes == rb.peak_bytes
+
+
+def test_blame_covers_peak_exactly():
+    """Live tensors at the peak fsum to peak_bytes bit-exactly; class
+    split of the blame agrees with the curve's class values at peak."""
+    for seed in range(8):
+        rng = random.Random(100 + seed)
+        g = rand_graph(rng, rng.randint(10, 120))
+        for overlap in (True, False):
+            res = simulate(g, SYS, TOPO, overlap=overlap, keep_timeline=True)
+            bl = memory_blame(res, graph=g)
+            assert bl.identity_ok(), f"seed={seed} overlap={overlap}"
+            if res.peak_bytes > 0:
+                assert bl.tensors
+            for t in bl.tensors:
+                assert t.bytes > 0
+
+
+def test_memory_diff_identity():
+    """memory_diff terms fsum to the IEEE peak difference bit-exactly —
+    including when per-run class sums carry a rounding residual (float
+    byte sizes)."""
+    saw_nonzero = False
+    for seed in range(8):
+        rng = random.Random(200 + seed)
+        ga, gb = rand_graph(rng, 70), rand_graph(rng, 90)
+        ra = simulate(ga, SYS, TOPO, keep_timeline=True)
+        rb = simulate(gb, SYS, TOPO, keep_timeline=True)
+        d = memory_diff(ra, rb, graph_a=ga, graph_b=gb)
+        assert d.identity_ok()
+        assert d.delta_peak == rb.peak_bytes - ra.peak_bytes
+        saw_nonzero = saw_nonzero or d.delta_peak != 0.0
+        # self-diff is exactly zero everywhere
+        z = memory_diff(ra, ra, graph_a=ga, graph_b=ga)
+        assert z.delta_peak == 0.0 and z.identity_ok()
+        assert not z.gained and not z.lost
+    assert saw_nonzero
+
+
+def test_exact_sum_and_exact_peak_primitives():
+    rng = random.Random(0)
+    xs = [rng.uniform(-1e9, 1e9) for _ in range(500)]
+    acc = ExactSum()
+    for x in xs:
+        acc.add(x)
+    assert acc.value() == math.fsum(xs)
+    # exact_peak: breakpoint max with a 0.0 floor, frees-before-allocs
+    assert exact_peak([]) == 0.0
+    assert exact_peak([(0.0, -5.0, 0), (1.0, 5.0, 0)]) == 0.0
+    assert exact_peak([(0.0, 3.0, 0), (1.0, -3.0, 0), (1.0, 2.0, 1)]) == 3.0
+
+
+# ---------------------------------------------------------------------------
+# proxy relation (satellite: peak_bytes vs peak_memory_proxy)
+# ---------------------------------------------------------------------------
+
+def int_chain(n=10):
+    """Integer byte sizes + strictly positive durations: the regime where
+    the documented proxy equality is exact."""
+    g = chakra.Graph()
+    prev = None
+    rng = random.Random(5)
+    for i in range(n):
+        deps = [prev] if prev is not None else []
+        if i % 3 == 2:
+            prev = g.add(f"c{i}", chakra.COMM_COLL, deps=deps,
+                         comm_kind="all-gather", comm_bytes=float(2 ** 20),
+                         out_bytes=float(rng.randint(1, 64) * 1024),
+                         group=list(range(8)))
+        else:
+            prev = g.add(f"n{i}", chakra.COMP, deps=deps, flops=1e9,
+                         bytes=1e6,
+                         out_bytes=float(rng.randint(1, 64) * 1024))
+    return g
+
+
+def test_analytic_peak_equals_proxy():
+    g = int_chain(12)
+    assert simulate_analytic(g, SYS, TOPO).peak_bytes == peak_memory_proxy(g)
+
+
+def test_no_overlap_out_bytes_peak_equals_proxy():
+    """Under overlap=False the engine visits the canonical topo order, so
+    its out_bytes-only occupancy peak equals the static proxy exactly and
+    its full peak (which adds transient comm buffers) is >= it."""
+    g = int_chain(14)
+    res = simulate(g, SYS, TOPO, overlap=False, keep_timeline=True)
+    tensors_only = [e for e in res.mem_events if e[2] >= 0]
+    assert exact_peak(tensors_only) == peak_memory_proxy(g)
+    assert res.peak_bytes >= peak_memory_proxy(g)
+
+
+# ---------------------------------------------------------------------------
+# mem_events plumbing
+# ---------------------------------------------------------------------------
+
+def test_mem_events_gated_on_keep_timeline():
+    g = chain_graph(4)
+    lean = simulate(g, SYS, TOPO)
+    assert lean.mem_events is None
+    with pytest.raises(ValueError, match="keep_timeline"):
+        memory_timeline(lean, graph=g)
+    full = simulate(g, SYS, TOPO, keep_timeline=True)
+    assert full.mem_events
+    assert lean.peak_bytes == full.peak_bytes      # same exact scan
+    d = full.as_dict()
+    assert "mem_events" not in d and "timeline" not in d
+
+
+def test_comm_transients_encoded_as_complement_ids():
+    g = chain_graph(4)
+    res = simulate(g, SYS, TOPO, keep_timeline=True)
+    neg = [e for e in res.mem_events if e[2] < 0]
+    assert neg, "all-gathers must record transient comm buffers"
+    for t, delta, nid in neg:
+        assert g.node(~nid).type == chakra.COMM_COLL
+
+
+# ---------------------------------------------------------------------------
+# objectives + OOM-aware search
+# ---------------------------------------------------------------------------
+
+def test_objective_validation_lists_known_names():
+    from repro.search.objectives import (KNOWN_OBJECTIVES,
+                                         validate_objectives)
+    validate_objectives(("total_time", "peak_memory_bytes"))
+    with pytest.raises(ValueError) as ei:
+        validate_objectives(("total_tiem",))
+    assert "total_tiem" in str(ei.value)
+    for name in ("total_time", "peak_bytes", "expected_goodput"):
+        assert name in KNOWN_OBJECTIVES
+        assert name in str(ei.value)
+
+
+def test_searchrun_rejects_typo_objective_up_front():
+    from repro.core.dse import Knob
+    from repro.search.run import SearchRun
+    with pytest.raises(ValueError, match="unknown objective"):
+        SearchRun(lambda cfg: chain_graph(2), SYS,
+                  [Knob("prefetch", [0, 2])], objectives=("total_tiem",))
+
+
+def test_peak_memory_bytes_objective_is_schedule_aware():
+    from repro.search.objectives import trial_objectives
+    g = chain_graph(6)
+    res = simulate(g, SYS, TOPO)
+    vals = trial_objectives(res, ("peak_memory_bytes", "peak_memory_proxy"),
+                            graph=g)
+    assert vals["peak_memory_bytes"] == res.peak_bytes
+    assert vals["peak_memory_proxy"] == peak_memory_proxy(g)
+
+
+def test_oom_infeasible_trials_recorded_not_crashed():
+    """An hbm_bytes capacity knob makes over-budget trials fail cleanly:
+    recorded with an OOMInfeasible error, excluded from best / full /
+    Pareto, while feasible trials complete normally."""
+    from repro.core.dse import Knob, OOMInfeasible, evaluate
+    from repro.search.run import SearchRun
+    g = chain_graph(6)
+    with pytest.raises(OOMInfeasible, match="exceeds hbm_bytes"):
+        evaluate(g, SYS, {"hbm_bytes": 1e3})
+    evaluate(g, SYS, {"hbm_bytes": 1e15})          # feasible: no raise
+
+    knobs = [Knob("prefetch", [0, 2]),
+             Knob("hbm_bytes", [1e3, 1e15], layer="hardware")]
+    r = SearchRun(lambda cfg: chain_graph(6), SYS, knobs, strategy="grid",
+                  budget=4, objectives=("total_time",)).run()
+    assert len(r.trials) == 4
+    failed = r.failed_trials
+    assert len(failed) == 2
+    for t in failed:
+        assert t.error.startswith("OOMInfeasible:")
+        assert t.config["hbm_bytes"] == 1e3
+    assert len(r.full_trials) == 2
+    assert all(t.config["hbm_bytes"] == 1e15 for t in r.pareto_trials())
+    assert r.best is not None and r.best.ok
+
+
+def test_rank_profile_hbm_bytes_is_capacity_only():
+    """A capacity-only profile is still 'default': it must not affect
+    timing or break the symmetric/coalesced path."""
+    p = RankProfile(hbm_bytes=96e9)
+    assert p.is_default()
+    g = chain_graph(4)
+    ref = simulate(g, SYS, TOPO, keep_timeline=True)
+    cr = simulate_cluster(g, SYS, TOPO, n_ranks=4,
+                          rank_profiles={r: p for r in range(4)},
+                          keep_timeline=True)
+    assert cr.n_classes == 1
+    assert cr.step_time == ref.total_time
+    assert cr.rank_result(0).peak_bytes == ref.peak_bytes
+
+
+# ---------------------------------------------------------------------------
+# trace counters, report, gauges
+# ---------------------------------------------------------------------------
+
+def test_memory_counters_and_chrome_export(tmp_path):
+    g = chain_graph(4)
+    res = simulate(g, SYS, TOPO, keep_timeline=True)
+    evs = memory_counters(res, graph=g)
+    assert evs and all(e["ph"] == "C" and e["name"] == "memory_bytes"
+                       for e in evs)
+    classes = set().union(*(e["args"].keys() for e in evs))
+    assert "comm" in classes
+
+    path = tmp_path / "mem_trace.json"
+    trace = export_memory_trace(res, str(path), graph=g)
+    on_disk = json.loads(path.read_text())
+    assert on_disk == trace
+    counters = [e for e in on_disk["traceEvents"] if e.get("ph") == "C"
+                and e.get("name") == "memory_bytes"]
+    assert counters
+    meta = [e for e in on_disk["traceEvents"] if e.get("ph") == "M"]
+    assert any(e.get("name") == "process_sort_index" for e in meta)
+
+
+def test_memory_gauges_and_report_section(tmp_path, capsys):
+    from repro.obs import record as obs
+    from repro.obs.report import main as report_main, render_memory
+    g = chain_graph(4)
+    res = simulate(g, SYS, TOPO, keep_timeline=True)
+    cap = 2 * res.peak_bytes
+    obs.enable()
+    try:
+        tl = memory_timeline(res, graph=g, hbm_bytes=cap)
+        metrics = obs.metrics_dict()
+    finally:
+        obs.disable()
+    assert metrics["gauges"]["memory.rank0.peak_bytes"] == tl.peak_bytes
+    text = render_memory(metrics)
+    assert "rank 0" in text and "of HBM" in text
+
+    mpath = tmp_path / "metrics.json"
+    mpath.write_text(json.dumps(metrics))
+    assert report_main(["report", str(mpath), "--memory"]) == 0
+    out = capsys.readouterr().out
+    assert "memory occupancy" in out and ">90% for" in out
+    # utilization / time_above helpers agree with what was published
+    rm = tl.ranks[0]
+    assert rm.utilization() == pytest.approx(0.5)
+    assert metrics["gauges"]["memory.rank0.time_at_90pct"] == \
+        rm.time_above(0.9 * cap)
+
+
+# ---------------------------------------------------------------------------
+# faults: elastic rescale inflates survivor occupancy
+# ---------------------------------------------------------------------------
+
+def test_horizon_survivor_mem_inflation():
+    from repro.faults.horizon import simulate_horizon
+    from repro.faults.scenario import CheckpointPolicy, FaultEvent, \
+        FaultScenario
+    sysc = SystemConfig(chips=4, topology="switch")
+    g = chain_graph(4, group=4)
+    pol = CheckpointPolicy(interval=10, write_cost=1e-4, restore_cost=1e-4)
+    sc = FaultScenario(events=[FaultEvent(time=0.01, kind="fail_stop",
+                                          rank=1, duration=0.5)],
+                       horizon=2.0, n_ranks=4)
+    hr = simulate_horizon(g, sysc, sc, pol, n_ranks=4, n_steps=200)
+    assert hr.survivor_mem_inflation == pytest.approx(4.0 / 3.0)
+    assert "survivor_mem_inflation" in hr.as_dict()
+    # a provisioned spare absorbs the failure: no rescale, no inflation
+    hr2 = simulate_horizon(g, sysc, sc, pol, n_ranks=4, n_steps=200,
+                           spare_ranks=1)
+    assert hr2.survivor_mem_inflation == 1.0
+    # fault-free horizon is the 1.0 baseline
+    hr3 = simulate_horizon(g, sysc, FaultScenario(events=[], horizon=1.0,
+                                                  n_ranks=4),
+                           pol, n_ranks=4, n_steps=50)
+    assert hr3.survivor_mem_inflation == 1.0
