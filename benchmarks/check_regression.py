@@ -3,8 +3,9 @@ subsystem's round-trip/calibration figures, the search subsystem's
 sample-efficiency figures, the MPMD engine's exactness/coalescing figures,
 the fault subsystem's segmented-resim/Young-Daly figures, the
 parallel/delta DSE figures, the obs instrumentation's
-overhead/blame-identity figures or the memory-timeline
-identity/overhead/OOM-sweep figures fall outside the bounds recorded in
+overhead/blame-identity figures, the memory-timeline
+identity/overhead/OOM-sweep figures or the pipeline-schedule
+bubble-recovery/coalescing figures fall outside the bounds recorded in
 benchmarks/thresholds.json.  A plain-number threshold is a floor;
 ``{"max": v}`` is a ceiling (the obs and memory overhead percentages
 gate from above).  Every gated key is printed as one PASS/FAIL/SKIP
@@ -20,6 +21,7 @@ Usage (the verify recipe's perf gate):
     PYTHONPATH=.:src python -m benchmarks.parallel_dse --smoke
     PYTHONPATH=.:src python -m benchmarks.obs_overhead --smoke
     PYTHONPATH=.:src python -m benchmarks.memory_timeline --smoke
+    PYTHONPATH=.:src python -m benchmarks.pipeline_schedules --smoke
     PYTHONPATH=.:src python -m benchmarks.check_regression
 
 or in one shot::
@@ -27,10 +29,11 @@ or in one shot::
     PYTHONPATH=.:src python -m benchmarks.check_regression --run-smoke
 
 Reads artifacts/bench/BENCH_sim.json, BENCH_trace.json, BENCH_search.json,
-BENCH_mpmd.json, BENCH_fault.json, BENCH_parallel.json, BENCH_obs.json and
-BENCH_memory.json (``--bench`` / ``--trace-bench`` / ``--search-bench`` /
-``--mpmd-bench`` / ``--fault-bench`` / ``--parallel-bench`` /
-``--obs-bench`` / ``--memory-bench`` to override).
+BENCH_mpmd.json, BENCH_fault.json, BENCH_parallel.json, BENCH_obs.json,
+BENCH_memory.json and BENCH_pipeline.json (``--bench`` /
+``--trace-bench`` / ``--search-bench`` / ``--mpmd-bench`` /
+``--fault-bench`` / ``--parallel-bench`` / ``--obs-bench`` /
+``--memory-bench`` / ``--pipeline-bench`` to override).
 The speedup floors are deliberately conservative — they hold for both the
 full and ``--smoke`` matrices on a loaded machine — so a failure means the
 engine actually regressed, not that the box was busy; the trace floors are
@@ -51,7 +54,12 @@ scaling), and the memory floors gate the memory-timeline PR
 contracts, the overhead ceiling bounds the observability-attributable
 cost of a lean simulate, and oom_sweep_ok requires an
 hbm_bytes-constrained search to record OOM-infeasible trials without
-crashing).  Exit code 1 on regression, 2 on missing inputs.
+crashing), and the pipeline floors gate the microbatched-schedule PR
+(simulated bubble within 10% of the analytic (p-1)/(m+p-1) for GPipe
+and 1F1B, cross-replica graph sharing >= 3x over literal per-replica
+graphs with bit-identity required, and m=1 identical to the legacy
+split under every schedule name).  Exit code 1 on regression, 2 on
+missing inputs.
 """
 from __future__ import annotations
 
@@ -77,6 +85,8 @@ DEFAULT_OBS_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
                                  "BENCH_obs.json")
 DEFAULT_MEMORY_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
                                     "BENCH_memory.json")
+DEFAULT_PIPELINE_BENCH = os.path.join(HERE, "..", "artifacts", "bench",
+                                      "BENCH_pipeline.json")
 DEFAULT_THRESH = os.path.join(HERE, "thresholds.json")
 
 
@@ -113,7 +123,7 @@ def evaluate(bench: dict, thresholds: dict) -> list:
         for key, thr in sim_floors.items():
             one(f"simulate.{size}", key, thr, row.get(key))
     for section in ("straggler", "explore", "trace", "search", "mpmd",
-                    "fault", "obs", "memory"):
+                    "fault", "obs", "memory", "pipeline"):
         for key, thr in thresholds.get(section, {}).items():
             one(section, key, thr, bench.get(section, {}).get(key))
     par = bench.get("parallel", {})
@@ -160,6 +170,8 @@ def main(argv=None) -> int:
                     help="BENCH_obs.json path")
     ap.add_argument("--memory-bench", default=DEFAULT_MEMORY_BENCH,
                     help="BENCH_memory.json path")
+    ap.add_argument("--pipeline-bench", default=DEFAULT_PIPELINE_BENCH,
+                    help="BENCH_pipeline.json path")
     ap.add_argument("--thresholds", default=DEFAULT_THRESH)
     ap.add_argument("--run-smoke", action="store_true",
                     help="run every bench module with --smoke first to "
@@ -169,7 +181,8 @@ def main(argv=None) -> int:
     if args.run_smoke:
         from benchmarks import (fault_scenarios, memory_timeline,
                                 mpmd_pipeline, obs_overhead, parallel_dse,
-                                search_bench, sim_bench, trace_roundtrip)
+                                pipeline_schedules, search_bench,
+                                sim_bench, trace_roundtrip)
         sim_bench.main(["--smoke"])
         trace_roundtrip.main(["--smoke"])
         search_bench.main(["--smoke"])
@@ -178,6 +191,7 @@ def main(argv=None) -> int:
         parallel_dse.main(["--smoke"])
         obs_overhead.main(["--smoke"])
         memory_timeline.main(["--smoke"])
+        pipeline_schedules.main(["--smoke"])
 
     bench = {}
     for path, key, producer in ((args.bench, None, "sim_bench"),
@@ -194,7 +208,9 @@ def main(argv=None) -> int:
                                 (args.obs_bench, "obs",
                                  "obs_overhead"),
                                 (args.memory_bench, "memory",
-                                 "memory_timeline")):
+                                 "memory_timeline"),
+                                (args.pipeline_bench, "pipeline",
+                                 "pipeline_schedules")):
         if not os.path.exists(path):
             print(f"check_regression: no bench file at {path} "
                   f"(run benchmarks.{producer} first, or pass --run-smoke)")

@@ -33,13 +33,18 @@
                            curve/blame identities across engines, lean-run
                            observability overhead (< 3% ceiling), and the
                            hbm_bytes OOM-infeasible search sweep
+  pipeline_schedules (ours) microbatched pipeline schedules: simulated
+                           bubble vs analytic (p-1)/(m+p-1) recovery,
+                           cross-replica graph-sharing speedup with
+                           bit-identity, m=1 legacy-split identity
   check_regression (gate)  fails if BENCH_sim speedups, BENCH_trace
                            round-trip/calibration, BENCH_search
                            sample-efficiency, BENCH_mpmd
                            exactness/coalescing, BENCH_fault
                            segmented/recovery, BENCH_parallel pool/delta,
-                           BENCH_obs overhead/blame or BENCH_memory
-                           identity/overhead/OOM-sweep figures fall
+                           BENCH_obs overhead/blame, BENCH_memory
+                           identity/overhead/OOM-sweep or BENCH_pipeline
+                           bubble/coalescing figures fall
                            outside benchmarks/thresholds.json bounds;
                            writes the consolidated PASS/FAIL table to
                            BENCH_summary.json
@@ -55,7 +60,8 @@ BENCHES = ["opcounts", "e2e_validation", "fsdp_reorder", "bandwidth_sweep",
            "wafer_tacos", "nic_degradation", "roofline", "sim_bench",
            "hetero_cluster", "trace_roundtrip", "search_bench",
            "mpmd_pipeline", "fault_scenarios", "parallel_dse",
-           "obs_overhead", "memory_timeline", "check_regression"]
+           "obs_overhead", "memory_timeline", "pipeline_schedules",
+           "check_regression"]
 
 
 def main() -> None:

@@ -79,3 +79,32 @@ def workload_graph(cfg: ModelConfig, batch_tokens: int = 2048,
           bytes=act + _BF16 * cfg.d_model * cfg.vocab_size,
           out_bytes=_BF16 * batch_tokens * min(cfg.vocab_size, 4096))
     return g
+
+
+def pipeline_program(cfg, num_stages: int, *, num_microbatches: int = 1,
+                     schedule: str = "gpipe", virtual_stages=None,
+                     replicas: int = 1, batch_tokens: int = 2048,
+                     assignment="flops", share_replica_graphs=None,
+                     with_backward: bool = True):
+    """One-call pipeline program for a registry arch: ``workload_graph``
+    followed by ``convert.split_pipeline_stages``.
+
+    `cfg` is a ``ModelConfig`` or a registry arch name.  The remaining
+    knobs mirror ``split_pipeline_stages``: `replicas` data-parallel copies
+    of the pipeline (stage-major ranks), `num_microbatches`/`schedule`/
+    `virtual_stages` select the microbatched lowering ("gpipe", "1f1b",
+    "interleaved" — see ``repro.core.costmodel.schedule``).  Returns an
+    ``MPMDProgram`` over ``num_stages * replicas`` ranks ready for
+    ``simulate_cluster``."""
+    from repro.core.convert import split_pipeline_stages
+    if isinstance(cfg, str):
+        from repro.configs.registry import get_config
+        cfg = get_config(cfg)
+    g = workload_graph(cfg, batch_tokens=batch_tokens, ranks=replicas,
+                       with_backward=with_backward)
+    return split_pipeline_stages(g, num_stages, assignment=assignment,
+                                 replicas=replicas,
+                                 num_microbatches=num_microbatches,
+                                 schedule=schedule,
+                                 virtual_stages=virtual_stages,
+                                 share_replica_graphs=share_replica_graphs)

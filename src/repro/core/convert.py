@@ -222,13 +222,16 @@ def hlo_to_chakra(mod: HloModule, meta: Optional[dict] = None) -> chakra.Graph:
 
 
 def _stage_assignment(g: chakra.Graph, order: List[int], num_stages: int,
-                      assignment) -> List[int]:
+                      assignment, allow_backward: bool = False) -> List[int]:
     """nid -> stage index.  ``assignment`` is a balancing policy ("flops":
     contiguous topo segments balanced by compute flops; "nodes": balanced by
     node count) or an explicit per-node map (list/dict nid -> stage).
     Explicit maps are validated: every stage non-empty, every dependency
     pointing to the same or an earlier stage (a pipeline never sends
-    activations backwards inside one step's dataflow)."""
+    activations backwards inside one step's dataflow).  ``allow_backward``
+    lifts the direction check for the microbatched lowering, which turns
+    backward cross-stage edges (an explicit backward pass) into gradient
+    data channels instead of rejecting them."""
     n = len(g.nodes)
     S = num_stages
     if not isinstance(assignment, str):
@@ -253,14 +256,15 @@ def _stage_assignment(g: chakra.Graph, order: List[int], num_stages: int,
         if missing:
             raise ValueError(f"stage_assignment leaves stage(s) "
                              f"{sorted(missing)} empty")
-        for node in g.nodes:
-            for d in node.all_deps:
-                if stage_of[d] > stage_of[node.id]:
-                    raise ValueError(
-                        f"stage_assignment creates a backward cross-stage "
-                        f"dependency: node {node.id} (stage "
-                        f"{stage_of[node.id]}) depends on node {d} (stage "
-                        f"{stage_of[d]})")
+        if not allow_backward:
+            for node in g.nodes:
+                for d in node.all_deps:
+                    if stage_of[d] > stage_of[node.id]:
+                        raise ValueError(
+                            f"stage_assignment creates a backward "
+                            f"cross-stage dependency: node {node.id} (stage "
+                            f"{stage_of[node.id]}) depends on node {d} "
+                            f"(stage {stage_of[d]})")
         return stage_of
     if assignment not in ("flops", "nodes"):
         raise ValueError(f"unknown stage assignment policy {assignment!r}: "
@@ -285,7 +289,11 @@ def _stage_assignment(g: chakra.Graph, order: List[int], num_stages: int,
 
 
 def split_pipeline_stages(g: chakra.Graph, num_stages: int,
-                          assignment="flops", replicas: int = 1):
+                          assignment="flops", replicas: int = 1,
+                          num_microbatches: int = 1,
+                          schedule: str = "gpipe",
+                          virtual_stages: Optional[int] = None,
+                          share_replica_graphs: Optional[bool] = None):
     """Split one workload graph into an S-stage pipeline ``MPMDProgram``.
 
     The graph is partitioned into `num_stages` contiguous topological
@@ -305,8 +313,23 @@ def split_pipeline_stages(g: chakra.Graph, num_stages: int,
     the cluster into stages).  Returns an ``MPMDProgram`` over
     ``num_stages * replicas`` ranks whose meta records the split
     (``stage_of``, ``p2p_pairs``, ``num_stages``, ``replicas``).
+
+    ``num_microbatches`` > 1 lowers a *microbatched* pipeline instead:
+    each stage's work is replayed m times at 1/m scale under the chosen
+    ``schedule`` ("gpipe", "1f1b" or "interleaved" with
+    ``virtual_stages`` chunks per rank), with schedule-dependent
+    send/recv ordering and synthesized backward gradient channels — see
+    ``repro.core.costmodel.schedule``.  ``share_replica_graphs`` (default
+    on when replicas > 1 and m > 1) makes all replicas of a stage share
+    one graph via relative p2p addressing.  With m == 1 every schedule is
+    equivalent (one wave) and this function emits the classic split above,
+    bit-identically to previous releases.  Knob values are validated up
+    front: bad ``num_microbatches``/``schedule``/``virtual_stages`` raise
+    ``schedule.PipelineConfigError`` listing the valid choices.
     """
     from repro.core.costmodel.mpmd import MPMDProgram
+    from repro.core.costmodel.schedule import (lower_microbatched,
+                                               validate_pipeline_schedule)
 
     S = int(num_stages)
     R = int(replicas)
@@ -315,6 +338,12 @@ def split_pipeline_stages(g: chakra.Graph, num_stages: int,
         raise ValueError(f"num_stages={S} / replicas={R} must be >= 1")
     if n == 0 or S > n:
         raise ValueError(f"cannot split a {n}-node graph into {S} stages")
+    m, sched, v = validate_pipeline_schedule(S, num_microbatches, schedule,
+                                             virtual_stages)
+    if m > 1:
+        return lower_microbatched(g, S, assignment, R, m, sched,
+                                  virtual_stages=v,
+                                  share_replica_graphs=share_replica_graphs)
     order = g.topo_order()
     stage_of = _stage_assignment(g, order, S, assignment)
     stage_ranks = {s: list(range(s * R, (s + 1) * R)) for s in range(S)}

@@ -247,6 +247,10 @@ class CompiledGraph:
         self._zeros = [0] * n
         self._is_comm = self.is_comm.astype(np.int64).tolist()
         self._is_coll = (self.type_code == 1).astype(np.int64).tolist()
+        # eager (buffered) p2p sends: arrive at their cluster barrier but
+        # never suspend their row — see run_rows
+        self._eager = [1 if nd.attrs.get("p2p_eager") else 0
+                       for nd in nodes]
         self._out_bytes = self.out_bytes.tolist()
         self._comm_bytes = self.comm_bytes.tolist()
         self._deps = deps_l
@@ -272,8 +276,19 @@ class CompiledGraph:
                 continue
             group = (nd.attrs.get("group")
                      or list(range(nd.attrs.get("group_size", 1))))
+            # p2p channel identity + relative stage pair (microbatched
+            # pipeline lowering, costmodel.schedule): several p2p channels
+            # can share one rank pair, and replica-shared stage graphs
+            # address partners by stage — the MPMD engine keys its FIFO
+            # barrier sequences on these, never on the group alone
+            ch = nd.attrs.get("p2p_channel")
+            chan = tuple(ch) if isinstance(ch, (list, tuple)) else ch
+            srel = nd.attrs.get("p2p_src_stage")
+            drel = nd.attrs.get("p2p_dst_stage")
+            rel = ((int(srel), int(drel))
+                   if srel is not None and drel is not None else None)
             self._coll_meta.append((nd.attrs.get("comm_kind", "all-reduce"),
-                                    group, tuple(group)))
+                                    group, tuple(group), chan, rel))
 
         self._dur_cache: Dict = {}
         self._result_cache: Dict = {}
@@ -356,8 +371,8 @@ class CompiledGraph:
         out: Dict[int, float] = {}
         memo: Dict = {}
         cb = self.comm_bytes
-        for nid, (kind, group, group_t) in zip(self._coll_ids,
-                                               self._coll_meta):
+        for nid, (kind, group, group_t, _chan, _rel) in zip(self._coll_ids,
+                                                            self._coll_meta):
             payload = float(cb[nid])
             ck = (kind, payload, group_t)
             t = memo.get(ck)
@@ -984,6 +999,24 @@ def run_rows(rows: List[RowSpec], overlap: bool = True,
                         else:
                             push(future0, (dt, pos[nxt]))
                 b = bmap.get(nid)
+                if b is not None and cg._eager[nid]:
+                    # eager (buffered) p2p send: arrive at the barrier —
+                    # releasing suspended peers if we are last — but never
+                    # suspend; the send itself runs locally below at its
+                    # own priced duration (the local buffer copy).  Eager
+                    # arrivals are deliberately NOT recorded in b[4], so
+                    # the resolver and the deadlock diagnostic only ever
+                    # see suspended rows there.
+                    b[0] -= 1
+                    if start > b[1]:
+                        b[1] = start
+                    if not b[0]:
+                        endb = b[1] + b[3]
+                        for w in b[2]:
+                            if w != j and w in b[4]:
+                                _complete_suspended(w, b, endb)
+                                ready.append(w)
+                    b = None
                 if b is not None:
                     # barrier'd collective: record arrival (+ committing
                     # stream); resolve if we are the last member to
@@ -1001,7 +1034,9 @@ def run_rows(rows: List[RowSpec], overlap: bool = True,
                     cost = b[3]
                     end = b[1] + cost
                     for w in b[2]:
-                        if w != j:
+                        # eager members arrived without suspending (absent
+                        # from b[4]); only suspended rows need completion
+                        if w != j and w in b[4]:
                             _complete_suspended(w, b, end)
                             ready.append(w)
                     if s:

@@ -193,10 +193,12 @@ def simulate_mpmd(prog: MPMDProgram, system,
     rdur = _parse_rank_durations(rank_durations, K)
     tls = getattr(topo, "link_scales", None) or {}
 
+    rel_R = int(prog.meta.get("p2p_replicas") or 0)
+
     ckey = None
     if not keep_timeline and memoize:
         ckey = (tuple(g._token() for g in prog.graphs),
-                tuple(prog.graph_of),
+                tuple(prog.graph_of), rel_R,
                 cgs[0].config_key(system, topo, algo, compute_derate),
                 overlap, coalesce, tuple(sorted(profs.items())),
                 tuple(sorted((r, tuple(sorted(od.items())))
@@ -209,36 +211,128 @@ def simulate_mpmd(prog: MPMDProgram, system,
 
     bases = [cg.durations(system, topo, algo, compute_derate) for cg in cgs]
 
-    # canonical per-graph collective program: (nid, kind, group-key) in the
-    # order the rank issues them (= the nominal schedule's commit order,
-    # which the engine's program-order discipline also enforces)
-    orders = [cg.canonical_coll_order(base, overlap=overlap)
-              for cg, base in zip(cgs, bases)]
+    # canonical per-graph collective program: (nid, kind, sequence-key) in
+    # the order the rank issues them (= the nominal schedule's commit
+    # order, which the engine's program-order discipline also enforces).
+    # A sequence key identifies one FIFO channel, not just a rank group:
+    # literal groups key on (group, p2p channel) — several pipeline
+    # channels (forward vs grad, multiple virtual-stage chunks) can share
+    # one rank pair and must never pair across channels — and
+    # replica-shared stage graphs (``prog.meta["p2p_replicas"]``,
+    # costmodel.schedule) key their p2p nodes on the *relative* (src
+    # stage, dst stage, channel), expanded into per-replica barrier
+    # instances below (the group-indirection layer that lets all replicas
+    # of a stage share one compiled graph).
+    # microbatched pipeline graphs (costmodel.schedule) emit their nodes in
+    # schedule order, so ascending node id IS the rank's collective launch
+    # order; the isolated-run canonical order would instead defer the
+    # dangling (fire-and-forget) sends past later recvs and deadlock the
+    # program-order discipline
+    orders = [sorted(cg._coll_ids)
+              if int(g.meta.get("num_microbatches") or 1) > 1
+              else cg.canonical_coll_order(base, overlap=overlap)
+              for g, cg, base in zip(prog.graphs, cgs, bases)]
     colls: List[List[tuple]] = []
     for cg, order in zip(cgs, orders):
         meta = {nid: m for nid, m in zip(cg._coll_ids, cg._coll_meta)}
-        colls.append([(nid, meta[nid][0], _group_key(meta[nid][1]))
-                      for nid in order])
+        seq = []
+        for nid in order:
+            kind, group, _gt, chan, rel = meta[nid]
+            if rel_R > 1 and kind == "p2p" and rel is not None:
+                key = ("rel", rel[0], rel[1], chan)
+            else:
+                key = ("lit", _group_key(group), chan)
+            seq.append((nid, kind, key))
+        colls.append(seq)
+
+    def _rank_in(key: tuple, r: int) -> bool:
+        if key[0] == "lit":
+            return r in key[1]
+        return r // rel_R in (key[1], key[2])
+
+    def _members_of(key: tuple) -> List[int]:
+        if key[0] == "lit":
+            return [r for r in key[1] if 0 <= r < K]
+        return [r for st in (key[1], key[2])
+                for r in range(st * rel_R, (st + 1) * rel_R) if 0 <= r < K]
+
+    # relative p2p instance pricing: the shared stage graph's literal
+    # ``group`` attr (and hence its base duration) is replica 0's pair, but
+    # replica d's pair (a*R+d, b*R+d) can sit at a different hop distance /
+    # link scale on a structured topology.  Price each replica's instances
+    # through the same ``collective_time`` path literal per-replica graphs
+    # take, so sharing stays bit-identical to ``share_replica_graphs=False``
+    # — the signature also feeds the class key below, splitting replicas
+    # whose links genuinely differ.
+    rel_price_memo: Dict = {}
+
+    def _rel_prices(gi: int, d: int, lscale: Optional[float] = None):
+        key = (gi, d, lscale)
+        hit = rel_price_memo.get(key)
+        if hit is None:
+            from repro.core.costmodel.collectives import collective_time
+            cg = cgs[gi]
+            out = []
+            for nid, (kind, _grp, _gt, _chan, rel) in zip(cg._coll_ids,
+                                                          cg._coll_meta):
+                if kind != "p2p" or rel is None:
+                    continue
+                inst = [rel[0] * rel_R + d, rel[1] * rel_R + d]
+                out.append((nid, collective_time(
+                    "p2p", float(cg.comm_bytes[nid]), inst, topo, algo,
+                    bw_scale=lscale)))
+            hit = rel_price_memo[key] = tuple(out)
+        return hit
 
     # rank equivalence classes: ranks sharing (graph, hardware behavior,
-    # collective membership) are one behavioral class.  Groups are literal,
-    # so two same-class ranks sit in the *same* barrier instance and a
-    # class row's arrival represents all of its members at once — no
-    # partition-refinement fixpoint needed (unlike the SPMD tiling).
+    # collective membership) are one behavioral class.  Literal groups
+    # put two same-class ranks in the *same* barrier instance, so a class
+    # row's arrival represents all of its members at once with no
+    # partition-refinement fixpoint (unlike the SPMD tiling).
     init_keys = []
     for r in range(K):
         gi = prog.graph_of[r]
         od = rdur.get(r)
         okey = tuple(sorted(od.items())) if od else None
-        mem = tuple(sorted({gkey for (_, _, gkey) in colls[gi]
-                            if r in gkey}))
+        mem = tuple(sorted({skey for (_, _, skey) in colls[gi]
+                            if _rank_in(skey, r)}, key=repr))
+        rel_sig = _rel_prices(gi, r % rel_R) if rel_R > 1 else None
         init_keys.append((gi, profs.get(r, default_prof),
-                          tls.get(r, 1.0), okey, mem))
+                          tls.get(r, 1.0), okey, mem, rel_sig))
     if coalesce:
         seen: Dict = {}
         colors = [seen.setdefault(k, len(seen)) for k in init_keys]
     else:
         colors = list(range(K))
+    if coalesce and rel_R > 1:
+        # relative p2p instances DO need a refinement fixpoint: replicas
+        # of a stage share a class only while their per-replica partners
+        # share one too (a slow replica on the far side must split its
+        # partners off, or one barrier instance would mis-represent them).
+        # Signature = own color + partner colors across relative pairs;
+        # iterate to the coarsest stable partition (splits only, so it
+        # terminates; symmetric replicas stay coalesced).
+        rel_pairs = sorted({(skey[1], skey[2]) for seq in colls
+                            for (_n, _k, skey) in seq if skey[0] == "rel"})
+        while rel_pairs:
+            sigs = []
+            for r in range(K):
+                st, d = r // rel_R, r % rel_R
+                sig = []
+                for a, b in rel_pairs:
+                    if st == a:
+                        q = b * rel_R + d
+                    elif st == b:
+                        q = a * rel_R + d
+                    else:
+                        continue
+                    sig.append((a, b, colors[q] if 0 <= q < K else -1))
+                sigs.append((colors[r], tuple(sig)))
+            seen_r: Dict = {}
+            refined = [seen_r.setdefault(sg, len(seen_r)) for sg in sigs]
+            if refined == colors:
+                break
+            colors = refined
     n_classes = max(colors) + 1
     # coalescing effectiveness: event-loop rows actually paid vs ranks
     obs.counter("mpmd.coalesce.classes", n_classes)
@@ -264,33 +358,44 @@ def simulate_mpmd(prog: MPMDProgram, system,
             row = _rank_row(cgs[gi], system, topo, algo, compute_derate,
                             bases[gi], p, ls, reprice)
             row_memo[rkey] = row
+        if rel_R > 1:
+            # replica-d instance prices (mirrors _rank_row's repricing
+            # semantics: rank's own link scale when one is in force,
+            # else the instance group's weakest-member default)
+            ov = _rel_prices(gi, rep % rel_R,
+                             ls if (ls != 1.0 or reprice) else None)
+            if any(row[nid] != pr for nid, pr in ov):
+                row = list(row)
+                for nid, pr in ov:
+                    row[nid] = pr
         od = rdur.get(rep)
         if od:
             row = _override(row, od)
         rows_dur.append(row)
 
-    # per-graph, per-group collective sequences (canonical order), the
+    # per-graph, per-channel collective sequences (canonical order), the
     # substrate of barrier keying AND of the ragged-sequence validation
     gseq: List[Dict[tuple, List[tuple]]] = []
     for seq in colls:
         d: Dict[tuple, List[tuple]] = {}
-        for nid, kind, gkey in seq:
-            if len(gkey) >= 2:
-                d.setdefault(gkey, []).append((nid, kind))
+        for nid, kind, skey in seq:
+            if skey[0] == "rel" or len(skey[1]) >= 2:
+                d.setdefault(skey, []).append((nid, kind))
         gseq.append(d)
 
     barrier_maps: List[Dict[int, list]] = [dict() for _ in range(n_classes)]
     any_barrier = False
-    for gkey in sorted({g for d in gseq for g in d}):
-        members = [r for r in gkey if 0 <= r < K]
+    for skey in sorted({g for d in gseq for g in d}, key=repr):
+        members = _members_of(skey)
         if len(members) < 2:
             continue
+        gdesc = skey[1] if skey[0] == "lit" else tuple(members)
         mclasses: List[int] = []
         for r in members:
             c = colors[r]
             if c not in mclasses:
                 mclasses.append(c)
-        seqs = {c: gseq[class_graph[c]].get(gkey, []) for c in mclasses}
+        seqs = {c: gseq[class_graph[c]].get(skey, []) for c in mclasses}
         want = max(len(s) for s in seqs.values())
         for k in range(want):
             kinds: Dict[int, str] = {}
@@ -299,7 +404,7 @@ def simulate_mpmd(prog: MPMDProgram, system,
                 if len(s) <= k:
                     r_bad = next(r for r in members if colors[r] == c)
                     c_ok = next(c2 for c2 in mclasses if len(seqs[c2]) > k)
-                    fp = collective_fingerprint(seqs[c_ok][k][1], gkey)
+                    fp = collective_fingerprint(seqs[c_ok][k][1], gdesc)
                     raise ClusterProgramError(
                         f"rank {r_bad}'s graph omits instance {k} of "
                         f"collective {fp}: the group claims its "
@@ -312,23 +417,39 @@ def simulate_mpmd(prog: MPMDProgram, system,
                 c_a = mclasses[0]
                 c_b = next(c for c in mclasses if kinds[c] != kinds[c_a])
                 r_bad = next(r for r in members if colors[r] == c_b)
-                fp = collective_fingerprint(kinds[c_b], gkey)
+                fp = collective_fingerprint(kinds[c_b], gdesc)
                 raise ClusterProgramError(
                     f"mismatched collective sequences: at group program "
                     f"index {k} rank {r_bad} issues {fp} where its peers "
-                    f"issue {collective_fingerprint(kinds[c_a], gkey)}",
+                    f"issue {collective_fingerprint(kinds[c_a], gdesc)}",
                     rank=r_bad, fingerprint=fp, index=k)
         if len(mclasses) < 2:
             continue           # one behavioral class: resolves at arrival
-        W = tuple(sorted(mclasses))
+        # a literal group is one barrier instance spanning all member
+        # classes; a relative p2p channel is one instance per replica,
+        # deduplicated by class signature (at the refinement fixpoint all
+        # instances touching a class share its partner classes, so one
+        # barrier per distinct signature represents them exactly)
+        if skey[0] == "lit":
+            instances = [members]
+        else:
+            a, b = skey[1], skey[2]
+            instances = [[x for x in (a * rel_R + d, b * rel_R + d)
+                          if 0 <= x < K] for d in range(rel_R)]
         for k in range(want):
-            nid_by_row = {c: seqs[c][k][0] for c in mclasses}
-            b = [len(W), 0.0, W,
-                 max(rows_dur[c][nid_by_row[c]] for c in mclasses),
-                 {}, nid_by_row]
-            for c in mclasses:
-                barrier_maps[c][nid_by_row[c]] = b
-            any_barrier = True
+            seen_w = set()
+            for inst in instances:
+                W = tuple(sorted({colors[r] for r in inst}))
+                if len(W) < 2 or W in seen_w:
+                    continue
+                seen_w.add(W)
+                nid_by_row = {c: seqs[c][k][0] for c in W}
+                b = [len(W), 0.0, W,
+                     max(rows_dur[c][nid_by_row[c]] for c in W),
+                     {}, nid_by_row]
+                for c in W:
+                    barrier_maps[c][nid_by_row[c]] = b
+                any_barrier = True
 
     specs = []
     for c in range(n_classes):

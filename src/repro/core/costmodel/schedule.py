@@ -1,0 +1,489 @@
+"""Microbatched pipeline schedules: GPipe / 1F1B / interleaved lowering.
+
+``convert.split_pipeline_stages`` historically emitted one forward/backward
+wave per step, so the fill/drain bubble that dominates real pipelines was
+invisible to the DSE — ``num_stages`` traded comm for stage imbalance only.
+This module lowers any SPMD graph into per-stage, per-microbatch graph
+segments with schedule-dependent send/recv ordering, emitted as a plain
+``MPMDProgram`` the PR-5 cluster engine prices with no special casing.
+
+The lowering
+------------
+The graph is partitioned into ``num_stages * virtual_stages`` contiguous
+topological segments (``convert._stage_assignment``).  Each segment is cut
+into a forward part (the topo prefix through the last node with a
+cross-segment consumer, extended until it holds at least ``fwd_fraction``
+of the segment's flops) and a backward part (the remaining suffix — by
+construction it has no cross-segment consumers, so replaying it late never
+violates a data dependency).  Each (virtual stage, microbatch, phase)
+becomes a *task*: a copy of the part with flops/bytes/payloads scaled by
+1/m, so total work is conserved exactly for every schedule.
+
+Per rank, tasks are serialized by a chain of zero-cost ``sched[...]`` join
+nodes in the order ``schedule_tasks`` dictates — that chain IS the
+schedule.  Cross-stage forward dependencies become per-microbatch p2p
+send/recv pairs (sends are fire-and-forget: they don't hold the join, so a
+stage can run ahead like a real buffered channel; recvs post when the rank
+reaches the task, giving rendezvous semantics).  For a *forward-only*
+graph (no consumer in a lower stage), every forward channel gets a
+synthesized backward *gradient* channel in the opposite direction
+(payload = the channel's per-microbatch forward bytes): B(s, j) cannot
+start before B(s+1, j)'s grad arrives, which is exactly what creates the
+drain bubble.  A graph with explicit backward edges models its own grad
+flow and gets no synthesized channels — its backward cross-stage edges
+become ordinary data channels.  With zero-cost comm the simulated aggregate bubble fraction
+is the textbook (p-1)/(m+p-1) for GPipe and 1F1B, and 1F1B's peak
+activation stash is min(m, p-s) per-microbatch activations vs GPipe's m —
+both verified by tests/test_schedule_analytics.py against the engine and
+the PR-9 memory timeline.
+
+Channel identity
+----------------
+Several p2p channels can share one rank pair (forward and grad between the
+same stages; multiple virtual-stage chunks).  Each p2p node therefore
+carries a ``p2p_channel`` attr and the MPMD engine keys its FIFO barrier
+sequences on (group, channel), so the k-th send always meets the k-th recv
+*of its own channel* — without this, a grad send could silently pair with
+a forward send under 1F1B's interleaved orders.
+
+Cross-replica graph sharing
+---------------------------
+Replicas of a stage differ only in their p2p partner ranks.  With
+``share_replica_graphs`` (the default when replicas > 1) each stage is
+built ONCE and shared by all its replicas: p2p nodes carry relative stage
+addressing (``p2p_src_stage``/``p2p_dst_stage`` + the program-level
+``p2p_replicas`` meta) that ``simulate_mpmd`` expands into per-replica
+barrier instances — so an R-replica pipeline costs ``num_stages`` compiled
+graphs and (when symmetric) ``num_stages`` event-loop rows instead of
+``num_stages * R``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import chakra
+
+SCHEDULES = ("gpipe", "1f1b", "interleaved")
+
+#: node attrs scaled by 1/num_microbatches when a node is replicated into
+#: per-microbatch task copies (total work conservation)
+_SCALED_ATTRS = ("flops", "bytes", "in_bytes", "out_bytes", "comm_bytes")
+
+
+class PipelineConfigError(ValueError):
+    """Invalid pipeline-schedule knob values (bad ``num_microbatches`` /
+    ``schedule`` / ``virtual_stages``).  A ``ValueError`` so DSE sweeps
+    record it as a failed trial instead of crashing."""
+
+
+def validate_pipeline_schedule(num_stages, num_microbatches=None,
+                               schedule=None, virtual_stages=None
+                               ) -> Tuple[int, str, int]:
+    """Validate and normalize the schedule knobs; returns ``(m, schedule,
+    virtual_stages)``.
+
+    Raises ``PipelineConfigError`` (a ``ValueError``) listing the valid
+    choices for: non-integer or < 1 microbatch counts, unknown schedule
+    names, ``interleaved`` microbatch counts not divisible by the stage
+    count, and virtual-stage counts on non-interleaved schedules.  A
+    single microbatch (m=1) is scheduling-free, so every schedule is
+    accepted there and lowers to the classic one-wave split."""
+    p = int(num_stages)
+    m = 1 if num_microbatches is None else num_microbatches
+    try:
+        mi = int(m)
+    except (TypeError, ValueError):
+        mi = -1
+    if mi != m or mi < 1:
+        raise PipelineConfigError(
+            f"num_microbatches={m!r} is invalid: expected an integer >= 1")
+    m = mi
+    sched = "gpipe" if schedule is None else str(schedule).lower()
+    if sched not in SCHEDULES:
+        raise PipelineConfigError(
+            f"unknown schedule {schedule!r}: valid schedules are "
+            f"{list(SCHEDULES)}")
+    if virtual_stages is None:
+        v = 2 if (sched == "interleaved" and m > 1) else 1
+    else:
+        v = int(virtual_stages)
+        if v < 1:
+            raise PipelineConfigError(
+                f"virtual_stages={virtual_stages!r} must be an integer >= 1")
+        if v > 1 and sched != "interleaved":
+            raise PipelineConfigError(
+                f"virtual_stages={v} needs schedule='interleaved': "
+                f"{sched!r} runs one chunk per stage rank")
+    if sched == "interleaved" and m > 1 and p > 1 and m % p != 0:
+        raise PipelineConfigError(
+            f"schedule='interleaved' needs num_microbatches divisible by "
+            f"num_stages: {m} % {p} != 0 (valid counts: "
+            f"{p}, {2 * p}, {3 * p}, ...)")
+    return m, sched, v
+
+
+def schedule_tasks(schedule: str, p: int, s: int, m: int,
+                   v: int = 1) -> List[Tuple[str, int, int]]:
+    """Execution order of stage rank ``s``'s tasks as ``(phase, chunk, j)``
+    triples, phase in {"F", "B"}, chunk the virtual-stage index on this
+    rank (virtual stage ``chunk * p + s``), ``j`` the microbatch.
+
+    * ``gpipe``: all m forwards, then all m backwards.
+    * ``1f1b``: ``min(m, p - s)`` warmup forwards, then strictly
+      alternating B(j)/F(·) (backwards in ascending j), then cooldown
+      backwards — the steady state keeps at most ``p - s`` live stashes.
+    * ``interleaved``: looped GPipe over ``v`` chunks — forwards chunk-
+      ascending, backwards chunk-descending (matching grad flow), each
+      j-ascending so per-channel FIFO order is schedule-independent.
+    """
+    if schedule == "interleaved":
+        tasks = [("F", c, j) for c in range(v) for j in range(m)]
+        tasks += [("B", c, j) for c in range(v - 1, -1, -1)
+                  for j in range(m)]
+        return tasks
+    if schedule == "1f1b":
+        w = min(m, max(1, p - s))
+        tasks = [("F", 0, j) for j in range(w)]
+        nb = 0
+        for j in range(w, m):
+            tasks.append(("B", 0, nb))
+            nb += 1
+            tasks.append(("F", 0, j))
+        while nb < m:
+            tasks.append(("B", 0, nb))
+            nb += 1
+        return tasks
+    # gpipe
+    return ([("F", 0, j) for j in range(m)]
+            + [("B", 0, j) for j in range(m)])
+
+
+def analytic_bubble_fraction(p: int, m: int) -> float:
+    """The textbook GPipe/1F1B pipeline bubble fraction (p-1)/(m+p-1)."""
+    return (p - 1) / (m + p - 1) if (m + p - 1) > 0 else 0.0
+
+
+def bubble_fraction(result) -> float:
+    """Aggregate pipeline-bubble fraction of a sim result: the fraction of
+    cluster rank-seconds not spent in compute, ``1 - sum(rank compute
+    busy) / (K * makespan)``.  With zero-cost comm this equals the
+    analytic (p-1)/(m+p-1) for GPipe and 1F1B; with real comm it also
+    absorbs exposed communication (an upper bound on the pure schedule
+    bubble).  Accepts ``ClusterSimResult`` or a single-rank ``SimResult``.
+    """
+    rank_times = getattr(result, "rank_times", None)
+    step = float(result.step_time if rank_times is not None
+                 else result.total_time)
+    if step <= 0.0:
+        return 0.0
+    if rank_times is None:
+        return max(0.0, 1.0 - result.compute_time / step)
+    K = len(rank_times)
+    busy = math.fsum(result.rank_result(r).compute_time for r in range(K))
+    return max(0.0, 1.0 - busy / (K * step))
+
+
+def _fb_cut(g: chakra.Graph, nodes_k: List[int], ext: List[bool],
+            fwd_fraction: float) -> int:
+    """Forward/backward cut index of one stage segment (local topo order):
+    after the last node with a cross-segment consumer (those must replay
+    in the forward task — a backward part never feeds a later stage), then
+    extended until the forward part holds >= ``fwd_fraction`` of segment
+    flops.  Always >= 1; == len(nodes) means an empty backward part."""
+    last_ext = -1
+    total = 0.0
+    for i, u in enumerate(nodes_k):
+        total += float(g.node(u).attrs.get("flops", 0.0))
+        if ext[u]:
+            last_ext = i
+    cut = max(1, last_ext + 1)
+    cum = 0.0
+    for i, u in enumerate(nodes_k):
+        cum += float(g.node(u).attrs.get("flops", 0.0))
+        if i + 1 >= cut and cum >= fwd_fraction * total:
+            return i + 1
+    return len(nodes_k)
+
+
+def lower_microbatched(g: chakra.Graph, num_stages: int, assignment,
+                       replicas: int, num_microbatches: int, schedule: str,
+                       virtual_stages: int = 1,
+                       share_replica_graphs: Optional[bool] = None,
+                       fwd_fraction: float = 1.0 / 3.0):
+    """Lower one SPMD graph into a microbatched pipeline ``MPMDProgram``
+    (see module docstring).  Called by ``convert.split_pipeline_stages``
+    when ``num_microbatches > 1``; knob values must already be validated
+    (``validate_pipeline_schedule``)."""
+    from repro.core.convert import _stage_assignment
+    from repro.core.costmodel.mpmd import MPMDProgram
+
+    p = int(num_stages)
+    R = int(replicas)
+    m = int(num_microbatches)
+    v = int(virtual_stages)
+    P = p * v
+    n = len(g.nodes)
+    if p < 1 or R < 1:
+        raise ValueError(f"num_stages={p} / replicas={R} must be >= 1")
+    if n == 0 or P > n:
+        raise ValueError(f"cannot split a {n}-node graph into {P} "
+                         f"(num_stages * virtual_stages) segments")
+    share = (R > 1) if share_replica_graphs is None else \
+        bool(share_replica_graphs)
+    rel = share and R > 1
+
+    order = g.topo_order()
+    vstage_of = _stage_assignment(g, order, P, assignment,
+                                  allow_backward=True)
+    seg: List[List[int]] = [[] for _ in range(P)]
+    for nid in order:
+        seg[vstage_of[nid]].append(nid)
+    cons: List[List[int]] = [[] for _ in range(n)]
+    for node in g.nodes:
+        for dd in node.all_deps:
+            cons[dd].append(node.id)
+    ext = [any(vstage_of[c] != vstage_of[u] for c in cons[u])
+           for u in range(n)]
+    # only consumers in HIGHER vstages force a node into the forward part:
+    # a node consumed by a lower vstage is backward-pass structure the
+    # source graph models explicitly, and belongs in the backward part
+    ext_fwd = [any(vstage_of[c] > vstage_of[u] for c in cons[u])
+               for u in range(n)]
+
+    part_of: List[Tuple[List[int], List[int]]] = []
+    phase_of: Dict[int, str] = {}
+    for k in range(P):
+        cut = _fb_cut(g, seg[k], ext_fwd, fwd_fraction)
+        fp, bp = seg[k][:cut], seg[k][cut:]
+        part_of.append((fp, bp))
+        for u in fp:
+            phase_of[u] = "F"
+        for u in bp:
+            phase_of[u] = "B"
+    has_bwd = any(bp for _fp, bp in part_of)
+
+    # cross-rank data transfers, grouped per directed channel (src vstage,
+    # src phase, dst vstage, dst phase) in topo order of the producer —
+    # the one FIFO order both endpoints emit their p2p ops in.  The recv
+    # posts in the dst vstage's earliest consuming phase (F before B on
+    # every schedule, so "F wins"); later same-vstage consumers reference
+    # that one recv.  Keying on the src phase too keeps a channel's sends
+    # inside same-phase tasks, whose j-ascending order matches the recvs'.
+    xfers: Dict[Tuple[int, str, int, str], List[int]] = {}
+    for k in range(P):
+        for u in seg[k]:
+            if not ext[u]:
+                continue
+            dst_phase: Dict[int, str] = {}
+            for c in cons[u]:
+                kc = vstage_of[c]
+                if kc == k:
+                    continue
+                if dst_phase.get(kc) != "F":   # F consumer wins (runs first)
+                    dst_phase[kc] = phase_of[c]
+            for kc in sorted(dst_phase):
+                if kc % p == k % p:            # same rank: direct reference
+                    continue
+                xfers.setdefault((k, phase_of[u], kc, dst_phase[kc]),
+                                 []).append(u)
+
+    # synthesized backward grad channels — one per cross-rank forward
+    # vstage pair, payload = the pair's per-microbatch forward bytes —
+    # model the missing backward pass of forward-only graphs.  A graph
+    # with any backward cross-stage edge (a consumer in a LOWER vstage)
+    # models its own backward pass: synthesizing a second grad wave on
+    # top would manufacture a dependency cycle, so trust the graph.
+    has_explicit_bwd = any(a > b for (a, _sp, b, _dp) in xfers)
+    synth_grads = has_bwd and not has_explicit_bwd
+    grad_payload: Dict[Tuple[int, int], float] = {}
+    if synth_grads:
+        for (a, _sp, b, _dp), us in xfers.items():
+            grad_payload[(a, b)] = grad_payload.get((a, b), 0.0) + math.fsum(
+                float(g.node(u).attrs.get("out_bytes", 0.0)) / m for u in us)
+    fwd_pairs = sorted(grad_payload)
+
+    # per-(vstage, phase) sink nodes (no consumer inside the same part):
+    # the dependency anchor of the part's grad send
+    sinks: Dict[Tuple[int, str], List[int]] = {}
+    for k in range(P):
+        for ph, nodes_ in (("F", part_of[k][0]), ("B", part_of[k][1])):
+            sinks[(k, ph)] = [
+                u for u in nodes_
+                if not any(vstage_of[c] == k and phase_of[c] == ph
+                           for c in cons[u])]
+
+    stage_ranks = {st: list(range(st * R, (st + 1) * R)) for st in range(p)}
+    chan_keys = sorted(xfers, key=repr)
+    n_pairs = 0
+
+    def build_rank_graph(s: int, d: int) -> chakra.Graph:
+        nonlocal n_pairs
+        sg = chakra.Graph(meta={**g.meta, "pipeline_stage": s,
+                                "num_stages": p, "pipeline_replica": d,
+                                "num_microbatches": m, "schedule": schedule,
+                                "virtual_stages": v,
+                                **({"p2p_replicas": R} if rel else {})})
+        local: Dict[Tuple[int, int], int] = {}    # (orig nid, j) -> local id
+        recv_of: Dict[Tuple[int, int, int], int] = {}
+        chain: Dict[Tuple, int] = {}              # (channel, side) -> last id
+        prev_join: Optional[int] = None
+        n_sends = 0
+
+        def p2p_attrs(src_vs: int, dst_vs: int, channel: tuple,
+                      payload: float, out_b: float) -> dict:
+            return dict(comm_kind="p2p", comm_bytes=payload,
+                        out_bytes=out_b,
+                        group=[(src_vs % p) * R + d, (dst_vs % p) * R + d],
+                        group_size=2, p2p_src_stage=src_vs % p,
+                        p2p_dst_stage=dst_vs % p, p2p_channel=list(channel))
+
+        for phase, c, j in schedule_tasks(schedule, p, s, m, v):
+            k = c * p + s
+            part = part_of[k][0] if phase == "F" else part_of[k][1]
+            members: set = set()
+            grad_recvs: List[int] = []
+
+            # task-entry recvs, in the channel's canonical xfer order
+            for ck in chan_keys:
+                a, sph, b, dph = ck
+                if b != k or dph != phase:
+                    continue
+                channel = ("d",) + ck
+                for u in xfers[ck]:
+                    payload = float(
+                        g.node(u).attrs.get("out_bytes", 0.0)) / m
+                    prev_r = chain.get((channel, "r"))
+                    ctrl = [x for x in (prev_r, prev_join) if x is not None]
+                    rv = sg.add(
+                        f"recv[{g.node(u).name}@{phase.lower()}{j}<v{a}]",
+                        chakra.COMM_COLL, ctrl_deps=ctrl,
+                        **p2p_attrs(a, b, channel, payload, payload))
+                    chain[(channel, "r")] = rv
+                    recv_of[(u, k, j)] = rv
+                    members.add(rv)
+            if phase == "B" and synth_grads:
+                for a, b in fwd_pairs:
+                    if a != k:
+                        continue
+                    channel = ("g", b, a)
+                    prev_r = chain.get((channel, "r"))
+                    ctrl = [x for x in (prev_r, prev_join) if x is not None]
+                    payload = grad_payload[(a, b)]
+                    rv = sg.add(f"grad_recv[v{a}@b{j}<v{b}]",
+                                chakra.COMM_COLL, ctrl_deps=ctrl,
+                                **p2p_attrs(b, a, channel, payload, payload))
+                    chain[(channel, "r")] = rv
+                    members.add(rv)
+                    grad_recvs.append(rv)
+
+            # the part's nodes, scaled 1/m
+            for u in part:
+                node = g.node(u)
+                deps_l: List[int] = []
+                ctrl_l: List[int] = []
+                for src_list, out in ((node.deps, deps_l),
+                                      (node.ctrl_deps, ctrl_l)):
+                    for dd in src_list:
+                        kd = vstage_of[dd]
+                        try:
+                            if kd == k or kd % p == s:
+                                out.append(local[(dd, j)])
+                            else:
+                                out.append(recv_of[(dd, k, j)])
+                        except KeyError:
+                            raise ValueError(
+                                f"graph is not pipelineable under schedule="
+                                f"{schedule!r}: node {node.name!r} (vstage "
+                                f"{k}) consumes {g.node(dd).name!r} (vstage "
+                                f"{kd}) before any task of this rank "
+                                f"produced it — a dependency against the "
+                                f"stage/chunk execution order") from None
+                in_task = any(x in members for x in deps_l + ctrl_l)
+                if not in_task:
+                    # a task root: gate on the grads this stage is owed
+                    # (the drain wave) and on the schedule's task chain
+                    deps_l.extend(grad_recvs)
+                    if not grad_recvs and prev_join is not None:
+                        ctrl_l.append(prev_join)
+                attrs = dict(node.attrs)
+                for f_ in _SCALED_ATTRS:
+                    if f_ in attrs:
+                        attrs[f_] = float(attrs[f_]) / m
+                if node.type == chakra.COMM_COLL:
+                    attrs["group"] = list(stage_ranks[s])
+                    attrs["group_size"] = R
+                lid = sg.add(f"{node.name}@{phase.lower()}{j}", node.type,
+                             deps=list(dict.fromkeys(deps_l)),
+                             ctrl_deps=list(dict.fromkeys(ctrl_l)), **attrs)
+                local[(u, j)] = lid
+                members.add(lid)
+
+            # task-exit sends (eager / fire-and-forget: not joined)
+            for ck in chan_keys:
+                a, sph, b, dph = ck
+                if a != k or sph != phase:
+                    continue
+                channel = ("d",) + ck
+                for u in xfers[ck]:
+                    payload = float(
+                        g.node(u).attrs.get("out_bytes", 0.0)) / m
+                    prev_s = chain.get((channel, "s"))
+                    sn = sg.add(
+                        f"send[{g.node(u).name}@{phase.lower()}{j}>v{b}]",
+                        chakra.COMM_COLL, deps=[local[(u, j)]],
+                        ctrl_deps=[prev_s] if prev_s is not None else [],
+                        p2p_eager=True,
+                        **p2p_attrs(a, b, channel, payload, 0.0))
+                    chain[(channel, "s")] = sn
+                    n_sends += 1
+            if phase == "B" and synth_grads:
+                for a, b in fwd_pairs:
+                    if b != k:
+                        continue
+                    channel = ("g", b, a)
+                    anchor = ([local[(u, j)] for u in sinks[(k, "B")]]
+                              or grad_recvs)
+                    prev_s = chain.get((channel, "s"))
+                    ctrl = [prev_s] if prev_s is not None else []
+                    if not anchor and prev_join is not None:
+                        ctrl.append(prev_join)
+                    sn = sg.add(f"grad_send[v{k}@b{j}>v{a}]",
+                                chakra.COMM_COLL, deps=anchor,
+                                ctrl_deps=ctrl, p2p_eager=True,
+                                **p2p_attrs(b, a, channel,
+                                            grad_payload[(a, b)], 0.0))
+                    chain[(channel, "s")] = sn
+                    n_sends += 1
+
+            # the schedule join: the rank leaves this task only when all
+            # its (non-send) work and recvs have completed
+            prev_join = sg.add(
+                f"sched[s{s}:{phase}{c}.{j}]", chakra.COMP,
+                deps=sorted(members),
+                ctrl_deps=[prev_join] if prev_join is not None else [],
+                flops=0.0, bytes=0.0, out_bytes=0.0, sched_join=True)
+        if d == 0:
+            n_pairs += n_sends
+        return sg
+
+    rank_graphs: List[Optional[chakra.Graph]] = [None] * (p * R)
+    if rel:
+        for s in range(p):
+            sg = build_rank_graph(s, 0)
+            for d in range(R):
+                rank_graphs[s * R + d] = sg
+    else:
+        for d in range(R):
+            for s in range(p):
+                rank_graphs[s * R + d] = build_rank_graph(s, d)
+
+    meta = {"num_stages": p, "replicas": R,
+            "assignment": (assignment if isinstance(assignment, str)
+                           else "explicit"),
+            "stage_of": list(vstage_of), "p2p_pairs": n_pairs,
+            "source_nodes": n, "num_microbatches": m,
+            "schedule": schedule, "virtual_stages": v}
+    if rel:
+        meta["p2p_replicas"] = R
+    return MPMDProgram(rank_graphs, meta=meta)

@@ -817,7 +817,8 @@ def simulate_cluster(g: chakra.Graph, system, topo: Optional[Topology] = None,
     # same-class ranks sit in identically-colored instances, so one
     # barrier per class set is exact.
     barrier_map: List[Dict[int, list]] = [dict() for _ in range(n_classes)]
-    for nid, (kind, group, group_t) in zip(cg._coll_ids, cg._coll_meta):
+    for nid, (kind, group, group_t, _chan, _rel) in zip(cg._coll_ids,
+                                                        cg._coll_meta):
         inst_of = inst_maps[group_t]
         for j, rep in enumerate(reps):
             if nid in barrier_map[j]:

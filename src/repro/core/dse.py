@@ -114,8 +114,12 @@ _SOFTWARE_KNOBS = ("fsdp_sync", "prefetch", "bucket_bytes")
 # pipeline knobs route the trial through the MPMD cluster engine: the
 # transformed graph is split into num_stages stages (stage_assignment
 # picks the balancing policy, see convert.split_pipeline_stages) with the
-# cluster's ranks divided into num_stages * (ranks // num_stages)
-_PIPELINE_KNOBS = ("num_stages", "stage_assignment")
+# cluster's ranks divided into num_stages * (ranks // num_stages);
+# num_microbatches/schedule/virtual_stages pick the microbatched pipeline
+# schedule (gpipe / 1f1b / interleaved, costmodel.schedule) — validated up
+# front so a bad value is a diagnosable failed trial, not a crashed sweep
+_PIPELINE_KNOBS = ("num_stages", "stage_assignment", "num_microbatches",
+                   "schedule", "virtual_stages")
 _SYSTEM_KNOBS = ("topology", "collective_algo", "link_bw", "dcn_bw", "chips")
 # knobs that change the Topology object itself — a trial sweeping one of
 # these must rebuild it even when the caller passed a calibrated instance
@@ -279,8 +283,14 @@ def _simulate_cfg(g2: chakra.Graph, system, config: Dict,
     ns = config.get("num_stages")
     if ns is not None and int(ns) > 1:
         from repro.core.convert import split_pipeline_stages
+        from repro.core.costmodel.schedule import validate_pipeline_schedule
         S = int(ns)
         assign = config.get("stage_assignment") or "flops"
+        # reject bad microbatch/schedule values before any splitting so a
+        # sweep records a diagnostic failed trial instead of crashing
+        m, sched, v = validate_pipeline_schedule(
+            S, config.get("num_microbatches"), config.get("schedule"),
+            config.get("virtual_stages"))
         T = int(config.get("cluster_ranks") or topo.n_ranks)
         if S > T:
             # a 16-stage pipeline on 4 chips would be priced as 16 ranks —
@@ -291,9 +301,10 @@ def _simulate_cfg(g2: chakra.Graph, system, config: Dict,
         # floor division: T % S leftover ranks idle (documented; an uneven
         # split never inflates the modeled hardware)
         replicas = max(1, T // S)
-        key = ("pipeline", S, str(assign), replicas)
+        key = ("pipeline", S, str(assign), replicas, m, sched, v)
         prog = g2._cached(key, lambda: split_pipeline_stages(
-            g2, S, assignment=assign, replicas=replicas))
+            g2, S, assignment=assign, replicas=replicas,
+            num_microbatches=m, schedule=sched, virtual_stages=v))
         n_ranks = prog.n_ranks
         workload = prog
         res = simulate_cluster(prog, sys2, topo, n_ranks=n_ranks,

@@ -35,7 +35,8 @@ from repro.core import chakra
 from repro.core.costmodel.simulator import (ClusterSimResult, SimResult,
                                             Span)
 
-COMPONENTS = ("compute_busy", "exposed_comm", "barrier_wait", "stall")
+COMPONENTS = ("compute_busy", "exposed_comm", "barrier_wait", "bubble",
+              "stall")
 _COMM_TYPES = (chakra.COMM_COLL, chakra.COMM_SEND, chakra.COMM_RECV)
 STALL_CLASS = "(stall)"
 
@@ -89,6 +90,13 @@ class RankBlame:
     @property
     def barrier_wait(self) -> float:
         return self.components["barrier_wait"]
+
+    @property
+    def bubble(self) -> float:
+        """Wait time on p2p channels — the pipeline fill/drain bubble,
+        split out of ``barrier_wait`` (needs the graph; graph-free blames
+        keep p2p waits under ``barrier_wait``)."""
+        return self.components["bubble"]
 
     @property
     def stall(self) -> float:
@@ -176,7 +184,9 @@ def blame(spans: List[Span], makespan: float,
                 comp = _KIND_TO_COMPONENT[kind]
                 nid, stream = next(iter(active[kind].values()))
                 cls = node_class(graph, nid, stream)
-                break
+                if kind == "wait" and cls == "p2p":
+                    comp = "bubble"     # pipeline fill/drain, not a
+                break                   # collective barrier
         else:
             comp, cls = "stall", STALL_CLASS
         d, e = _two_diff(b, a)

@@ -112,6 +112,15 @@ class RankMemory:
     def identity_ok(self) -> bool:
         return self._decomp_ok and self.peak_bytes == self.engine_peak
 
+    def class_peak(self, cls: str) -> float:
+        """Max occupancy of one memory class over the timeline (0.0 for a
+        class the rank never allocates).  The per-class analogue of
+        ``peak_bytes`` — e.g. ``class_peak("activations")`` is what the
+        pipeline-schedule tests compare between GPipe (m stashed
+        microbatches) and 1F1B (at most p)."""
+        vs = self.by_class.get(cls)
+        return max(vs) if vs else 0.0
+
     def class_at(self, t: float) -> Dict[str, float]:
         """Class occupancy in force at time ``t`` (step function)."""
         i = _step_index(self.times, t)

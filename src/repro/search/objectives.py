@@ -3,9 +3,13 @@
 A search minimizes a tuple of named objectives per trial.  Objective names
 resolve against the ``SimResult`` / ``ClusterSimResult`` the cost model
 returned (``total_time``, ``exposed_comm``, ``comm_time``, ``peak_bytes``,
-``max_barrier_wait``, ...) plus ``peak_memory_proxy`` — the analytical
-per-rank liveness bound priced straight off the (transformed) graph, so the
-memory axis costs nothing even at proxy fidelities where no event loop ran.
+``max_barrier_wait``, ...) plus two derived metrics: ``peak_memory_proxy``
+— the analytical per-rank liveness bound priced straight off the
+(transformed) graph, so the memory axis costs nothing even at proxy
+fidelities where no event loop ran — and ``bubble_fraction``, the
+aggregate non-compute fraction of cluster rank-seconds
+(``costmodel.schedule.bubble_fraction``), the natural objective for the
+pipeline-schedule knobs (``num_microbatches`` / ``schedule``).
 
 Objective *sense*: everything is minimized except the names in
 ``MAXIMIZE_OBJECTIVES`` (goodput-style metrics from the fault subsystem,
@@ -44,7 +48,7 @@ OBJECTIVE_ALIASES = {"peak_memory_bytes": "peak_bytes"}
 KNOWN_OBJECTIVES = frozenset({
     "total_time", "step_time", "compute_time", "comm_time",
     "exposed_comm", "peak_bytes", "peak_memory_bytes",
-    "peak_memory_proxy", "max_barrier_wait",
+    "peak_memory_proxy", "max_barrier_wait", "bubble_fraction",
     "expected_goodput", "goodput", "worst_goodput", "goodput_std",
     "p99_step_time_under_faults", "makespan_inflation",
 })
@@ -88,6 +92,12 @@ def trial_objectives(result, names: Sequence[str], graph=None) -> Dict:
                                  "transformed trial graph")
             from repro.core.costmodel.simulator import peak_memory_proxy
             out[name] = float(peak_memory_proxy(graph))
+        elif name == "bubble_fraction":
+            # aggregate non-compute fraction of rank-seconds (the pipeline
+            # fill/drain bubble + exposed comm) — pairs with the
+            # num_microbatches / schedule DSE knobs
+            from repro.core.costmodel.schedule import bubble_fraction
+            out[name] = float(bubble_fraction(result))
         else:
             try:
                 out[name] = float(getattr(result,

@@ -105,13 +105,16 @@ def _exposed_counters(rank: int, spans: List[Span],
 def _p2p_flow_events(channels: Dict[Tuple[int, ...], Dict[str, List]],
                      scale: float) -> List[Dict]:
     """Flow ("s"/"f") events binding each matched p2p send slice to its
-    recv slice.  Channels key on the pair's rank group; within a channel
-    the k-th send pairs with the k-th recv in commit order — the FIFO
-    discipline ``convert.split_pipeline_stages`` enforces with ctrl-edge
-    chains and the MPMD engine's (group, occurrence) barrier keying."""
+    recv slice.  Channels key on the pair's rank group plus the nodes'
+    ``p2p_channel`` id (microbatched pipelines run several logical
+    channels — forward activations, gradients, virtual-stage chunks —
+    over one rank pair); within a channel the k-th send pairs with the
+    k-th recv in commit order — the FIFO discipline
+    ``convert.split_pipeline_stages`` enforces with ctrl-edge chains and
+    the MPMD engine's (group, channel, occurrence) barrier keying."""
     events: List[Dict] = []
     fid = 0
-    for key in sorted(channels):
+    for key in sorted(channels, key=repr):
         ch = channels[key]
         for send, recv in zip(ch.get("send", []), ch.get("recv", [])):
             srank, ss = send
@@ -169,9 +172,20 @@ def to_chrome_trace(result, graph: Optional[chakra.Graph] = None,
                     args["comm_bytes"] = cb
                 if n.attrs.get("comm_kind") == "p2p":
                     pg = tuple(n.attrs.get("group") or ())
+                    # graph-sharing replicas (schedule.lower_microbatched):
+                    # the group attr is replica 0's literal pair — resolve
+                    # this rank's pair from the relative stage addressing
+                    rel_R = int(g_r.meta.get("p2p_replicas") or 0)
+                    if rel_R > 1 and "p2p_src_stage" in n.attrs:
+                        d = rank % rel_R
+                        pg = (int(n.attrs["p2p_src_stage"]) * rel_R + d,
+                              int(n.attrs["p2p_dst_stage"]) * rel_R + d)
                     if len(pg) == 2 and rank in pg:
                         side = "send" if rank == pg[0] else "recv"
-                        channels.setdefault(pg, {}) \
+                        ch = n.attrs.get("p2p_channel")
+                        key = pg + (tuple(ch) if isinstance(
+                            ch, (list, tuple)) else (ch,))
+                        channels.setdefault(key, {}) \
                             .setdefault(side, []).append((rank, s))
             events.append({"ph": "X", "pid": rank, "tid": _TID[s.stream],
                            "ts": s.start * scale,

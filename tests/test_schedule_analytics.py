@@ -1,0 +1,151 @@
+"""Analytic conformance of the microbatched pipeline lowering (ISSUE 10).
+
+The textbook pipeline-bubble fraction for GPipe and 1F1B on a p-stage,
+m-microbatch pipeline with balanced stages and negligible comm is
+(p - 1) / (m + p - 1).  These tests drive balanced explicit
+forward/backward chain workloads (one f and one b node per stage, uniform
+cost, near-zero payloads) through ``split_pipeline_stages`` and the MPMD
+engine, and assert the *simulated* bubble lands within 10% of the analytic
+value across a (p, m) grid — the schedule semantics are emergent from the
+lowering + engine, not hard-coded.
+
+The memory side checks the schedules' signature footprints on the PR-9
+occupancy timeline: GPipe stashes all m per-microbatch activations on the
+first stage before the backward wave drains them, while 1F1B's
+alternation caps the stash near p — so 1F1B's activation peak must sit
+well below GPipe's whenever m > p, while the bit-exact decomposition
+identities (class sums == total, curve max == engine peak, blame sums ==
+makespan with a ``bubble`` component) keep holding.
+"""
+import pytest
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.convert import split_pipeline_stages
+from repro.core.costmodel import build_topology, simulate_cluster
+from repro.core.costmodel.schedule import (analytic_bubble_fraction,
+                                           bubble_fraction)
+from repro.obs.explain import COMPONENTS, explain
+from repro.obs.memory import memory_timeline
+
+SYS = SystemConfig(chips=16)
+TOPO = build_topology(SYS)
+
+
+def fb_chain(p, f_flops=1e12, b_flops=2e12, payload=8.0):
+    """Balanced explicit f/b chain: one forward and one backward node per
+    stage (uniform cost), backward edges b_{s+1} -> b_s, explicit stage
+    map — the workload shape the analytic bubble formula assumes."""
+    g = chakra.Graph()
+    f = []
+    for s in range(p):
+        deps = [f[-1]] if f else []
+        f.append(g.add(f"f{s}", chakra.COMP, deps=deps,
+                       flops=f_flops, out_bytes=payload))
+    b_prev = None
+    for s in reversed(range(p)):
+        deps = [f[s]] + ([b_prev] if b_prev is not None else [])
+        b_prev = g.add(f"b{s}", chakra.COMP, deps=deps,
+                       flops=b_flops, out_bytes=payload)
+    assign = list(range(p)) + list(reversed(range(p)))
+    return g, assign
+
+
+def run(p, m, schedule, payload=8.0, keep_timeline=False):
+    g, assign = fb_chain(p, payload=payload)
+    prog = split_pipeline_stages(g, p, assignment=assign,
+                                 num_microbatches=m, schedule=schedule)
+    res = simulate_cluster(prog, SYS, topo=TOPO,
+                           keep_timeline=keep_timeline)
+    return prog, res
+
+
+GRID = [(2, 2), (2, 4), (2, 8), (4, 4), (4, 8), (4, 16)]
+
+
+@pytest.mark.parametrize("schedule", ["gpipe", "1f1b"])
+@pytest.mark.parametrize("p,m", GRID)
+def test_bubble_within_10pct_of_analytic(schedule, p, m):
+    _prog, res = run(p, m, schedule)
+    sim = bubble_fraction(res)
+    ana = analytic_bubble_fraction(p, m)
+    assert abs(sim - ana) <= 0.10 * ana + 1e-3, \
+        f"{schedule} p={p} m={m}: simulated bubble {sim:.4f} vs " \
+        f"analytic {ana:.4f}"
+
+
+def test_bubble_shrinks_with_m():
+    # the whole point of microbatching: fixed p, growing m -> smaller bubble
+    fracs = [bubble_fraction(run(4, m, "gpipe")[1]) for m in (2, 4, 8, 16)]
+    assert all(a > b for a, b in zip(fracs, fracs[1:])), fracs
+    assert fracs[-1] < 0.2 < fracs[0]
+
+
+def test_1f1b_matches_gpipe_makespan_on_balanced_chain():
+    # same total work, same fill/drain structure: the two schedules differ
+    # in memory, not speed, on a balanced chain
+    for p, m in GRID:
+        tg = run(p, m, "gpipe")[1].step_time
+        t1 = run(p, m, "1f1b")[1].step_time
+        assert t1 <= tg * 1.05, (p, m, tg, t1)
+
+
+# ------------------------------------------------------------------- memory
+
+def test_1f1b_peak_activation_below_gpipe():
+    p, m = 4, 16                       # m > p: the regime 1F1B exists for
+    peaks = {}
+    for sched in ("gpipe", "1f1b"):
+        prog, res = run(p, m, sched, payload=1e6, keep_timeline=True)
+        mt = memory_timeline(res, graph=prog)
+        assert mt.identity_ok()        # bit-exact decomposition still sums
+        peaks[sched] = mt.ranks[0].class_peak("activations")
+    assert 0 < peaks["1f1b"] < peaks["gpipe"]
+    # GPipe stashes ~m per-microbatch activations, 1F1B ~p: the ratio
+    # should reflect m/p = 4 with generous slack for boundary effects
+    assert peaks["gpipe"] / peaks["1f1b"] > 0.5 * (m / p)
+
+
+def test_gpipe_stash_scales_with_m():
+    p = 4
+    prev = None
+    for m in (4, 8, 16):
+        prog, res = run(p, m, "gpipe", payload=1e6, keep_timeline=True)
+        mt = memory_timeline(res, graph=prog)
+        pk = mt.ranks[0].class_peak("activations")
+        if prev is not None:
+            # per-mb size halves when m doubles but the stash count
+            # doubles -> GPipe's first-stage activation peak stays ~flat,
+            # while 1F1B's (below) halves.  Flat within slack:
+            assert 0.7 <= pk / prev <= 1.3, (m, prev, pk)
+        prev = pk
+
+
+def test_1f1b_stash_shrinks_with_m():
+    p = 4
+    prev = None
+    for m in (4, 8, 16):
+        prog, res = run(p, m, "1f1b", payload=1e6, keep_timeline=True)
+        mt = memory_timeline(res, graph=prog)
+        pk = mt.ranks[0].class_peak("activations")
+        if prev is not None:
+            # stash capped near p, per-mb size halves -> peak ~halves
+            assert pk < prev * 0.8, (m, prev, pk)
+        prev = pk
+
+
+# -------------------------------------------------------------------- blame
+
+def test_blame_has_bubble_component_and_identities_hold():
+    assert "bubble" in COMPONENTS
+    for sched in ("gpipe", "1f1b"):
+        prog, res = run(4, 4, sched, keep_timeline=True)
+        ex = explain(res, graph=prog)
+        assert ex.identity_ok()        # per-rank components sum to makespan
+        bubble = sum(b.components["bubble"] for b in ex.ranks.values())
+        assert bubble > 0.0, f"{sched}: no p2p wait attributed to bubble"
+        # the pipeline spends a nontrivial share of rank-seconds off the
+        # compute stream; blame must see it somewhere (bubble + stall)
+        idle = sum(b.components["bubble"] + b.components["stall"]
+                   for b in ex.ranks.values())
+        assert idle / (len(ex.ranks) * ex.makespan) > 0.2

@@ -1,0 +1,261 @@
+"""Randomized pipeline-schedule property suite (ISSUE 10 satellite).
+
+Generates random pipelineable workload graphs (forward layer chains with
+fan-in, and explicit forward/backward chains) and asserts the microbatched
+lowering's core invariants over >= 50 seeded cases:
+
+  * ``num_microbatches=1`` reduces node-by-node bit-identically to the
+    legacy one-wave split for EVERY schedule name (and simulates to the
+    same step time);
+  * every schedule of the same (graph, p, m) conserves total compute work
+    exactly — the cluster-wide flops sum equals the source graph's — and
+    gpipe/1f1b (same segmentation) agree per rank;
+  * the GPipe makespan is monotone non-increasing in m on compute-dominated
+    graphs (more microbatches can only shrink the fill/drain bubble);
+  * per-channel send/recv FIFO pairing: within every (channel, side) the
+    emission order is strictly ascending in microbatch index, and the send
+    sequence on the source rank mirrors the recv sequence on the
+    destination rank exactly;
+  * ``share_replica_graphs`` is bit-identical to literal per-replica
+    graphs and really does share (num_stages graph objects, not S*R).
+"""
+import math
+import random
+import re
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:          # container without hypothesis: deterministic stub
+    import _hypothesis_stub as st
+    from _hypothesis_stub import given, settings
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.convert import split_pipeline_stages
+from repro.core.costmodel import build_topology, simulate_cluster
+from repro.core.costmodel.schedule import SCHEDULES
+
+SYS = SystemConfig(chips=16)
+TOPO = build_topology(SYS)
+
+
+# ---------------------------------------------------------------------------
+# graph generators
+# ---------------------------------------------------------------------------
+
+def layer_chain(rng, n_layers, fan_in=True, payload=1e6):
+    """Forward-only layer chain; optional side-input nodes feeding layers
+    (same-stage fan-in) keep the DAG from being a pure path."""
+    g = chakra.Graph()
+    prev = None
+    for i in range(n_layers):
+        deps = [prev] if prev is not None else []
+        if fan_in and prev is not None and rng.random() < 0.3:
+            side = g.add(f"side{i}", chakra.COMP, deps=[prev],
+                         flops=rng.uniform(1e9, 1e10),
+                         out_bytes=rng.uniform(1.0, payload))
+            deps.append(side)
+        prev = g.add(f"L{i}", chakra.COMP, deps=deps,
+                     flops=rng.uniform(1e10, 1e12),
+                     bytes=rng.uniform(0.0, 1e6),
+                     out_bytes=rng.uniform(1.0, payload))
+    return g
+
+
+def fb_chain(rng, p, payload=1e6):
+    """Explicit forward/backward chain: one f and one b node per stage,
+    backward edges b_{s+1} -> b_s, with an explicit stage map."""
+    g = chakra.Graph()
+    f = []
+    for s in range(p):
+        deps = [f[-1]] if f else []
+        f.append(g.add(f"f{s}", chakra.COMP, deps=deps,
+                       flops=rng.uniform(1e11, 1e12),
+                       out_bytes=rng.uniform(1.0, payload)))
+    b_prev = None
+    for s in reversed(range(p)):
+        deps = [f[s]] + ([b_prev] if b_prev is not None else [])
+        b_prev = g.add(f"b{s}", chakra.COMP, deps=deps,
+                       flops=rng.uniform(1e11, 2e12),
+                       out_bytes=rng.uniform(1.0, payload))
+    assign = list(range(p)) + list(reversed(range(p)))
+    return g, assign
+
+
+def valid_m(rng, sched, p):
+    """A microbatch count the schedule accepts (interleaved needs m % p == 0)."""
+    if sched == "interleaved":
+        return p * rng.randint(1, 3)
+    return rng.randint(2, 8)
+
+
+# ---------------------------------------------------------------------------
+# m == 1: every schedule is the legacy split, bit-identically
+# ---------------------------------------------------------------------------
+
+def _graph_repr(g):
+    return [(n.name, n.type, tuple(n.deps), tuple(n.ctrl_deps),
+             tuple(sorted(n.attrs.items(), key=lambda kv: kv[0])))
+            for n in g.nodes]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6))
+def test_m1_reduces_to_legacy(seed):
+    rng = random.Random(seed)
+    p = rng.choice([2, 3, 4])
+    g = layer_chain(rng, rng.randint(2 * p, 3 * p))
+    legacy = split_pipeline_stages(g, p)
+    for sched in SCHEDULES:
+        prog = split_pipeline_stages(g, p, num_microbatches=1, schedule=sched)
+        assert prog.n_ranks == legacy.n_ranks
+        for r in range(prog.n_ranks):
+            assert _graph_repr(prog.graph_for(r)) == \
+                _graph_repr(legacy.graph_for(r)), \
+                f"schedule={sched} rank={r} differs from legacy at m=1"
+        res = simulate_cluster(prog, SYS, topo=TOPO)
+        ref = simulate_cluster(legacy, SYS, topo=TOPO)
+        assert res.step_time == ref.step_time
+
+
+# ---------------------------------------------------------------------------
+# work conservation across schedules
+# ---------------------------------------------------------------------------
+
+def _rank_flops(prog):
+    return [math.fsum(float(n.attrs.get("flops", 0.0))
+                      for n in prog.graph_for(r).nodes)
+            for r in range(prog.n_ranks)]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6))
+def test_schedules_conserve_total_work(seed):
+    rng = random.Random(seed)
+    p = rng.choice([2, 4])
+    g = layer_chain(rng, rng.randint(2 * p, 4 * p))
+    src = math.fsum(float(n.attrs.get("flops", 0.0)) for n in g.nodes)
+    per_rank = {}
+    for sched in SCHEDULES:
+        m = valid_m(rng, sched, p)
+        prog = split_pipeline_stages(g, p, num_microbatches=m, schedule=sched)
+        rf = _rank_flops(prog)
+        total = math.fsum(rf)
+        assert abs(total - src) <= 1e-6 * src, \
+            f"schedule={sched} m={m}: total work {total} != source {src}"
+        per_rank[sched] = rf
+    # gpipe and 1f1b share the segmentation: identical per-rank totals too
+    for a, b in zip(per_rank["gpipe"], per_rank["1f1b"]):
+        assert abs(a - b) <= 1e-6 * max(a, b, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# GPipe makespan monotone non-increasing in m
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6))
+def test_gpipe_makespan_monotone_in_m(seed):
+    rng = random.Random(seed)
+    p = rng.choice([2, 4])
+    # compute-dominated: tiny payloads so per-message overhead can't mask
+    # the shrinking bubble
+    g = layer_chain(rng, rng.randint(2 * p, 3 * p), payload=8.0)
+    prev = None
+    for m in (1, 2, 4, 8):
+        prog = split_pipeline_stages(g, p, num_microbatches=m,
+                                     schedule="gpipe")
+        t = simulate_cluster(prog, SYS, topo=TOPO).step_time
+        if prev is not None:
+            assert t <= prev * (1 + 1e-9), \
+                f"gpipe makespan rose from {prev} (m/2) to {t} (m={m})"
+        prev = t
+
+
+# ---------------------------------------------------------------------------
+# per-channel send/recv FIFO pairing
+# ---------------------------------------------------------------------------
+
+_MB = re.compile(r"@[fb](\d+)[<>]")
+
+
+def _channel_sides(prog):
+    """{(channel, src, dst): {"send": [j...], "recv": [j...]}} with the j
+    sequences in each graph's emission (program) order."""
+    out = {}
+    seen = set()
+    for r in range(prog.n_ranks):
+        g_r = prog.graph_for(r)
+        if id(g_r) in seen:            # shared graphs: count once
+            continue
+        seen.add(id(g_r))
+        for n in g_r.nodes:
+            if n.attrs.get("comm_kind") != "p2p":
+                continue
+            src, dst = n.attrs["group"]
+            key = (tuple(n.attrs["p2p_channel"]), src, dst)
+            side = "send" if "send" in n.name else "recv"
+            j = int(_MB.search(n.name).group(1))
+            out.setdefault(key, {"send": [], "recv": []})[side].append(j)
+    return out
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6))
+def test_fifo_pairing_per_channel(seed):
+    rng = random.Random(seed)
+    p = rng.choice([2, 3, 4])
+    sched = rng.choice(SCHEDULES)
+    m = valid_m(rng, sched, p)
+    if rng.random() < 0.5:
+        g = layer_chain(rng, rng.randint(2 * p, 4 * p))
+        prog = split_pipeline_stages(g, p, num_microbatches=m,
+                                     schedule=sched)
+    else:                              # explicit-backward graphs too
+        g, assign = fb_chain(rng, p)
+        v = 2 if sched == "interleaved" else 1
+        if v > 1:                      # explicit map must cover p*v vstages
+            return
+        prog = split_pipeline_stages(g, p, assignment=assign,
+                                     num_microbatches=m, schedule=sched)
+    chans = _channel_sides(prog)
+    assert chans, "lowering emitted no p2p channels"
+    for (chan, src, dst), sides in chans.items():
+        sends, recvs = sides["send"], sides["recv"]
+        assert len(sends) == len(recvs) == m, \
+            f"channel {chan} {src}->{dst}: {len(sends)} sends vs " \
+            f"{len(recvs)} recvs (expected {m})"
+        assert sends == sorted(sends) and len(set(sends)) == m, \
+            f"channel {chan}: send order {sends} not strictly j-ascending"
+        assert sends == recvs, \
+            f"channel {chan}: send js {sends} != recv js {recvs}"
+
+
+# ---------------------------------------------------------------------------
+# cross-replica graph sharing
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6))
+def test_shared_replica_graphs_bit_identical(seed):
+    rng = random.Random(seed)
+    p = rng.choice([2, 4])
+    R = rng.choice([2, 4])
+    sched = rng.choice(["gpipe", "1f1b"])
+    m = valid_m(rng, sched, p)
+    g = layer_chain(rng, rng.randint(2 * p, 3 * p))
+    shared = split_pipeline_stages(g, p, replicas=R, num_microbatches=m,
+                                   schedule=sched, share_replica_graphs=True)
+    literal = split_pipeline_stages(g, p, replicas=R, num_microbatches=m,
+                                    schedule=sched,
+                                    share_replica_graphs=False)
+    # sharing is real: p graph objects, not p * R
+    assert len({id(shared.graph_for(r)) for r in range(shared.n_ranks)}) == p
+    assert len({id(literal.graph_for(r))
+                for r in range(literal.n_ranks)}) == p * R
+    rs = simulate_cluster(shared, SYS, topo=TOPO, memoize=False)
+    rl = simulate_cluster(literal, SYS, topo=TOPO, memoize=False)
+    assert rs.step_time == rl.step_time
+    for r in range(rs.n_ranks):
+        assert rs.rank_result(r).total_time == rl.rank_result(r).total_time

@@ -1,0 +1,117 @@
+"""Up-front validation of the pipeline-schedule knobs (ISSUE 10 bugfix).
+
+A bad ``num_microbatches`` / ``schedule`` / ``virtual_stages`` must fail
+*fast* with a diagnostic listing the valid choices — and because
+``PipelineConfigError`` is a ``ValueError``, a sweep records it as a
+failed trial instead of crashing the whole search.
+"""
+import pytest
+
+from repro.configs.base import SystemConfig
+from repro.core import chakra
+from repro.core.convert import split_pipeline_stages
+from repro.core.costmodel.schedule import (SCHEDULES, PipelineConfigError,
+                                           validate_pipeline_schedule)
+
+
+def chain(n=8):
+    g = chakra.Graph()
+    prev = None
+    for i in range(n):
+        prev = g.add(f"L{i}", chakra.COMP,
+                     deps=[prev] if prev is not None else [],
+                     flops=1e11, out_bytes=1e4)
+    return g
+
+
+# ------------------------------------------------------- direct validation
+
+def test_error_is_a_value_error():
+    assert issubclass(PipelineConfigError, ValueError)
+
+
+def test_normalization_defaults():
+    assert validate_pipeline_schedule(4) == (1, "gpipe", 1)
+    assert validate_pipeline_schedule(4, 8, "1F1B") == (8, "1f1b", 1)
+    # interleaved defaults to 2 chunks per rank once there is scheduling
+    assert validate_pipeline_schedule(4, 8, "interleaved") == \
+        (8, "interleaved", 2)
+    assert validate_pipeline_schedule(4, 1, "interleaved") == \
+        (1, "interleaved", 1)
+
+
+@pytest.mark.parametrize("bad_m", [0, -1, 2.5, "four"])
+def test_bad_microbatch_count(bad_m):
+    with pytest.raises(PipelineConfigError, match="integer >= 1"):
+        validate_pipeline_schedule(4, bad_m)
+
+
+def test_unknown_schedule_lists_choices():
+    with pytest.raises(PipelineConfigError) as ei:
+        validate_pipeline_schedule(4, 4, "pipedream")
+    msg = str(ei.value)
+    assert "pipedream" in msg
+    for s in SCHEDULES:
+        assert s in msg
+
+
+def test_interleaved_divisibility():
+    with pytest.raises(PipelineConfigError, match="divisible"):
+        validate_pipeline_schedule(4, 6, "interleaved")
+    # the diagnostic suggests valid counts
+    with pytest.raises(PipelineConfigError, match="4, 8, 12"):
+        validate_pipeline_schedule(4, 6, "interleaved")
+    validate_pipeline_schedule(4, 8, "interleaved")      # ok
+
+
+def test_virtual_stages_needs_interleaved():
+    with pytest.raises(PipelineConfigError, match="interleaved"):
+        validate_pipeline_schedule(4, 4, "gpipe", virtual_stages=2)
+    with pytest.raises(PipelineConfigError, match=">= 1"):
+        validate_pipeline_schedule(4, 4, "interleaved", virtual_stages=0)
+
+
+def test_m1_accepts_every_schedule():
+    for s in SCHEDULES:
+        m, sched, v = validate_pipeline_schedule(4, 1, s)
+        assert m == 1 and sched == s
+
+
+# ------------------------------------------------- split rejects up front
+
+def test_split_validates_before_lowering():
+    g = chain()
+    with pytest.raises(PipelineConfigError, match="integer >= 1"):
+        split_pipeline_stages(g, 4, num_microbatches=0)
+    with pytest.raises(PipelineConfigError, match="valid schedules"):
+        split_pipeline_stages(g, 4, num_microbatches=4, schedule="nope")
+    with pytest.raises(PipelineConfigError, match="divisible"):
+        split_pipeline_stages(g, 4, num_microbatches=6,
+                              schedule="interleaved")
+
+
+# ------------------------------------------- sweeps record failed trials
+
+def test_search_records_bad_knobs_as_failed_trials():
+    from repro.search.run import SearchRun
+    from repro.search.space import Dim, SearchSpace
+
+    space = SearchSpace([
+        Dim.finite("num_stages", [4]),
+        Dim.finite("num_microbatches", [0, 4]),
+        Dim.finite("schedule", ["gpipe", "nonsense"]),
+    ])
+    run = SearchRun(lambda cfg: chain(), SystemConfig(chips=8), space,
+                    strategy="grid",
+                    objectives=("total_time", "bubble_fraction"), budget=8)
+    res = run.run()
+    by_cfg = {(t.config["num_microbatches"], t.config["schedule"]): t
+              for t in res.trials}
+    assert len(by_cfg) == 4            # the sweep survived every bad combo
+    ok = by_cfg[(4, "gpipe")]
+    assert ok.ok and ok.objectives["bubble_fraction"] >= 0.0
+    bad_m = by_cfg[(0, "gpipe")]
+    assert not bad_m.ok and "num_microbatches=0" in bad_m.error
+    bad_s = by_cfg[(4, "nonsense")]
+    assert not bad_s.ok and "nonsense" in bad_s.error
+    assert "gpipe" in bad_s.error      # diagnostic lists valid schedules
